@@ -1,0 +1,112 @@
+"""Paper Figure 3: commit performance vs commit frequency, SSD vs PMEM.
+
+Indexes a wikimedium-style synthetic corpus, committing every
+{100, 1000, 10000} docs, with the index directory on:
+
+  fs-ssd    — ext4/SSD           (paper's 'Regular')
+  fs-pmem   — ext4-DAX/pmem      (paper's 'PMEM')
+  byte-pmem — load/store pmem    (paper's §4 future work, beyond-paper)
+
+Reported per configuration:
+  * modeled commit seconds (calibrated device constants — the paper's own
+    methodology: it could not measure real 3D-XPoint either),
+  * real wall-clock seconds of this process's actual persistence work
+    (serialize+fsync vs memmap stores — the *mechanism* difference).
+
+The paper's claim to reproduce: PMEM improves commit time 20-30%, more at
+high commit frequency (small writes are latency-bound).
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+from typing import Dict, List
+
+from repro.core import SearchEngine
+from repro.data.corpus import CorpusConfig, synthetic_corpus
+
+N_DOCS = 3000
+FREQS = [100, 1000, 3000]  # docs per commit (3000 = single commit)
+
+
+def run_one(kind: str, docs_per_commit: int, n_docs: int = N_DOCS) -> Dict:
+    path = tempfile.mkdtemp(prefix="commit-bench-")
+    try:
+        eng = SearchEngine(kind, path)
+        corpus = synthetic_corpus(CorpusConfig(n_docs=n_docs, seed=11))
+        n_commits = 0
+        for i, (fields, dv) in enumerate(corpus):
+            eng.add(fields, dv)
+            if (i + 1) % docs_per_commit == 0:
+                eng.commit()
+                n_commits += 1
+        if n_docs % docs_per_commit:
+            eng.commit()
+            n_commits += 1
+        clk = eng.directory.clock
+        return {
+            "dir": kind,
+            "docs_per_commit": docs_per_commit,
+            "n_commits": n_commits,
+            "modeled_commit_s": clk.modeled.get("commit", 0.0),
+            "modeled_flush_s": clk.modeled.get("flush_write", 0.0),
+            "real_commit_s": clk.real.get("commit", 0.0),
+            "real_flush_s": clk.real.get("flush_write", 0.0),
+        }
+    finally:
+        shutil.rmtree(path, ignore_errors=True)
+
+
+def run() -> List[Dict]:
+    rows = []
+    for freq in FREQS:
+        per = {}
+        for kind in ("fs-ssd", "fs-pmem", "byte-pmem"):
+            per[kind] = run_one(kind, freq)
+            rows.append(per[kind])
+        # the paper's measured 'commit time' is the full persistence path:
+        # serialize + write() into the page cache + fsync.  The first two are
+        # device-independent, which is why its PMEM gain is 20-30%, not the
+        # ~80% the fsync alone would suggest.
+        def total(k):
+            return per[k]["modeled_commit_s"] + per[k]["modeled_flush_s"]
+
+        rows.append(
+            {
+                "dir": "derived",
+                "docs_per_commit": freq,
+                "pmem_gain_pct": 100 * (1 - total("fs-pmem") / total("fs-ssd")),
+                "byte_gain_pct": 100 * (1 - total("byte-pmem") / total("fs-ssd")),
+                "fsync_only_pmem_gain_pct": 100
+                * (1 - per["fs-pmem"]["modeled_commit_s"]
+                   / per["fs-ssd"]["modeled_commit_s"]),
+            }
+        )
+    return rows
+
+
+def main(csv=True):
+    rows = run()
+    out = []
+    for r in rows:
+        if r["dir"] == "derived":
+            out.append(
+                f"commit_fig3_gain,docs/commit={r['docs_per_commit']},"
+                f"pmem_gain={r['pmem_gain_pct']:.1f}%,"
+                f"byte_gain={r['byte_gain_pct']:.1f}%"
+                f",fsync_only_gain={r['fsync_only_pmem_gain_pct']:.1f}%"
+            )
+        else:
+            us = r["modeled_commit_s"] / max(r["n_commits"], 1) * 1e6
+            out.append(
+                f"commit_fig3,{r['dir']}@{r['docs_per_commit']}dpc,"
+                f"{us:.0f},modeled_us_per_commit"
+                f";real_total={r['real_commit_s']*1e3:.1f}ms"
+            )
+    return out
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

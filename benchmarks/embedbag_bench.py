@@ -1,0 +1,46 @@
+"""EmbeddingBag substrate benchmark (the recsys hot path).
+
+JAX has no native EmbeddingBag; ours is take+segment_sum.  Measures CPU
+wall-clock scaling over batch and bag size and reports the TPU roofline
+(pure gather bandwidth: rows * dim * 4B / 819GB/s).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.recsys import embedding_bag
+
+BW = 819e9
+
+
+def main() -> List[str]:
+    rng = np.random.default_rng(0)
+    out = []
+    table = jnp.asarray(rng.standard_normal((1 << 20, 64)).astype(np.float32))
+    fn = jax.jit(embedding_bag)
+    for b, bag in ((1024, 8), (8192, 8), (8192, 32)):
+        n = b * bag
+        idx = jnp.asarray(rng.integers(0, 1 << 20, n).astype(np.int32))
+        offs = jnp.asarray(np.arange(0, n + 1, bag).astype(np.int32))
+        fn(table, idx, offs)  # warm
+        t0 = time.perf_counter()
+        for _ in range(5):
+            jax.block_until_ready(fn(table, idx, offs))
+        t = (time.perf_counter() - t0) / 5
+        bytes_touched = n * 64 * 4 + b * 64 * 4
+        out.append(
+            f"embedding_bag,B={b}xbag={bag},{t*1e6:.0f},us_cpu"
+            f";tpu_roofline_us={bytes_touched/BW*1e6:.2f}"
+        )
+    return out
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -1,0 +1,77 @@
+"""Render EXPERIMENTS.md tables from dry-run JSON records.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report --dir dryrun_baseline
+"""
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def load(d):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def dryrun_table(recs):
+    lines = [
+        "| arch | shape | mesh | compile s | GiB/dev (tpu-est) | fits | HLO GFLOPs/dev | collective GB/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        mesh = "x".join(str(x) for x in r["mesh"])
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} | {r['compile_s']:.1f} "
+            f"| {fmt_bytes(r['memory']['per_device_bytes_tpu_est'])} "
+            f"| {'Y' if r['memory']['fits_hbm_tpu_est'] else 'N'} "
+            f"| {r['cost']['flops_per_device']/1e9:.1f} "
+            f"| {r['collectives']['total_bytes_per_device']/1e9:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_table(recs, mesh_filter="pod1"):
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant "
+        "| model GFLOP | useful ratio | MFU@roofline |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if mesh_filter == "pod1" and len(r["mesh"]) != 2:
+            continue
+        if mesh_filter == "pod2" and len(r["mesh"]) != 3:
+            continue
+        rl = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {rl['compute_s']:.4f} | {rl['memory_s']:.4f} "
+            f"| {rl['collective_s']:.4f} | **{rl['dominant']}** "
+            f"| {rl['model_flops']/1e9:.0f} "
+            f"| {rl['useful_flop_ratio']:.3f} | {rl['mfu_at_roofline']:.4f} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="dryrun_baseline")
+    ap.add_argument("--table", choices=["dryrun", "roofline"], default="roofline")
+    ap.add_argument("--mesh", default="pod1")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if args.table == "dryrun":
+        print(dryrun_table(recs))
+    else:
+        print(roofline_table(recs, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark orchestrator — one module per paper figure.
+
+  commit_bench  — Fig 3: commit time vs commit frequency (SSD/PMEM/byte)
+  search_bench  — Fig 5: per-family search QPS, hot vs cold page cache
+  nrt_bench     — Fig 4: NRT QPS + reopen time vs commit frequency
+  kernel_bench  — Pallas kernel microbench + analytic TPU roofline
+  embedbag_bench— EmbeddingBag substrate op scaling
+
+Prints ``name,param,us_per_call,derived`` CSV lines.
+Run: PYTHONPATH=src python -m benchmarks.run [--only commit|search|nrt|kernel|embed]
+"""
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import commit_bench, kernel_bench, nrt_bench, search_bench
+    from benchmarks import embedbag_bench
+
+    suites = {
+        "commit": commit_bench.main,
+        "search": search_bench.main,
+        "nrt": nrt_bench.main,
+        "kernel": kernel_bench.main,
+        "embed": embedbag_bench.main,
+    }
+    if args.only:
+        suites = {args.only: suites[args.only]}
+
+    print("name,param,us_per_call,derived")
+    for name, fn in suites.items():
+        t0 = time.time()
+        try:
+            for line in fn():
+                print(line, flush=True)
+        except Exception as e:  # a failing suite must not hide the others
+            print(f"{name},ERROR,0,{type(e).__name__}:{e}", flush=True)
+            raise
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

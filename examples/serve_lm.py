@@ -1,0 +1,51 @@
+"""Batched LM serving over the KV-segment store.
+
+    PYTHONPATH=src python examples/serve_lm.py
+
+Requests with shared prompt prefixes share sealed KV blocks (Lucene's
+immutable-segment model applied to inference state); sealed blocks are
+flushed to the byte-addressable tier and reloaded on demand.
+"""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import LMConfig, init_lm_params
+from repro.serve import ServeEngine
+from repro.serve.engine import Request
+
+
+def main() -> None:
+    cfg = LMConfig(
+        "serve-demo", n_layers=4, d_model=64, n_heads=4, n_kv_heads=2,
+        head_dim=16, d_ff=128, vocab=211, q_chunk=16,
+        dtype=jnp.float32, param_dtype=jnp.float32,
+    )
+    params = init_lm_params(jax.random.PRNGKey(7), cfg)
+    heap = tempfile.mktemp(suffix=".pmem")
+    eng = ServeEngine(params, cfg, batch_slots=4, max_len=96, heap_path=heap)
+
+    rng = np.random.default_rng(0)
+    shared_prefix = rng.integers(1, cfg.vocab, 64)  # long shared system prompt
+    reqs = []
+    for i in range(8):
+        tail = rng.integers(1, cfg.vocab, 4)
+        reqs.append(
+            Request(f"req{i}", np.concatenate([shared_prefix, tail]), max_new=8)
+        )
+
+    out = eng.run(reqs)
+    print(f"served {out['requests']} requests, {out['tokens']} tokens "
+          f"in {out['decode_steps']} decode steps")
+    print(f"throughput: {out['tok_per_s']:.1f} tok/s (CPU, fp32, tiny model)")
+    print(f"KV segment stats: {out['kv_stats']}")
+    print("(shared > 0 means prefix blocks were deduplicated across requests)")
+    for r in eng.completed[:3]:
+        print(f"  {r.rid}: {r.out}")
+
+
+if __name__ == "__main__":
+    main()

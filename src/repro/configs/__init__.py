@@ -1,0 +1,39 @@
+"""Config registry: the paper's engine config + 10 assigned architectures."""
+
+from importlib import import_module
+from typing import Dict, List
+
+from repro.configs.base import ArchSpec
+
+_MODULES = {
+    "minicpm3-4b": "repro.configs.minicpm3_4b",
+    "qwen2-1.5b": "repro.configs.qwen2_1_5b",
+    "smollm-360m": "repro.configs.smollm_360m",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi3_5_moe_42b_a6_6b",
+    "nequip": "repro.configs.nequip",
+    "xdeepfm": "repro.configs.xdeepfm",
+    "bert4rec": "repro.configs.bert4rec",
+    "two-tower-retrieval": "repro.configs.two_tower_retrieval",
+    "wide-deep": "repro.configs.wide_deep",
+}
+
+
+def arch_ids() -> List[str]:
+    return list(_MODULES)
+
+
+def get_config(arch_id: str) -> ArchSpec:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    return import_module(_MODULES[arch_id]).config()
+
+
+def all_cells() -> List[tuple]:
+    """Every (arch_id, shape_name) cell — 40 total."""
+    cells = []
+    for a in arch_ids():
+        spec = get_config(a)
+        for s in spec.shapes:
+            cells.append((a, s))
+    return cells

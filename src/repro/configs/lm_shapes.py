@@ -1,0 +1,16 @@
+"""The four LM-family input shapes shared by all 5 LM architectures.
+
+``train_4k``/``prefill_32k`` lower train/prefill; ``decode_32k``/
+``long_500k`` lower ``serve_step`` (one token against a KV cache).
+long_500k decode is O(S) per token — sub-quadratic by construction — so it
+runs for all five archs (see DESIGN.md §3.2).
+"""
+
+LM_SHAPES = {
+    "train_4k": {
+        "kind": "train", "seq_len": 4096, "global_batch": 256, "n_micro": 8,
+    },
+    "prefill_32k": {"kind": "prefill", "seq_len": 32768, "global_batch": 32},
+    "decode_32k": {"kind": "decode", "seq_len": 32768, "global_batch": 128},
+    "long_500k": {"kind": "decode", "seq_len": 524288, "global_batch": 1},
+}

@@ -1,0 +1,42 @@
+"""Core: the paper's contribution — a Lucene-style segmented inverted-index
+engine whose *data plane* is JAX arrays (searchable on a TPU mesh) and whose
+*control plane* keeps Lucene's exact durability semantics:
+
+  DRAM indexing buffer --flush/NRT-reopen--> searchable immutable segment
+                       --commit-----------> durable commit point
+
+with interchangeable persistence paths (file abstraction vs byte-addressable
+load/store) per the paper's central question.
+"""
+
+from repro.core.analyzer import Analyzer, term_hash
+from repro.core.segment import Segment, build_segment, merge_segments
+from repro.core.directory import (
+    Directory,
+    FSDirectory,
+    ByteAddressableDirectory,
+    RAMDirectory,
+    SimClock,
+)
+from repro.core.writer import IndexWriter
+from repro.core.search import Searcher, TopDocs
+from repro.core.nrt import SearcherManager
+from repro.core.engine import SearchEngine
+
+__all__ = [
+    "Analyzer",
+    "term_hash",
+    "Segment",
+    "build_segment",
+    "merge_segments",
+    "Directory",
+    "FSDirectory",
+    "ByteAddressableDirectory",
+    "RAMDirectory",
+    "SimClock",
+    "IndexWriter",
+    "Searcher",
+    "TopDocs",
+    "SearcherManager",
+    "SearchEngine",
+]

@@ -1,0 +1,61 @@
+"""Analyzer: text -> token stream -> stable 63-bit term hashes.
+
+Lucene's analysis chain (Fig 1 of the paper) is tokenize -> filter -> index.
+We implement a StandardAnalyzer-alike: lowercase, split on non-alphanumerics,
+drop empty tokens.  Terms are identified by a stable FNV-1a hash of
+``field + '\\x1f' + token`` so that postings are integer-keyed (the JAX data
+plane indexes terms with ``searchsorted`` over sorted hashes).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, Iterable, List, Tuple
+
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x100000001B3
+_MASK63 = (1 << 63) - 1
+
+_TOKEN_RE = re.compile(r"[a-z0-9]+")
+
+
+def _fnv1a(data: bytes) -> int:
+    h = _FNV_OFFSET
+    for b in data:
+        h ^= b
+        h = (h * _FNV_PRIME) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def term_hash(field: str, token: str) -> int:
+    """Stable 63-bit term id for (field, token) — fits in int64."""
+    return _fnv1a((field + "\x1f" + token).encode("utf-8")) & _MASK63
+
+
+class Analyzer:
+    """StandardAnalyzer-alike producing (term_hash, position) streams."""
+
+    def __init__(self, stopwords: Iterable[str] = ()):  # lucene default: none
+        self.stopwords = frozenset(s.lower() for s in stopwords)
+
+    def tokenize(self, text: str) -> List[str]:
+        return [t for t in _TOKEN_RE.findall(text.lower()) if t not in self.stopwords]
+
+    def analyze(self, field: str, text: str) -> List[Tuple[int, int]]:
+        """Returns [(term_hash, position)] in document order."""
+        return [
+            (term_hash(field, tok), pos)
+            for pos, tok in enumerate(self.tokenize(text))
+        ]
+
+    def term_freqs(
+        self, field: str, text: str
+    ) -> Tuple[Dict[int, int], Dict[int, List[int]], int]:
+        """Returns ({term: freq}, {term: positions}, doc_len)."""
+        freqs: Dict[int, int] = {}
+        positions: Dict[int, List[int]] = {}
+        stream = self.analyze(field, text)
+        for th, pos in stream:
+            freqs[th] = freqs.get(th, 0) + 1
+            positions.setdefault(th, []).append(pos)
+        return freqs, positions, len(stream)

@@ -1,0 +1,439 @@
+"""Directory abstraction: where segments live and how durability is bought.
+
+The paper's experiment is exactly a Directory swap: the same Lucene engine,
+with index files placed on ext4/SSD vs ext4-DAX/pmem.  Its conclusion is that
+the *file abstraction itself* is the bottleneck and NVM needs a load/store
+path.  So this module ships three directories:
+
+  FSDirectory(device)          — the file path: serialize -> page cache ->
+                                 fsync at commit.  ``device`` in {SSD, PMEM}
+                                 reproduces both of the paper's conditions.
+  ByteAddressableDirectory     — the byte path (paper's future work): arrays
+                                 stored directly into a PersistentHeap with
+                                 CPU stores; commit is a single barrier.
+  RAMDirectory                 — volatile baseline (Lucene's RAMDirectory).
+
+Every directory keeps a ``SimClock`` with two ledgers:
+  * ``real``    — wall-clock seconds actually spent in this process,
+  * ``modeled`` — seconds the same ops would take on the target device,
+                  using the paper's cited latency/bandwidth constants.
+Benchmarks report both; EXPERIMENTS.md labels which is which.
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import os
+import pickle
+import time
+from abc import ABC, abstractmethod
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.segment import Segment
+from repro.storage.device_model import DeviceModel, DRAM, PMEM, SSD
+
+
+class SimClock:
+    """Two-ledger clock: real wall time and modeled device time, by category."""
+
+    def __init__(self) -> None:
+        self.real: Dict[str, float] = {}
+        self.modeled: Dict[str, float] = {}
+
+    def add_real(self, cat: str, dt: float) -> None:
+        self.real[cat] = self.real.get(cat, 0.0) + dt
+
+    def add_modeled(self, cat: str, dt: float) -> None:
+        self.modeled[cat] = self.modeled.get(cat, 0.0) + dt
+
+    def reset(self) -> None:
+        self.real.clear()
+        self.modeled.clear()
+
+    def total_real(self) -> float:
+        return sum(self.real.values())
+
+    def total_modeled(self) -> float:
+        return sum(self.modeled.values())
+
+    def snapshot(self) -> Dict[str, Dict[str, float]]:
+        return {"real": dict(self.real), "modeled": dict(self.modeled)}
+
+
+class Directory(ABC):
+    """Abstract segment store with Lucene commit-point semantics."""
+
+    def __init__(self, device: DeviceModel) -> None:
+        self.device = device
+        self.clock = SimClock()
+
+    # -- data plane ---------------------------------------------------------
+    @abstractmethod
+    def write_segment(self, seg: Segment) -> None:
+        """Persist a freshly-flushed segment (NRT: searchable, NOT durable)."""
+
+    @abstractmethod
+    def read_segment(self, name: str, base_doc: int) -> Segment:
+        ...
+
+    @abstractmethod
+    def write_live(self, name: str, live: np.ndarray) -> None:
+        """Persist an updated deletion bitmap (Lucene .liv file analogue)."""
+
+    # -- durability ---------------------------------------------------------
+    @abstractmethod
+    def commit(self, seg_names: List[str], meta: Optional[dict] = None) -> int:
+        """Make ``seg_names`` durable and write a new commit point."""
+
+    @abstractmethod
+    def latest_commit(self) -> Optional[Tuple[int, List[str], dict]]:
+        ...
+
+    # -- failure / cache simulation ------------------------------------------
+    @abstractmethod
+    def crash(self) -> None:
+        """Simulate power failure: lose everything not covered by a commit."""
+
+    def drop_caches(self) -> None:
+        """Evict page cache so subsequent reads hit the device (search bench
+        'working set exceeds memory' condition)."""
+
+    def list_segments(self) -> List[str]:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# The file path
+# ---------------------------------------------------------------------------
+
+
+def _serialize(arrays: Dict[str, np.ndarray]) -> bytes:
+    """Lucene codec analogue: flatten arrays into one on-disk blob."""
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    return buf.getvalue()
+
+
+def _deserialize(blob: bytes) -> Dict[str, np.ndarray]:
+    with np.load(io.BytesIO(blob)) as z:
+        return {k: z[k] for k in z.files}
+
+
+class FSDirectory(Directory):
+    """File-abstraction directory: the paper's measured configuration.
+
+    write_segment lands in the OS page cache (fast, volatile); commit fsyncs
+    the dirty files and writes a ``segments_N`` manifest — the commit point.
+    With ``device=SSD`` this is the paper's 'Regular' case; with
+    ``device=PMEM`` it is their ext4-DAX-on-pmem case (note the identical
+    ``fs_op_overhead_s``: the VFS tax does not go away, which is the point).
+    """
+
+    def __init__(self, path: str, device: DeviceModel = SSD) -> None:
+        super().__init__(device)
+        self.path = path
+        os.makedirs(path, exist_ok=True)
+        self._dirty: Dict[str, int] = {}  # name -> bytes pending fsync
+        self._page_cache: set = set()  # names serviceable from DRAM
+        self._committed: Dict[int, Tuple[List[str], dict]] = {}
+        self._load_commits()
+
+    # -- helpers -------------------------------------------------------------
+    def _seg_path(self, name: str) -> str:
+        return os.path.join(self.path, f"{name}.seg")
+
+    def _live_path(self, name: str) -> str:
+        return os.path.join(self.path, f"{name}.liv")
+
+    def _load_commits(self) -> None:
+        for fn in os.listdir(self.path):
+            if fn.startswith("segments_") and not fn.endswith(".tmp"):
+                gen = int(fn.split("_")[1])
+                with open(os.path.join(self.path, fn)) as f:
+                    m = json.load(f)
+                self._committed[gen] = (m["segments"], m.get("meta", {}))
+
+    # -- data plane ----------------------------------------------------------
+    def write_segment(self, seg: Segment) -> None:
+        t0 = time.perf_counter()
+        arrays = seg.arrays()
+        blob = _serialize(arrays)
+        with open(self._seg_path(seg.name), "wb") as f:
+            f.write(blob)
+        # NRT: the write went to the page cache.  Modeled cost = codec
+        # serialization (device-independent CPU work; what the byte path
+        # deletes) + one syscall per logical file at DRAM speed.
+        self.clock.add_real("flush_write", time.perf_counter() - t0)
+        from repro.storage.device_model import SERIALIZE_BW_Bps
+
+        self.clock.add_modeled(
+            "flush_write",
+            len(blob) / SERIALIZE_BW_Bps
+            + DRAM.file_write_time(n_ops=len(arrays), n_bytes=len(blob)),
+        )
+        self._dirty[seg.name] = len(blob)
+        self._page_cache.add(seg.name)
+
+    def write_live(self, name: str, live: np.ndarray) -> None:
+        t0 = time.perf_counter()
+        with open(self._live_path(name), "wb") as f:
+            f.write(live.tobytes())
+        self.clock.add_real("flush_write", time.perf_counter() - t0)
+        self.clock.add_modeled(
+            "flush_write", DRAM.file_write_time(n_ops=1, n_bytes=live.nbytes)
+        )
+        self._dirty[f"{name}.liv"] = live.nbytes
+
+    def read_segment(self, name: str, base_doc: int) -> Segment:
+        t0 = time.perf_counter()
+        with open(self._seg_path(name), "rb") as f:
+            blob = f.read()
+        arrays = _deserialize(blob)
+        lp = self._live_path(name)
+        if os.path.exists(lp):
+            with open(lp, "rb") as f:
+                arrays["live"] = np.frombuffer(f.read(), dtype=bool).copy()
+        dt = time.perf_counter() - t0
+        self.clock.add_real("read", dt)
+        if name in self._page_cache:
+            self.clock.add_modeled(
+                "read", DRAM.file_read_time(n_ops=len(arrays), n_bytes=len(blob))
+            )
+        else:  # cold: hits the device through the filesystem
+            self.clock.add_modeled(
+                "read",
+                self.device.file_read_time(n_ops=len(arrays), n_bytes=len(blob)),
+            )
+            self._page_cache.add(name)
+        return Segment.from_arrays(name, base_doc, arrays)
+
+    # -- durability ----------------------------------------------------------
+    def commit(self, seg_names: List[str], meta: Optional[dict] = None) -> int:
+        t0 = time.perf_counter()
+        dirty_bytes = 0
+        n_files = 0
+        for name, nbytes in list(self._dirty.items()):
+            base = name[:-4] if name.endswith(".liv") else name
+            if base in seg_names or name in seg_names:
+                p = (
+                    self._live_path(base)
+                    if name.endswith(".liv")
+                    else self._seg_path(name)
+                )
+                fd = os.open(p, os.O_RDONLY)
+                try:
+                    os.fsync(fd)
+                finally:
+                    os.close(fd)
+                dirty_bytes += nbytes
+                n_files += 1
+                del self._dirty[name]
+        gen = (max(self._committed) + 1) if self._committed else 0
+        manifest = {"segments": list(seg_names), "meta": meta or {}}
+        tmp = os.path.join(self.path, f"segments_{gen}.tmp")
+        dst = os.path.join(self.path, f"segments_{gen}")
+        with open(tmp, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(tmp, dst)  # atomic commit point
+        self.clock.add_real("commit", time.perf_counter() - t0)
+        # modeled: fsync of the dirty bytes on the target device + manifest
+        self.clock.add_modeled(
+            "commit",
+            self.device.fsync_time(dirty_bytes)
+            + n_files * self.device.fs_op_overhead_s
+            + self.device.fsync_time(256),
+        )
+        self._committed[gen] = (list(seg_names), meta or {})
+        return gen
+
+    def latest_commit(self) -> Optional[Tuple[int, List[str], dict]]:
+        if not self._committed:
+            return None
+        gen = max(self._committed)
+        names, meta = self._committed[gen]
+        return gen, names, meta
+
+    # -- failure -------------------------------------------------------------
+    def crash(self) -> None:
+        """Power failure: page cache is lost; un-fsynced files are torn."""
+        durable: set = set()
+        for names, _ in self._committed.values():
+            durable.update(names)
+        for fn in os.listdir(self.path):
+            if fn.endswith(".seg") and fn[:-4] not in durable:
+                os.remove(os.path.join(self.path, fn))
+            if fn.endswith(".liv") and f"{fn[:-4]}.liv" in self._dirty:
+                os.remove(os.path.join(self.path, fn))
+        self._dirty.clear()
+        self._page_cache.clear()
+
+    def drop_caches(self) -> None:
+        self._page_cache.clear()
+
+    def list_segments(self) -> List[str]:
+        return sorted(fn[:-4] for fn in os.listdir(self.path) if fn.endswith(".seg"))
+
+
+# ---------------------------------------------------------------------------
+# The byte path (paper §4 future work)
+# ---------------------------------------------------------------------------
+
+
+class ByteAddressableDirectory(Directory):
+    """Segments live in a persistent heap accessed with loads/stores.
+
+    * write_segment: one ``heap.store`` per array — no serialization, no
+      syscalls.  Data is immediately searchable (NRT) *and* will be durable
+      at the next barrier.
+    * commit: a single durability barrier + a tiny root-record update.
+      Cost no longer scales with the number of segment files — this is the
+      collapse the paper predicts for a load/store redesign.
+    * read_segment: zero-copy views into the heap.
+    """
+
+    def __init__(self, path: str, device: DeviceModel = PMEM, capacity: int = 1 << 28):
+        super().__init__(device)
+        from repro.storage.heap import PersistentHeap
+
+        self.path = path
+        os.makedirs(path, exist_ok=True)
+        self.heap = PersistentHeap(os.path.join(path, "heap.pmem"), capacity)
+        self._toc: Dict[str, Dict[str, int]] = {}  # seg -> array -> offset
+        self._root = os.path.join(path, "root.json")
+        self._committed_gen = -1
+        self._committed_toc: Dict[str, Dict[str, int]] = {}
+        self._committed_names: List[str] = []
+        self._meta: dict = {}
+        if os.path.exists(self._root):
+            with open(self._root) as f:
+                rec = json.load(f)
+            self._committed_gen = rec["gen"]
+            self._committed_toc = rec["toc"]
+            self._committed_names = rec["segments"]
+            self._meta = rec.get("meta", {})
+            self._toc = {k: dict(v) for k, v in self._committed_toc.items()}
+
+    def write_segment(self, seg: Segment) -> None:
+        t0 = time.perf_counter()
+        offs: Dict[str, int] = {}
+        nbytes = 0
+        for k, a in seg.arrays().items():
+            offs[k] = self.heap.store(a)
+            nbytes += a.nbytes
+        self._toc[seg.name] = offs
+        self.clock.add_real("flush_write", time.perf_counter() - t0)
+        self.clock.add_modeled("flush_write", self.device.byte_store_time(nbytes))
+
+    def write_live(self, name: str, live: np.ndarray) -> None:
+        t0 = time.perf_counter()
+        self._toc[name]["live"] = self.heap.store(live)
+        self.clock.add_real("flush_write", time.perf_counter() - t0)
+        self.clock.add_modeled("flush_write", self.device.byte_store_time(live.nbytes))
+
+    def read_segment(self, name: str, base_doc: int) -> Segment:
+        t0 = time.perf_counter()
+        offs = self._toc[name]
+        arrays = {k: self.heap.load(off) for k, off in offs.items()}
+        nbytes = sum(a.nbytes for a in arrays.values())
+        self.clock.add_real("read", time.perf_counter() - t0)
+        # loads straight from the device at device read bandwidth; no VFS
+        self.clock.add_modeled("read", self.device.byte_load_time(nbytes))
+        return Segment.from_arrays(name, base_doc, arrays)
+
+    def commit(self, seg_names: List[str], meta: Optional[dict] = None) -> int:
+        t0 = time.perf_counter()
+        self.heap.barrier()  # ONE barrier, independent of segment count
+        gen = self._committed_gen + 1
+        rec = {
+            "gen": gen,
+            "segments": list(seg_names),
+            "toc": {n: self._toc[n] for n in seg_names},
+            "meta": meta or {},
+        }
+        tmp = self._root + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(rec, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(tmp, self._root)
+        self.clock.add_real("commit", time.perf_counter() - t0)
+        # modeled: barrier + 8-byte root pointer store (the root json stands in
+        # for what on real pmem is an atomic root-offset update)
+        self.clock.add_modeled(
+            "commit", self.device.byte_barrier_s + self.device.byte_store_time(64)
+        )
+        self._committed_gen = gen
+        self._committed_toc = {n: dict(self._toc[n]) for n in seg_names}
+        self._committed_names = list(seg_names)
+        self._meta = meta or {}
+        return gen
+
+    def latest_commit(self) -> Optional[Tuple[int, List[str], dict]]:
+        if self._committed_gen < 0:
+            return None
+        return self._committed_gen, list(self._committed_names), dict(self._meta)
+
+    def crash(self) -> None:
+        """NVM after power loss: committed watermark survives; the rest is
+        gone.  Reload the TOC from the root record."""
+        self.heap.truncate_to_committed()
+        self._toc = {k: dict(v) for k, v in self._committed_toc.items()}
+
+    def list_segments(self) -> List[str]:
+        return sorted(self._toc)
+
+
+# ---------------------------------------------------------------------------
+# Volatile baseline
+# ---------------------------------------------------------------------------
+
+
+class RAMDirectory(Directory):
+    """Pure-DRAM directory: fastest, zero durability (Lucene RAMDirectory)."""
+
+    def __init__(self) -> None:
+        super().__init__(DRAM)
+        self._segs: Dict[str, Segment] = {}
+        self._gen = -1
+        self._names: List[str] = []
+        self._meta: dict = {}
+
+    def write_segment(self, seg: Segment) -> None:
+        t0 = time.perf_counter()
+        self._segs[seg.name] = seg
+        self.clock.add_real("flush_write", time.perf_counter() - t0)
+        self.clock.add_modeled(
+            "flush_write", DRAM.byte_store_time(seg.nbytes())
+        )
+
+    def write_live(self, name: str, live: np.ndarray) -> None:
+        self._segs[name].live = live
+
+    def read_segment(self, name: str, base_doc: int) -> Segment:
+        seg = self._segs[name]
+        seg.base_doc = base_doc
+        return seg
+
+    def commit(self, seg_names: List[str], meta: Optional[dict] = None) -> int:
+        self._gen += 1
+        self._names = list(seg_names)
+        self._meta = meta or {}
+        return self._gen
+
+    def latest_commit(self) -> Optional[Tuple[int, List[str], dict]]:
+        if self._gen < 0:
+            return None
+        return self._gen, list(self._names), dict(self._meta)
+
+    def crash(self) -> None:
+        self._segs.clear()  # DRAM: everything is gone
+        self._gen = -1
+        self._names = []
+
+    def list_segments(self) -> List[str]:
+        return sorted(self._segs)

@@ -1,0 +1,96 @@
+"""SearchEngine: the public facade (what an application embeds).
+
+Lucene is "not a complete application by itself" (paper §1) — this facade is
+the application-side API: add documents, commit, reopen, search.  It wires
+Analyzer -> IndexWriter -> Directory -> SearcherManager together and exposes
+the two knobs the paper sweeps: the directory/device choice and the commit
+frequency.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+from typing import Dict, Optional
+
+from repro.core.analyzer import Analyzer
+from repro.core.directory import (
+    ByteAddressableDirectory,
+    Directory,
+    FSDirectory,
+    RAMDirectory,
+)
+from repro.core.nrt import SearcherManager
+from repro.core.search import Searcher, TopDocs
+from repro.core.writer import IndexWriter
+from repro.storage.device_model import DEVICE_MODELS
+
+
+def make_directory(kind: str, path: Optional[str] = None) -> Directory:
+    """kind: 'ram' | 'fs-ssd' | 'fs-pmem' | 'byte-pmem' | 'byte-dram'."""
+    if kind == "ram":
+        return RAMDirectory()
+    if path is None:
+        path = tempfile.mkdtemp(prefix=f"repro-{kind}-")
+    if kind.startswith("fs-"):
+        return FSDirectory(path, DEVICE_MODELS[kind[3:]])
+    if kind.startswith("byte-"):
+        return ByteAddressableDirectory(path, DEVICE_MODELS[kind[5:]])
+    raise ValueError(f"unknown directory kind {kind!r}")
+
+
+class SearchEngine:
+    def __init__(
+        self,
+        directory: Directory | str = "ram",
+        path: Optional[str] = None,
+        analyzer: Optional[Analyzer] = None,
+        use_pallas: bool = False,
+    ) -> None:
+        if isinstance(directory, str):
+            directory = make_directory(directory, path)
+        self.directory = directory
+        self.analyzer = analyzer or Analyzer()
+        self.writer = IndexWriter(directory, self.analyzer)
+        self.manager = SearcherManager(self.writer, use_pallas=use_pallas)
+
+    # -- indexing -------------------------------------------------------------
+    def add(self, fields: Dict[str, str], doc_values: Optional[Dict] = None) -> int:
+        return self.writer.add_document(fields, doc_values)
+
+    def delete(self, field: str, token: str) -> int:
+        return self.writer.delete_by_term(field, token)
+
+    def flush(self):
+        return self.writer.flush()
+
+    def commit(self) -> int:
+        return self.writer.commit()
+
+    def reopen(self) -> float:
+        return self.manager.maybe_reopen()
+
+    # -- searching ------------------------------------------------------------
+    @property
+    def searcher(self) -> Searcher:
+        return self.manager.searcher
+
+    def search(self, query, k: int = 10) -> TopDocs:
+        return self.manager.searcher.search(query, k)
+
+    # -- failure simulation -----------------------------------------------------
+    def crash_and_recover(self) -> "SearchEngine":
+        """Simulate power failure and reopen from the last commit point."""
+        self.directory.crash()
+        eng = object.__new__(SearchEngine)
+        eng.directory = self.directory
+        eng.analyzer = self.analyzer
+        eng.writer = IndexWriter(self.directory, self.analyzer)
+        eng.manager = SearcherManager(eng.writer)
+        return eng
+
+    def stats(self) -> dict:
+        s = self.writer.stats()
+        s["clock"] = self.directory.clock.snapshot()
+        return s

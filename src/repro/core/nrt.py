@@ -1,0 +1,49 @@
+"""Near-Real-Time search: SearcherManager (paper §2.3, Fig 2b).
+
+``maybe_reopen`` is Lucene's ``reopen``: force the writer's DRAM buffer into
+a segment (flush) and swap in a fresh point-in-time Searcher that can see it
+— *without* committing.  The paper measures exactly this call's latency
+(Fig 4b) and the query throughput around it (Fig 4a).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+from repro.core.search import Searcher
+from repro.core.writer import IndexWriter
+
+
+class SearcherManager:
+    def __init__(self, writer: IndexWriter, use_pallas: bool = False) -> None:
+        self.writer = writer
+        self.use_pallas = use_pallas
+        self._gen = -1
+        self._searcher: Optional[Searcher] = None
+        self.reopen_times: list = []
+        self.maybe_reopen(force_flush=False)
+
+    @property
+    def searcher(self) -> Searcher:
+        assert self._searcher is not None
+        return self._searcher
+
+    def maybe_reopen(self, force_flush: bool = True) -> float:
+        """Reopen: flush the indexing buffer and refresh the searcher.
+
+        Returns the reopen latency in seconds (the paper's Fig 4b metric).
+        """
+        t0 = time.perf_counter()
+        if force_flush and self.writer.buffered_docs:
+            self.writer.flush()
+        if self.writer.generation != self._gen:
+            self._searcher = Searcher(
+                self.writer.segments,
+                analyzer=self.writer.analyzer,
+                use_pallas=self.use_pallas,
+            )
+            self._gen = self.writer.generation
+        dt = time.perf_counter() - t0
+        self.reopen_times.append(dt)
+        return dt

@@ -1,0 +1,497 @@
+"""Searcher: the JAX data plane over immutable segments.
+
+Query families mirror the luceneutil buckets the paper benchmarks (Fig 5):
+term, boolean AND/OR, phrase, doc-values sort, doc-values range, and
+facets (the ``BrowseMonthSSDVFacets`` family that showed the largest NVM
+gains).  Scoring is Lucene's BM25 (k1=0.9, b=0.4 defaults) with global
+collection statistics.
+
+JIT strategy: postings are padded to power-of-two buckets so segments of
+similar size share compiled executables; per-segment dense combine uses the
+segment's static ``n_docs``.  The fused score+select hot loop also exists as
+a Pallas TPU kernel (``repro.kernels.bm25_topk``) — the pure-jnp functions
+here double as its oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.analyzer import Analyzer, term_hash
+from repro.core.segment import Segment
+
+K1_DEFAULT = 0.9
+B_DEFAULT = 0.4
+
+
+# ---------------------------------------------------------------------------
+# Query types
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TermQuery:
+    field: str
+    token: str
+
+
+@dataclasses.dataclass(frozen=True)
+class BooleanQuery:
+    terms: Tuple[TermQuery, ...]
+    mode: str = "and"  # "and" | "or"
+
+
+@dataclasses.dataclass(frozen=True)
+class PhraseQuery:
+    field: str
+    tokens: Tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class RangeQuery:
+    dv_field: str
+    lo: int
+    hi: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SortQuery:
+    """Match ``term``, order by a doc-values column (descending)."""
+
+    term: TermQuery
+    dv_field: str
+
+
+@dataclasses.dataclass(frozen=True)
+class FacetQuery:
+    """Count matches per doc-values bin (BrowseMonthSSDVFacets analogue)."""
+
+    term: Optional[TermQuery]  # None = MatchAllDocs
+    dv_field: str
+    n_bins: int
+
+
+@dataclasses.dataclass
+class TopDocs:
+    total_hits: int
+    doc_ids: np.ndarray  # global ids
+    scores: np.ndarray
+    facets: Optional[np.ndarray] = None
+
+
+# ---------------------------------------------------------------------------
+# jitted scoring primitives (these are also the Pallas kernels' oracles)
+# ---------------------------------------------------------------------------
+
+
+def bm25(tf, dl, idf, avgdl, k1, b):
+    tf = tf.astype(jnp.float32)
+    dl = dl.astype(jnp.float32)
+    return idf * (tf * (k1 + 1.0)) / (tf + k1 * (1.0 - b + b * dl / avgdl))
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _term_topk(docs, freqs, doc_lens, live, idf, avgdl, k1, b, k):
+    """Single-term: top-k straight over the postings list."""
+    dl = doc_lens[docs]
+    score = bm25(freqs, dl, idf, avgdl, k1, b)
+    valid = (freqs > 0) & live[docs]
+    score = jnp.where(valid, score, -jnp.inf)
+    vals, idx = jax.lax.top_k(score, min(k, score.shape[0]))
+    return vals, docs[idx], valid.sum()
+
+
+@partial(jax.jit, static_argnames=("k", "conjunctive", "n_terms"))
+def _bool_topk(
+    docs, freqs, idfs, doc_lens, live, avgdl, k1, b, k, conjunctive, n_terms
+):
+    """Boolean over T terms: dense scatter-combine on the segment, then top-k.
+
+    docs/freqs: (T, P) padded postings (freq 0 = padding).
+    """
+    n_docs = doc_lens.shape[0]
+    dl = doc_lens[docs]
+    score = bm25(freqs, dl, idfs[:, None], avgdl, k1, b)
+    valid = freqs > 0
+    score = jnp.where(valid, score, 0.0)
+    dense = jnp.zeros(n_docs, jnp.float32).at[docs.ravel()].add(score.ravel())
+    count = (
+        jnp.zeros(n_docs, jnp.int32)
+        .at[docs.ravel()]
+        .add(valid.ravel().astype(jnp.int32))
+    )
+    ok = (count == n_terms) if conjunctive else (count > 0)
+    ok = ok & live
+    dense = jnp.where(ok, dense, -jnp.inf)
+    vals, ids = jax.lax.top_k(dense, min(k, dense.shape[0]))
+    return vals, ids, ok.sum()
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _sort_topk(docs, freqs, dv, live, k):
+    """Matches of one term ordered by a doc-values column (desc)."""
+    n_docs = dv.shape[0]
+    valid = (freqs > 0) & live[docs]
+    matched = jnp.zeros(n_docs, bool).at[docs].set(valid, mode="drop")
+    key = jnp.where(matched, dv.astype(jnp.float32), -jnp.inf)
+    vals, ids = jax.lax.top_k(key, min(k, key.shape[0]))
+    return vals, ids, matched.sum()
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _range_topk(dv, live, lo, hi, k):
+    n_docs = dv.shape[0]
+    ok = (dv >= lo) & (dv <= hi) & live
+    # constant-score; return lowest doc ids first (Lucene order)
+    key = jnp.where(ok, -jnp.arange(n_docs, dtype=jnp.float32), -jnp.inf)
+    vals, ids = jax.lax.top_k(key, min(k, key.shape[0]))
+    return jnp.where(jnp.isfinite(vals), 1.0, -jnp.inf), ids, ok.sum()
+
+
+@partial(jax.jit, static_argnames=("n_bins",))
+def _facet_counts(matched, dv_bins, n_bins):
+    """Doc-values aggregation: histogram of a column over matching docs.
+
+    This is the columnar scan whose storage sensitivity the paper calls out —
+    it streams the whole doc-values column.
+    """
+    return jnp.bincount(
+        dv_bins, weights=matched.astype(jnp.float32), length=n_bins
+    )
+
+
+@jax.jit
+def _matched_from_postings(docs, freqs, live):
+    n_docs = live.shape[0]
+    valid = freqs > 0
+    m = jnp.zeros(n_docs, bool).at[docs].set(valid, mode="drop")
+    return m & live
+
+
+# ---------------------------------------------------------------------------
+# Searcher
+# ---------------------------------------------------------------------------
+
+
+def _bucket(n: int) -> int:
+    b = 8
+    while b < n:
+        b <<= 1
+    return b
+
+
+class Searcher:
+    """Point-in-time view over a list of immutable segments.
+
+    Immutability means a Searcher never locks: new flushes create *new*
+    segments and a *new* Searcher (see SearcherManager) — the paper's §2.1.
+    """
+
+    def __init__(
+        self,
+        segments: Sequence[Segment],
+        analyzer: Optional[Analyzer] = None,
+        k1: float = K1_DEFAULT,
+        b: float = B_DEFAULT,
+        use_pallas: bool = False,
+    ) -> None:
+        self.segments = list(segments)
+        self.analyzer = analyzer or Analyzer()
+        self.k1, self.b = k1, b
+        self.use_pallas = use_pallas
+        self.total_docs = sum(s.n_docs for s in self.segments)
+        tokens = sum(s.total_tokens for s in self.segments)
+        self.avgdl = float(tokens) / max(self.total_docs, 1)
+        self._dev: Dict[str, Dict[str, jnp.ndarray]] = {}
+
+    # -- device residency ---------------------------------------------------
+    def _seg_dev(self, seg: Segment) -> Dict[str, jnp.ndarray]:
+        st = self._dev.get(seg.name)
+        if st is None or st["_live_version"] is not seg.live:
+            st = {
+                "doc_lens": jnp.asarray(seg.doc_lens),
+                "live": jnp.asarray(seg.live),
+                "_live_version": seg.live,
+            }
+            for k, v in seg.doc_values.items():
+                st[f"dv.{k}"] = jnp.asarray(v)
+            self._dev[seg.name] = st
+        return st
+
+    # -- stats ----------------------------------------------------------------
+    def doc_freq(self, q: TermQuery) -> int:
+        th = term_hash(q.field, q.token)
+        df = 0
+        for seg in self.segments:
+            i = seg.term_slot(th)
+            if i >= 0:
+                df += int(seg.term_df[i])
+        return df
+
+    def idf(self, q: TermQuery) -> float:
+        df = self.doc_freq(q)
+        n = self.total_docs
+        return float(np.log(1.0 + (n - df + 0.5) / (df + 0.5)))
+
+    # -- postings staging -----------------------------------------------------
+    def _padded_postings(self, seg: Segment, q: TermQuery, bucket: int):
+        docs, freqs = seg.postings(term_hash(q.field, q.token))
+        p = max(bucket, _bucket(len(docs)))
+        d = np.zeros(p, dtype=np.int32)
+        f = np.zeros(p, dtype=np.int32)
+        d[: len(docs)] = docs
+        f[: len(freqs)] = freqs
+        return d, f, len(docs)
+
+    # -- public API -----------------------------------------------------------
+    def search(self, query, k: int = 10) -> TopDocs:
+        if isinstance(query, TermQuery):
+            return self._search_term(query, k)
+        if isinstance(query, BooleanQuery):
+            return self._search_bool(query, k)
+        if isinstance(query, PhraseQuery):
+            return self._search_phrase(query, k)
+        if isinstance(query, SortQuery):
+            return self._search_sort(query, k)
+        if isinstance(query, RangeQuery):
+            return self._search_range(query, k)
+        if isinstance(query, FacetQuery):
+            return self._search_facet(query, k)
+        raise TypeError(f"unknown query type {type(query)}")
+
+    # -- per-family implementations --------------------------------------------
+    def _merge(self, per_seg: List[Tuple[np.ndarray, np.ndarray]], k: int):
+        # min-heap of (score, -doc): among equal scores the LARGEST doc id
+        # is evicted first, preserving Lucene's ascending-docid tie-break
+        heap: List[Tuple[float, int]] = []
+        for scores, ids in per_seg:
+            for s, d in zip(scores, ids):
+                if np.isfinite(s):
+                    heapq.heappush(heap, (float(s), -int(d)))
+                    if len(heap) > k:
+                        heapq.heappop(heap)
+        out = sorted(((s, -d) for s, d in heap), key=lambda t: (-t[0], t[1]))
+        return (
+            np.asarray([d for _, d in out], dtype=np.int64),
+            np.asarray([s for s, _ in out], dtype=np.float32),
+        )
+
+    def _search_term(self, q: TermQuery, k: int) -> TopDocs:
+        idf = self.idf(q)
+        total = 0
+        per_seg = []
+        for seg in self.segments:
+            docs, freqs, n = self._padded_postings(seg, q, 8)
+            if n == 0:
+                continue
+            st = self._seg_dev(seg)
+            if self.use_pallas:
+                from repro.kernels import ops as kops
+
+                vals, ids, hits = kops.bm25_topk(
+                    jnp.asarray(docs),
+                    jnp.asarray(freqs),
+                    st["doc_lens"],
+                    st["live"],
+                    idf,
+                    self.avgdl,
+                    self.k1,
+                    self.b,
+                    k,
+                )
+            else:
+                vals, ids, hits = _term_topk(
+                    jnp.asarray(docs),
+                    jnp.asarray(freqs),
+                    st["doc_lens"],
+                    st["live"],
+                    idf,
+                    self.avgdl,
+                    self.k1,
+                    self.b,
+                    k,
+                )
+            total += int(hits)
+            per_seg.append(
+                (np.asarray(vals), np.asarray(ids) + seg.base_doc)
+            )
+        ids, scores = self._merge(per_seg, k)
+        return TopDocs(total, ids, scores)
+
+    def _search_bool(self, q: BooleanQuery, k: int) -> TopDocs:
+        idfs = np.asarray([self.idf(t) for t in q.terms], dtype=np.float32)
+        conj = q.mode == "and"
+        total = 0
+        per_seg = []
+        for seg in self.segments:
+            staged = [self._padded_postings(seg, t, 8) for t in q.terms]
+            if conj and any(n == 0 for _, _, n in staged):
+                continue
+            if all(n == 0 for _, _, n in staged):
+                continue
+            p = max(d.shape[0] for d, _, _ in staged)
+            docs = np.zeros((len(staged), p), dtype=np.int32)
+            freqs = np.zeros((len(staged), p), dtype=np.int32)
+            for i, (d, f, _) in enumerate(staged):
+                docs[i, : d.shape[0]] = d
+                freqs[i, : f.shape[0]] = f
+            st = self._seg_dev(seg)
+            vals, ids, hits = _bool_topk(
+                jnp.asarray(docs),
+                jnp.asarray(freqs),
+                jnp.asarray(idfs),
+                st["doc_lens"],
+                st["live"],
+                self.avgdl,
+                self.k1,
+                self.b,
+                k,
+                conj,
+                len(q.terms),
+            )
+            total += int(hits)
+            per_seg.append((np.asarray(vals), np.asarray(ids) + seg.base_doc))
+        ids, scores = self._merge(per_seg, k)
+        return TopDocs(total, ids, scores)
+
+    def _search_phrase(self, q: PhraseQuery, k: int) -> TopDocs:
+        """Exact phrase via positions: conjunctive candidates, then host-side
+        adjacency verification (Lucene's exact-phrase scorer is also a CPU
+        merge over positions)."""
+        terms = [TermQuery(q.field, t) for t in q.tokens]
+        hashes = [term_hash(q.field, t) for t in q.tokens]
+        idfs = [self.idf(t) for t in terms]
+        per_seg = []
+        total = 0
+        for seg in self.segments:
+            posting_sets = []
+            ok = True
+            for th in hashes:
+                docs, _ = seg.postings(th)
+                if len(docs) == 0:
+                    ok = False
+                    break
+                posting_sets.append(docs)
+            if not ok:
+                continue
+            cand = posting_sets[0]
+            for d in posting_sets[1:]:
+                cand = np.intersect1d(cand, d, assume_unique=True)
+            cand = cand[seg.live[cand]]
+            if len(cand) == 0:
+                continue
+            # vectorized adjacency: encode positions of every candidate doc
+            # as doc_rank * M + pos and chain np.isin checks (no per-doc loop)
+            M = int(seg.doc_lens.max()) + len(hashes) + 1
+            keysets = []
+            for th in hashes:
+                i = seg.term_slot(th)
+                s_, e_ = (
+                    int(seg.postings_offsets[i]),
+                    int(seg.postings_offsets[i + 1]),
+                )
+                rows = s_ + np.searchsorted(seg.postings_docs[s_:e_], cand)
+                counts = seg.pos_offsets[rows + 1] - seg.pos_offsets[rows]
+                doc_rank = np.repeat(np.arange(len(cand)), counts)
+                flat = np.concatenate(
+                    [
+                        seg.positions[
+                            int(seg.pos_offsets[r]) : int(seg.pos_offsets[r + 1])
+                        ]
+                        for r in rows
+                    ]
+                ) if len(rows) else np.zeros(0, np.int64)
+                keysets.append(doc_rank.astype(np.int64) * M + flat)
+            match = keysets[0]
+            for step, ks in enumerate(keysets[1:], start=1):
+                match = match[np.isin(match + step, ks)]
+                if len(match) == 0:
+                    break
+            hits = []
+            if len(match):
+                tf_per_doc = np.bincount(match // M, minlength=len(cand))
+                idf = float(sum(idfs))
+                for rank in np.nonzero(tf_per_doc)[0]:
+                    doc = int(cand[rank])
+                    tf = float(tf_per_doc[rank])
+                    dl = float(seg.doc_lens[doc])
+                    s = (
+                        idf
+                        * (tf * (self.k1 + 1))
+                        / (tf + self.k1 * (1 - self.b + self.b * dl / self.avgdl))
+                    )
+                    hits.append((s, doc + seg.base_doc))
+            total += len(hits)
+            if hits:
+                hits.sort(key=lambda t: (-t[0], t[1]))
+                hits = hits[:k]
+                per_seg.append(
+                    (
+                        np.asarray([h[0] for h in hits], np.float32),
+                        np.asarray([h[1] for h in hits], np.int64),
+                    )
+                )
+        ids, scores = self._merge(per_seg, k)
+        return TopDocs(total, ids, scores)
+
+    def _search_sort(self, q: SortQuery, k: int) -> TopDocs:
+        total = 0
+        per_seg = []
+        for seg in self.segments:
+            docs, freqs, n = self._padded_postings(seg, q.term, 8)
+            if n == 0:
+                continue
+            st = self._seg_dev(seg)
+            dv = st[f"dv.{q.dv_field}"]
+            vals, ids, hits = _sort_topk(
+                jnp.asarray(docs), jnp.asarray(freqs), dv, st["live"], k
+            )
+            total += int(hits)
+            per_seg.append((np.asarray(vals), np.asarray(ids) + seg.base_doc))
+        ids, scores = self._merge(per_seg, k)
+        return TopDocs(total, ids, scores)
+
+    def _search_range(self, q: RangeQuery, k: int) -> TopDocs:
+        total = 0
+        per_seg = []
+        for seg in self.segments:
+            st = self._seg_dev(seg)
+            dv = st[f"dv.{q.dv_field}"]
+            vals, ids, hits = _range_topk(dv, st["live"], q.lo, q.hi, k)
+            total += int(hits)
+            per_seg.append((np.asarray(vals), np.asarray(ids) + seg.base_doc))
+        ids, scores = self._merge(per_seg, k)
+        return TopDocs(total, ids, scores)
+
+    def _search_facet(self, q: FacetQuery, k: int) -> TopDocs:
+        counts = np.zeros(q.n_bins, dtype=np.float64)
+        total = 0
+        for seg in self.segments:
+            st = self._seg_dev(seg)
+            dv = st[f"dv.{q.dv_field}"]
+            if q.term is None:
+                matched = st["live"]
+            else:
+                docs, freqs, n = self._padded_postings(seg, q.term, 8)
+                if n == 0:
+                    continue
+                matched = _matched_from_postings(
+                    jnp.asarray(docs), jnp.asarray(freqs), st["live"]
+                )
+            c = _facet_counts(matched, dv.astype(jnp.int32), q.n_bins)
+            counts += np.asarray(c, dtype=np.float64)
+            total += int(np.asarray(matched.sum()))
+        order = np.argsort(-counts, kind="stable")[:k]
+        return TopDocs(
+            total,
+            order.astype(np.int64),
+            counts[order].astype(np.float32),
+            facets=counts,
+        )

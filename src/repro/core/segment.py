@@ -1,0 +1,250 @@
+"""Immutable index segments.
+
+A segment is the unit of Lucene's index: immutable once written, so search
+needs no locking and persistence is append-only (exactly the property that
+makes byte-addressable NVM attractive — a segment can be *stored* once and
+*loaded* forever with zero (de)serialization).
+
+Array layout (all numpy on host; `.device()` views as jnp for the data plane):
+
+  term_ids          (n_terms,)   int64   sorted unique term hashes
+  term_df           (n_terms,)   int32   document frequency per term
+  postings_offsets  (n_terms+1,) int32   CSR row pointers into postings
+  postings_docs     (nnz,)       int32   segment-local doc ids, sorted per term
+  postings_freqs    (nnz,)       int32   term frequency in that doc
+  pos_offsets       (nnz+1,)     int32   CSR pointers into positions
+  positions         (sum tf,)    int32   token positions (for phrase queries)
+  doc_lens          (n_docs,)    int32   tokens per doc (BM25 length norm)
+  live              (n_docs,)    bool    deletion bitmap (False = deleted)
+  doc_values[name]  (n_docs,)    int32/float32 columnar doc values
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Segment:
+    name: str
+    base_doc: int  # global docid of local doc 0
+    term_ids: np.ndarray
+    term_df: np.ndarray
+    postings_offsets: np.ndarray
+    postings_docs: np.ndarray
+    postings_freqs: np.ndarray
+    pos_offsets: np.ndarray
+    positions: np.ndarray
+    doc_lens: np.ndarray
+    live: np.ndarray
+    doc_values: Dict[str, np.ndarray]
+
+    # ------------------------------------------------------------------
+    @property
+    def n_docs(self) -> int:
+        return int(self.doc_lens.shape[0])
+
+    @property
+    def n_terms(self) -> int:
+        return int(self.term_ids.shape[0])
+
+    @property
+    def nnz(self) -> int:
+        return int(self.postings_docs.shape[0])
+
+    @property
+    def n_live(self) -> int:
+        return int(self.live.sum())
+
+    @property
+    def total_tokens(self) -> int:
+        return int(self.doc_lens.sum())
+
+    def nbytes(self) -> int:
+        n = 0
+        for a in self.arrays().values():
+            n += a.nbytes
+        return n
+
+    def arrays(self) -> Dict[str, np.ndarray]:
+        d = {
+            "term_ids": self.term_ids,
+            "term_df": self.term_df,
+            "postings_offsets": self.postings_offsets,
+            "postings_docs": self.postings_docs,
+            "postings_freqs": self.postings_freqs,
+            "pos_offsets": self.pos_offsets,
+            "positions": self.positions,
+            "doc_lens": self.doc_lens,
+            "live": self.live,
+        }
+        for k, v in self.doc_values.items():
+            d[f"dv.{k}"] = v
+        return d
+
+    @staticmethod
+    def from_arrays(name: str, base_doc: int, arrays: Dict[str, np.ndarray]) -> "Segment":
+        dv = {k[3:]: v for k, v in arrays.items() if k.startswith("dv.")}
+        return Segment(
+            name=name,
+            base_doc=base_doc,
+            term_ids=arrays["term_ids"],
+            term_df=arrays["term_df"],
+            postings_offsets=arrays["postings_offsets"],
+            postings_docs=arrays["postings_docs"],
+            postings_freqs=arrays["postings_freqs"],
+            pos_offsets=arrays["pos_offsets"],
+            positions=arrays["positions"],
+            doc_lens=arrays["doc_lens"],
+            live=arrays["live"],
+            doc_values=dv,
+        )
+
+    # ------------------------------------------------------------------
+    def term_slot(self, th: int) -> int:
+        """searchsorted lookup; returns -1 if absent."""
+        i = int(np.searchsorted(self.term_ids, th))
+        if i < self.n_terms and int(self.term_ids[i]) == th:
+            return i
+        return -1
+
+    def postings(self, th: int):
+        """(docs, freqs) for a term, or empty arrays."""
+        i = self.term_slot(th)
+        if i < 0:
+            z = np.zeros(0, dtype=np.int32)
+            return z, z
+        s, e = int(self.postings_offsets[i]), int(self.postings_offsets[i + 1])
+        return self.postings_docs[s:e], self.postings_freqs[s:e]
+
+    def positions_for(self, th: int, doc_local: int) -> np.ndarray:
+        i = self.term_slot(th)
+        if i < 0:
+            return np.zeros(0, dtype=np.int32)
+        s, e = int(self.postings_offsets[i]), int(self.postings_offsets[i + 1])
+        j = s + int(np.searchsorted(self.postings_docs[s:e], doc_local))
+        if j >= e or int(self.postings_docs[j]) != doc_local:
+            return np.zeros(0, dtype=np.int32)
+        return self.positions[int(self.pos_offsets[j]) : int(self.pos_offsets[j + 1])]
+
+
+def build_segment(
+    name: str,
+    base_doc: int,
+    buffer: Dict[int, List],  # term -> [(doc_local, freq, positions)]
+    doc_lens: Sequence[int],
+    doc_values: Dict[str, np.ndarray],
+    live: Optional[np.ndarray] = None,
+) -> Segment:
+    """Freeze a DRAM indexing buffer into an immutable segment (flush)."""
+    n_docs = len(doc_lens)
+    terms = np.fromiter(buffer.keys(), dtype=np.int64, count=len(buffer))
+    order = np.argsort(terms, kind="stable")
+    terms = terms[order]
+    keys = list(buffer.keys())
+
+    df = np.zeros(len(terms), dtype=np.int32)
+    offsets = np.zeros(len(terms) + 1, dtype=np.int32)
+    docs_chunks: List[np.ndarray] = []
+    freq_chunks: List[np.ndarray] = []
+    pos_lens: List[np.ndarray] = []
+    pos_chunks: List[np.ndarray] = []
+
+    for slot, src in enumerate(order):
+        plist = buffer[keys[src]]
+        d = np.fromiter((p[0] for p in plist), dtype=np.int32, count=len(plist))
+        f = np.fromiter((p[1] for p in plist), dtype=np.int32, count=len(plist))
+        # docs arrive in increasing order within a buffer, but be safe:
+        if len(d) > 1 and not np.all(d[1:] > d[:-1]):
+            o = np.argsort(d, kind="stable")
+            d, f = d[o], f[o]
+            plist = [plist[i] for i in o]
+        docs_chunks.append(d)
+        freq_chunks.append(f)
+        df[slot] = len(d)
+        offsets[slot + 1] = offsets[slot] + len(d)
+        for p in plist:
+            pos = np.asarray(p[2], dtype=np.int32)
+            pos_lens.append(np.int32(len(pos)))
+            pos_chunks.append(pos)
+
+    postings_docs = (
+        np.concatenate(docs_chunks) if docs_chunks else np.zeros(0, np.int32)
+    )
+    postings_freqs = (
+        np.concatenate(freq_chunks) if freq_chunks else np.zeros(0, np.int32)
+    )
+    pos_offsets = np.zeros(len(postings_docs) + 1, dtype=np.int32)
+    if pos_lens:
+        np.cumsum(np.asarray(pos_lens, dtype=np.int32), out=pos_offsets[1:])
+    positions = np.concatenate(pos_chunks) if pos_chunks else np.zeros(0, np.int32)
+
+    return Segment(
+        name=name,
+        base_doc=base_doc,
+        term_ids=terms,
+        term_df=df,
+        postings_offsets=offsets,
+        postings_docs=postings_docs.astype(np.int32),
+        postings_freqs=postings_freqs.astype(np.int32),
+        pos_offsets=pos_offsets,
+        positions=positions.astype(np.int32),
+        doc_lens=np.asarray(doc_lens, dtype=np.int32),
+        live=(
+            live if live is not None else np.ones(n_docs, dtype=bool)
+        ),
+        doc_values={k: np.asarray(v) for k, v in doc_values.items()},
+    )
+
+
+def merge_segments(name: str, base_doc: int, segments: Sequence[Segment]) -> Segment:
+    """Tiered-merge: combine segments, dropping deleted docs and remapping ids.
+
+    Lucene merges small segments into bigger ones in the background; merged
+    segments are new immutable segments (old ones become garbage after the
+    next commit point).
+    """
+    # build new local docid map (drop deleted docs)
+    maps: List[np.ndarray] = []
+    new_doc_lens: List[np.ndarray] = []
+    new_dv: Dict[str, List[np.ndarray]] = {}
+    cursor = 0
+    for seg in segments:
+        keep = seg.live
+        m = np.full(seg.n_docs, -1, dtype=np.int64)
+        kept = np.nonzero(keep)[0]
+        m[kept] = cursor + np.arange(len(kept))
+        cursor += len(kept)
+        maps.append(m)
+        new_doc_lens.append(seg.doc_lens[kept])
+        for k, v in seg.doc_values.items():
+            new_dv.setdefault(k, []).append(v[kept])
+
+    buffer: Dict[int, List] = {}
+    for seg, m in zip(segments, maps):
+        for slot in range(seg.n_terms):
+            th = int(seg.term_ids[slot])
+            s, e = int(seg.postings_offsets[slot]), int(seg.postings_offsets[slot + 1])
+            plist = buffer.setdefault(th, [])
+            for j in range(s, e):
+                dl = int(seg.postings_docs[j])
+                nd = int(m[dl])
+                if nd < 0:
+                    continue
+                pos = seg.positions[
+                    int(seg.pos_offsets[j]) : int(seg.pos_offsets[j + 1])
+                ]
+                plist.append((nd, int(seg.postings_freqs[j]), pos))
+            if not plist:
+                del buffer[th]
+
+    doc_lens = (
+        np.concatenate(new_doc_lens) if new_doc_lens else np.zeros(0, np.int32)
+    )
+    dv = {k: np.concatenate(v) for k, v in new_dv.items()}
+    # postings in each term arrive ordered by (segment, local doc) which maps
+    # to increasing new ids -> already sorted.
+    return build_segment(name, base_doc, buffer, doc_lens, dv)

@@ -1,0 +1,197 @@
+"""IndexWriter: the DRAM indexing buffer + flush/commit state machine.
+
+Semantics (paper §2.2–2.3, Fig 2):
+
+  add_document  -> volatile DRAM buffer (not searchable, not durable)
+  flush()       -> buffer frozen into an immutable segment, written through
+                   the Directory (searchable after the next reopen; durable
+                   ONLY on the byte path)
+  commit()      -> flush + durability barrier + new commit point
+  crash+recover -> reopen from the latest commit point; on the byte path the
+                   committed heap state is exactly restored.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.analyzer import Analyzer, term_hash
+from repro.core.directory import Directory
+from repro.core.segment import Segment, build_segment, merge_segments
+
+
+class IndexWriter:
+    def __init__(
+        self,
+        directory: Directory,
+        analyzer: Optional[Analyzer] = None,
+        merge_factor: int = 10,
+    ) -> None:
+        self.directory = directory
+        self.analyzer = analyzer or Analyzer()
+        self.merge_factor = merge_factor
+
+        # DRAM indexing buffer
+        self._buf_terms: Dict[int, List] = {}
+        self._buf_doc_lens: List[int] = []
+        self._buf_dv: Dict[str, List] = {}
+        self._buf_deletes: List[int] = []  # term hashes deleted since flush
+
+        self.segments: List[Segment] = []  # flushed (searchable) segments
+        self._seg_counter = 0
+        self.generation = 0  # bumped on every flush (NRT reopen watches this)
+
+        self._recover()
+
+    # ------------------------------------------------------------------
+    def _recover(self) -> None:
+        """Open from the latest commit point (crash-safe restart)."""
+        latest = self.directory.latest_commit()
+        if latest is None:
+            return
+        _, names, meta = latest
+        base = 0
+        for name in names:
+            seg = self.directory.read_segment(name, base)
+            self.segments.append(seg)
+            base += seg.n_docs
+        self._seg_counter = int(meta.get("seg_counter", len(names)))
+        self.generation += 1
+
+    # ------------------------------------------------------------------
+    @property
+    def buffered_docs(self) -> int:
+        return len(self._buf_doc_lens)
+
+    @property
+    def next_doc(self) -> int:
+        return sum(s.n_docs for s in self.segments) + len(self._buf_doc_lens)
+
+    def ram_bytes_used(self) -> int:
+        n = 0
+        for plist in self._buf_terms.values():
+            n += 24 * len(plist)
+        return n + 8 * len(self._buf_doc_lens)
+
+    # ------------------------------------------------------------------
+    def add_document(
+        self,
+        fields: Dict[str, str],
+        doc_values: Optional[Dict[str, float]] = None,
+    ) -> int:
+        """Index one document into the DRAM buffer.  Returns global doc id."""
+        local = len(self._buf_doc_lens)
+        doc_len = 0
+        for fname, text in fields.items():
+            freqs, positions, flen = self.analyzer.term_freqs(fname, text)
+            doc_len += flen
+            for th, f in freqs.items():
+                self._buf_terms.setdefault(th, []).append(
+                    (local, f, positions[th])
+                )
+        self._buf_doc_lens.append(doc_len)
+        dv = doc_values or {}
+        for k in set(self._buf_dv) | set(dv):
+            self._buf_dv.setdefault(k, [0] * local)
+            col = self._buf_dv[k]
+            while len(col) < local:
+                col.append(0)
+            col.append(dv.get(k, 0))
+        return sum(s.n_docs for s in self.segments) + local
+
+    def delete_by_term(self, field: str, token: str) -> int:
+        """Mark every document containing (field, token) deleted.
+
+        Applied immediately to flushed segments (liv bitmap) and remembered
+        for the in-buffer docs (applied at flush) — Lucene's buffered-deletes.
+        """
+        th = term_hash(field, token)
+        n = 0
+        for seg in self.segments:
+            docs, _ = seg.postings(th)
+            if len(docs):
+                live = seg.live.copy()  # new identity: searcher caches key
+                live[docs] = False      # off the array object
+                seg.live = live
+                self.directory.write_live(seg.name, seg.live)
+                n += len(docs)
+        self._buf_deletes.append(th)
+        if n:
+            self.generation += 1  # deletions are visible at next reopen
+        return n
+
+    # ------------------------------------------------------------------
+    def flush(self) -> Optional[Segment]:
+        """Freeze the buffer into an immutable segment (NRT flush).
+
+        This is what ``reopen`` forces: after this returns, a new Searcher
+        can see the documents.  Durability is NOT implied (file path: page
+        cache only; byte path: durable at next barrier).
+        """
+        if not self._buf_doc_lens:
+            return None
+        name = f"_s{self._seg_counter:06d}"
+        self._seg_counter += 1
+        base = sum(s.n_docs for s in self.segments)
+        n_docs = len(self._buf_doc_lens)
+        dv = {
+            k: np.asarray(v + [0] * (n_docs - len(v)), dtype=np.int32)
+            for k, v in self._buf_dv.items()
+        }
+        live = np.ones(n_docs, dtype=bool)
+        if self._buf_deletes:
+            for th in self._buf_deletes:
+                if th in self._buf_terms:
+                    for (d, _, _) in self._buf_terms[th]:
+                        live[d] = False
+        seg = build_segment(
+            name, base, self._buf_terms, self._buf_doc_lens, dv, live
+        )
+        self.directory.write_segment(seg)
+        self.segments.append(seg)
+        self._buf_terms = {}
+        self._buf_doc_lens = []
+        self._buf_dv = {}
+        self._buf_deletes = []
+        self.generation += 1
+        self._maybe_merge()
+        return seg
+
+    def _maybe_merge(self) -> None:
+        """Tiered background merge: when > merge_factor small segments exist,
+        merge them into one (new immutable segment)."""
+        if len(self.segments) <= self.merge_factor:
+            return
+        small = self.segments[: self.merge_factor]
+        rest = self.segments[self.merge_factor :]
+        name = f"_m{self._seg_counter:06d}"
+        self._seg_counter += 1
+        merged = merge_segments(name, small[0].base_doc, small)
+        self.directory.write_segment(merged)
+        # rebase the remaining segments' doc ids
+        base = merged.base_doc + merged.n_docs
+        for s in rest:
+            s.base_doc = base
+            base += s.n_docs
+        self.segments = [merged] + rest
+        self.generation += 1
+
+    def commit(self, meta: Optional[dict] = None) -> int:
+        """Flush + durability barrier + new commit point (paper's 'commit')."""
+        self.flush()
+        m = dict(meta or {})
+        m["seg_counter"] = self._seg_counter
+        m["ts"] = time.time()
+        return self.directory.commit([s.name for s in self.segments], m)
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "segments": len(self.segments),
+            "docs": self.next_doc,
+            "buffered": self.buffered_docs,
+            "generation": self.generation,
+        }

@@ -1,0 +1,7 @@
+"""Data substrate: synthetic corpora, per-family batch pipelines, neighbor
+sampling, and prefetching (straggler mitigation)."""
+
+from repro.data.corpus import synthetic_corpus, CorpusConfig
+from repro.data.prefetch import Prefetcher
+
+__all__ = ["synthetic_corpus", "CorpusConfig", "Prefetcher"]

@@ -1,0 +1,25 @@
+"""Distribution layer: global mesh context, sharding helpers, collectives."""
+
+from repro.distributed.api import (
+    set_mesh,
+    get_mesh,
+    set_batch_axes,
+    shard,
+    named_sharding,
+    POD,
+    DATA,
+    MODEL,
+    BATCH,
+)
+
+__all__ = [
+    "set_mesh",
+    "get_mesh",
+    "set_batch_axes",
+    "shard",
+    "named_sharding",
+    "POD",
+    "DATA",
+    "MODEL",
+    "BATCH",
+]

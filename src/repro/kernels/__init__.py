@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+  bm25_topk   — fused BM25 score + hierarchical top-k (search hot loop)
+  bitset      — packed-bitmap boolean combine + popcount (filter hot loop)
+  decode_attn — grouped-query flash-decode (KV-segment serving hot loop)
+
+Each kernel has a pure-jnp oracle in ``ref.py`` and a jit'd public wrapper in
+``ops.py``; kernels execute with ``interpret=True`` off-TPU.
+"""

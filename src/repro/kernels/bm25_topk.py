@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: fused BM25 scoring + hierarchical top-k.
+
+The paper's search hot loop (Fig 5) streams postings, scores each hit, and
+keeps the best k.  Materializing the full score vector to HBM and re-reading
+it for selection doubles memory traffic on a path that is already
+memory-bound — the exact class of waste the paper attributes to abstraction
+layers.  This kernel fuses score+select in VMEM:
+
+  * grid over postings blocks of 8x128 = 1024 entries,
+  * BM25 on the VPU (elementwise, fp32),
+  * per-block top-k via k unrolled max/argmax extractions (Mosaic-safe:
+    reductions + selects only, no sort),
+  * writes only (n_blocks, 128) vals/idx back to HBM (k <= 128), so HBM
+    write traffic drops from O(P) to O(P/BLOCK * 128).
+
+The final (tiny) merge of per-block winners happens in XLA (`ops.bm25_topk`).
+
+TPU adaptation note: a GPU would do this with a warp-level bitonic top-k;
+TPUs have no shuffles, so per-block iterative extraction (VPU reductions)
++ a hierarchical XLA merge is the TPU-native equivalent.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 8
+BLOCK_COLS = 128
+BLOCK = BLOCK_ROWS * BLOCK_COLS
+OUT_K = 128  # padded top-k lane width (one VREG lane row)
+
+
+def _bm25_topk_kernel(params_ref, freqs_ref, dl_ref, valid_ref,
+                      vals_ref, idx_ref, *, k: int):
+    """One grid step: score a (8,128) postings block, extract its top-k."""
+    idf = params_ref[0, 0]
+    avgdl = params_ref[0, 1]
+    k1 = params_ref[0, 2]
+    b = params_ref[0, 3]
+
+    tf = freqs_ref[...].astype(jnp.float32)
+    dl = dl_ref[...].astype(jnp.float32)
+    valid = valid_ref[...] > 0
+
+    denom = tf + k1 * (1.0 - b + b * dl / avgdl)
+    s = idf * (tf * (k1 + 1.0)) / denom
+    s = jnp.where(valid, s, -jnp.inf)
+
+    # flat index of each lane within the block
+    row = jax.lax.broadcasted_iota(jnp.int32, (BLOCK_ROWS, BLOCK_COLS), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (BLOCK_ROWS, BLOCK_COLS), 1)
+    flat = row * BLOCK_COLS + col
+
+    out_col = jax.lax.broadcasted_iota(jnp.int32, (1, OUT_K), 1)
+    vals = jnp.full((1, OUT_K), -jnp.inf, jnp.float32)
+    idxs = jnp.full((1, OUT_K), -1, jnp.int32)
+
+    # k unrolled max-extractions (k is static and small)
+    for j in range(k):
+        m = jnp.max(s)
+        # smallest flat index attaining the max (deterministic tie-break)
+        pos = jnp.min(jnp.where(s == m, flat, BLOCK))
+        vals = jnp.where(out_col == j, m, vals)
+        idxs = jnp.where(out_col == j, pos, idxs)
+        s = jnp.where(flat == pos, -jnp.inf, s)
+
+    block_start = pl.program_id(0) * BLOCK
+    vals_ref[...] = vals
+    idx_ref[...] = jnp.where(idxs >= 0, idxs + block_start, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def bm25_topk_blocks(freqs, dl, valid, idf, avgdl, k1, b, k=10, interpret=True):
+    """freqs/dl/valid: (P,) with P % 1024 == 0.  Returns per-block winners
+    ((NB, 128) vals, (NB, 128) idx); entries past k are -inf / -1."""
+    assert freqs.shape[0] % BLOCK == 0, freqs.shape
+    nb = freqs.shape[0] // BLOCK
+    params = jnp.array([[idf, avgdl, k1, b]], dtype=jnp.float32)
+    f2 = freqs.reshape(nb * BLOCK_ROWS, BLOCK_COLS)
+    d2 = dl.reshape(nb * BLOCK_ROWS, BLOCK_COLS)
+    v2 = valid.astype(jnp.int32).reshape(nb * BLOCK_ROWS, BLOCK_COLS)
+
+    grid = (nb,)
+    in_specs = [
+        pl.BlockSpec((1, 4), lambda i: (0, 0)),  # params broadcast
+        pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0)),
+        pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0)),
+        pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0)),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, OUT_K), lambda i: (i, 0)),
+        pl.BlockSpec((1, OUT_K), lambda i: (i, 0)),
+    ]
+    vals, idx = pl.pallas_call(
+        functools.partial(_bm25_topk_kernel, k=k),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, OUT_K), jnp.float32),
+            jax.ShapeDtypeStruct((nb, OUT_K), jnp.int32),
+        ],
+        interpret=interpret,
+    )(params, f2, d2, v2)
+    return vals, idx

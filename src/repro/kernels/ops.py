@@ -1,0 +1,119 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Each wrapper (a) pads/stages inputs to kernel-friendly tile shapes, (b) picks
+``interpret=True`` automatically off-TPU so the same call sites run on CPU
+(tests/benches) and compile to Mosaic on TPU, and (c) performs the cheap XLA
+epilogues (hierarchical top-k merge, count reduction).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bitset as _bitset
+from repro.kernels import bm25_topk as _bm25
+from repro.kernels import decode_attn as _decode
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, multiple, value=0):
+    n = x.shape[0]
+    rem = (-n) % multiple
+    if rem == 0:
+        return x
+    return jnp.concatenate([x, jnp.full((rem,) + x.shape[1:], value, x.dtype)])
+
+
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _bm25_epilogue(blk_vals, blk_idx, docs, k):
+    flat_v = blk_vals.reshape(-1)
+    flat_i = blk_idx.reshape(-1)
+    vals, pos = jax.lax.top_k(flat_v, k)
+    pidx = flat_i[pos]
+    ids = docs[jnp.clip(pidx, 0, docs.shape[0] - 1)]
+    return vals, jnp.where(pidx >= 0, ids, -1)
+
+
+def bm25_topk(docs, freqs, doc_lens, live, idf, avgdl, k1, b, k=10):
+    """Drop-in for ``search._term_topk`` backed by the Pallas kernel.
+
+    docs/freqs: (P,) padded postings.  Returns (vals, doc_ids, total_hits).
+    """
+    docs = _pad_to(docs, _bm25.BLOCK)
+    freqs = _pad_to(freqs, _bm25.BLOCK)
+    dl = doc_lens[docs]
+    valid = (freqs > 0) & live[docs]
+    kk = min(k, int(docs.shape[0]))
+    blk_vals, blk_idx = _bm25.bm25_topk_blocks(
+        freqs,
+        dl,
+        valid,
+        jnp.float32(idf),
+        jnp.float32(avgdl),
+        jnp.float32(k1),
+        jnp.float32(b),
+        k=kk,
+        interpret=not _on_tpu(),
+    )
+    vals, ids = _bm25_epilogue(blk_vals, blk_idx, docs, kk)
+    return vals, ids, valid.sum()
+
+
+def bitset_combine(bitmaps, mode="and"):
+    """(T, W) uint32 -> (combined (W,), cardinality)."""
+    t, w = bitmaps.shape
+    pad = (-w) % _bitset.BLOCK
+    if pad:
+        fill = jnp.zeros((t, pad), jnp.uint32)
+        if mode == "and":  # AND identity must not create phantom docs
+            bitmaps = jnp.concatenate([bitmaps, fill], axis=1)
+        else:
+            bitmaps = jnp.concatenate([bitmaps, fill], axis=1)
+    combined, counts = _bitset.bitset_combine_blocks(
+        bitmaps, mode=mode, interpret=not _on_tpu()
+    )
+    return combined[:w], counts.sum()
+
+
+def decode_attention(q, k, v, kv_len=None, s_block=None):
+    """Grouped flash-decode with automatic padding.
+
+    q: (B, Hkv, G, D); k/v: (B, Hkv, S, D/Dv).  Pads S to the block size and
+    D/Dv/G to TPU-friendly multiples; slices the result back.
+    """
+    bsz, hkv, g, d = q.shape
+    s, dv = k.shape[2], v.shape[3]
+    s_block = s_block or min(_decode.DEFAULT_S_BLOCK, max(128, s))
+
+    def pad_axis(x, axis, mult):
+        rem = (-x.shape[axis]) % mult
+        if rem == 0:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, rem)
+        return jnp.pad(x, widths)
+
+    if kv_len is None:
+        kv_len = jnp.full((bsz,), s, jnp.int32)
+    qp = pad_axis(pad_axis(q, 3, 128), 2, 8)
+    kp = pad_axis(pad_axis(k, 3, 128), 2, s_block)
+    vp = pad_axis(pad_axis(v, 3, 128), 2, s_block)
+    out = _decode.decode_attn(
+        qp,
+        kp,
+        vp,
+        kv_len=kv_len,
+        s_block=s_block,
+        interpret=not _on_tpu(),
+        scale=float(1.0 / (d ** 0.5)),  # true scale, not the padded one
+    )
+    return out[:, :, :g, :dv]

@@ -1,0 +1,230 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver.
+
+For every (architecture x input-shape) cell this lowers + compiles the cell's
+step function on the production mesh — single-pod (16,16)=256 chips and
+multi-pod (2,16,16)=512 chips — and records:
+
+  * memory_analysis()  — per-device bytes (proves the cell fits a v5e chip)
+  * cost_analysis()    — per-device HLO FLOPs / bytes-accessed
+  * collective bytes   — parsed from the post-SPMD HLO (while-loop aware)
+  * the three roofline terms + dominant bottleneck (EXPERIMENTS.md §Roofline)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both] [--force]
+
+Results are cached per cell in dryrun_results/<cell>.json (resumable).
+
+NOTE: the XLA_FLAGS line above must execute before ANY jax import — jax locks
+the device count at first init.  Do not import this module from test code;
+run it as a subprocess (tests/test_dryrun.py does).
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import all_cells, arch_ids, get_config
+from repro.distributed.api import set_mesh
+from repro.distributed.hlo import analyze_hlo, roofline_terms
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+
+HBM_PER_CHIP = 16 * 1024**3  # v5e
+
+
+def _parse_overrides(pairs):
+    out = {}
+    for pair in pairs or []:
+        k, v = pair.split("=", 1)
+        if v in ("True", "False"):
+            out[k] = v == "True"
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                out[k] = v
+    return out
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, overrides=None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    set_mesh(mesh)
+    cell = build_cell(arch, shape, overrides=overrides)
+    t0 = time.time()
+    with mesh:
+        kw = {}
+        if cell.out_shardings is not None:
+            kw["out_shardings"] = cell.out_shardings
+        fn = jax.jit(
+            cell.fn,
+            in_shardings=cell.in_shardings,
+            donate_argnums=cell.donate_argnums,
+            **kw,
+        )
+        lowered = fn.lower(*cell.arg_specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        xla_cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        cost = analyze_hlo(hlo)  # while-aware flops/bytes/collectives
+    set_mesh(None)
+
+    rl = roofline_terms(cost, n_chips, cell.model_flops_per_step)
+    per_dev_bytes = (
+        mem.argument_size_in_bytes
+        + mem.output_size_in_bytes
+        + mem.temp_size_in_bytes
+        - mem.alias_size_in_bytes
+    )
+    # XLA:CPU float-normalization holds bf16 loop state (donated caches,
+    # scan stacks) in f32 — on TPU those buffers stay bf16.  Detect f32
+    # twins of bf16 state tensors and subtract the 2-byte/elt inflation for
+    # a TPU-corrected estimate (EXPERIMENTS.md documents this correction).
+    correction = 0
+    state_leaves = []
+    for i in cell.donate_argnums:
+        leaves = jax.tree.leaves(cell.arg_specs[i])
+        shard_leaves = jax.tree.leaves(
+            cell.in_shardings[i], is_leaf=lambda x: x is None or hasattr(x, "spec")
+        )
+        state_leaves += list(zip(leaves, shard_leaves))
+    for leaf, sh in state_leaves:
+        if str(leaf.dtype) != "bfloat16":
+            continue
+        pshape = sh.shard_shape(leaf.shape) if sh is not None else leaf.shape
+        dims = ",".join(str(d) for d in pshape)
+        if f"f32[{dims}]" in hlo:
+            n = 1
+            for d in pshape:
+                n *= d
+            correction += 2 * n  # per donated leaf with an f32 twin
+    per_dev_tpu_est = per_dev_bytes - correction
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "overrides": overrides or {},
+        "kind": cell.kind,
+        "mesh": list(mesh.devices.shape),
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "per_device_bytes": per_dev_bytes,
+            "bf16_state_f32_correction": correction,
+            "per_device_bytes_tpu_est": per_dev_tpu_est,
+            "fits_hbm": bool(per_dev_bytes <= HBM_PER_CHIP),
+            "fits_hbm_tpu_est": bool(per_dev_tpu_est <= HBM_PER_CHIP),
+        },
+        "cost": {
+            "flops_per_device": cost.flops,
+            "bytes_per_device": cost.bytes,
+            "transcendentals": cost.transcendentals,
+            "xla_flops_no_trips": float(xla_cost.get("flops", 0.0)),
+            "while_trips": cost.while_trips,
+        },
+        "collectives": {
+            "bytes_by_op": cost.coll_bytes,
+            "counts_by_op": cost.coll_counts,
+            "total_bytes_per_device": cost.collective_bytes,
+        },
+        "roofline": {
+            "compute_s": rl.compute_s,
+            "memory_s": rl.memory_s,
+            "collective_s": rl.collective_s,
+            "dominant": rl.dominant,
+            "step_time_s": rl.step_time_s,
+            "model_flops": rl.model_flops,
+            "hlo_flops_global": rl.hlo_flops,
+            "useful_flop_ratio": rl.useful_flop_ratio,
+            "mfu_at_roofline": rl.mfu,
+        },
+    }
+    return rec
+
+
+def cell_key(arch: str, shape: str, multi_pod: bool) -> str:
+    pod = "pod2" if multi_pod else "pod1"
+    return f"{arch}__{shape}__{pod}".replace("/", "_")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="dryrun_results")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (perf iterations)")
+    args = ap.parse_args()
+    overrides = _parse_overrides(args.set)
+
+    if args.list:
+        for a, s in all_cells():
+            print(f"{a} {s}")
+        return
+
+    cells = []
+    if args.all:
+        cells = all_cells()
+    elif args.arch and args.shape:
+        cells = [(args.arch, args.shape)]
+    elif args.arch:
+        cells = [(args.arch, s) for s in get_config(args.arch).shapes]
+    else:
+        ap.error("need --all or --arch [--shape]")
+
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    n_ok = n_fail = n_skip = 0
+    for arch, shape in cells:
+        for multi_pod in meshes:
+            key = cell_key(arch, shape, multi_pod)
+            path = os.path.join(args.out, key + ".json")
+            if os.path.exists(path) and not args.force:
+                n_skip += 1
+                continue
+            print(f"[dryrun] {key} ...", flush=True)
+            try:
+                rec = run_cell(arch, shape, multi_pod, overrides=overrides)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                rl = rec["roofline"]
+                print(
+                    f"[dryrun] {key}: OK compile={rec['compile_s']:.1f}s "
+                    f"mem/dev={rec['memory']['per_device_bytes']/2**30:.2f}GiB "
+                    f"fits={rec['memory']['fits_hbm']} "
+                    f"dominant={rl['dominant']} step={rl['step_time_s']*1e3:.2f}ms "
+                    f"mfu={rl['mfu_at_roofline']:.3f}",
+                    flush=True,
+                )
+                n_ok += 1
+            except Exception as e:
+                n_fail += 1
+                print(f"[dryrun] {key}: FAIL {type(e).__name__}: {e}", flush=True)
+                with open(path + ".err", "w") as f:
+                    f.write(traceback.format_exc())
+    print(f"[dryrun] done ok={n_ok} fail={n_fail} skipped={n_skip}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Production mesh definitions.
+
+A function, not a module-level constant, so importing this module never
+touches jax device state (the dry-run driver must set XLA_FLAGS before the
+first jax call; see dryrun.py).
+
+  single pod:  (16, 16)      axes (data, model)   = 256 chips (one v5e pod)
+  multi pod:   (2, 16, 16)   axes (pod, data, model) = 512 chips
+
+The ``pod`` axis carries only gradient all-reduce (and the int8-compressed
+variant); ``data`` is FSDP/batch; ``model`` is TP/EP/table sharding.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_dev_mesh(n_data: int = 2, n_model: int = 2, *, multi_pod: bool = False):
+    """Small mesh for tests (8 fake devices)."""
+    if multi_pod:
+        return jax.make_mesh((2, n_data, n_model), ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

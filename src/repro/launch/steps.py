@@ -1,0 +1,510 @@
+"""Per-cell step builders: (arch x shape) -> jit-able fn + specs + shardings.
+
+``build_cell`` returns everything launch/dryrun.py and launch/train.py need:
+
+  fn             — train_step / prefill / serve_step / retrieve
+  arg_specs      — ShapeDtypeStruct stand-ins for every input (the same
+                   pattern shannon/kernels uses: weak-type-correct,
+                   shardable, no device allocation)
+  in_shardings   — NamedShardings matching arg_specs leaf-for-leaf
+  donate_argnums — buffers aliased in/out (params/opt state, KV caches)
+
+All shapes are GLOBAL; per-device shapes come from the mesh division.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import ArchSpec
+from repro.distributed.api import named_sharding, set_batch_axes, DATA, MODEL
+from repro.models import nequip as gnn
+from repro.models import recsys as rs
+from repro.models import transformer as tf
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+
+EDGE = (DATA, MODEL)  # combined 256-way axis for edge sharding
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    family: str
+    kind: str
+    fn: Any
+    arg_specs: Tuple
+    in_shardings: Tuple
+    donate_argnums: Tuple[int, ...]
+    model_flops_per_step: float  # 6*N*D style estimate (fwd+bwd) or serve fwd
+    config: Any
+    out_shardings: Any = None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def microbatched_train_step(loss_fn, params, opt_state, mbatch, opt_cfg):
+    """Gradient accumulation over a leading microbatch axis.
+
+    mbatch leaves are (n_micro, micro_batch, ...); grads accumulate in fp32
+    across the scan (one optimizer step + one gradient reduction per step —
+    activation memory divides by n_micro, collectives don't multiply).
+    """
+    zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def body(acc, b):
+        (loss, m), g = jax.value_and_grad(
+            lambda p: loss_fn(p, b), has_aux=True
+        )(params)
+        acc = jax.tree.map(lambda a, x: a + x.astype(jnp.float32), acc, g)
+        return acc, m
+
+    grads, ms = jax.lax.scan(body, zero, mbatch)
+    n_micro = jax.tree.leaves(mbatch)[0].shape[0]
+    grads = jax.tree.map(lambda g: g / n_micro, grads)
+    params, opt_state, om = adamw_update(grads, opt_state, params, opt_cfg)
+    metrics = {k: v.mean() for k, v in ms.items()}
+    return params, opt_state, {**metrics, **om}
+
+
+def _micro(batch_specs, shard_specs, n_micro: int):
+    """Reshape (GB, ...) specs into (n_micro, GB/n_micro, ...)."""
+    def rs(s):
+        gb = s.shape[0]
+        assert gb % n_micro == 0, (gb, n_micro)
+        return _sds((n_micro, gb // n_micro) + s.shape[1:], s.dtype)
+
+    def rsh(sds, old):
+        if old is None:
+            return None
+        # prepend a replicated microbatch axis to the old spec
+        return named_sharding(sds.shape, None, *(old.spec or ()))
+
+    new_specs = jax.tree.map(rs, batch_specs)
+    new_shard = jax.tree.map(rsh, new_specs, shard_specs)
+    return new_specs, new_shard
+
+
+def _sharding_tree(spec_tree, shape_tree):
+    """Build NamedShardings from a logical-spec tree + ShapeDtypeStructs."""
+    def one(spec, sds):
+        return named_sharding(sds.shape, *spec)
+
+    return jax.tree.map(
+        one, spec_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, (str, tuple)) for a in x
+        ),
+    )
+
+
+def _eval_params(init_fn, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return jax.eval_shape(init_fn, key)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+
+def _lm_flops(cfg: tf.LMConfig, tokens: int, train: bool) -> float:
+    n = cfg.n_active_params()
+    return (6.0 if train else 2.0) * n * tokens
+
+
+def _build_lm(spec: ArchSpec, shape: Dict, opt_cfg: AdamWConfig) -> Cell:
+    cfg: tf.LMConfig = spec.config
+    kind = shape["kind"]
+    seq, gb = shape["seq_len"], shape["global_batch"]
+
+    p_specs = tf.param_specs(cfg)
+    p_shapes = _eval_params(lambda k: tf.init_lm_params(k, cfg))
+    p_shard = _sharding_tree(p_specs, p_shapes)
+
+    if kind == "train":
+        n_micro = shape.get("n_micro", 1)
+
+        def train_step(params, opt_state, mbatch):
+            return microbatched_train_step(
+                lambda p, b: tf.lm_loss(p, b, cfg),
+                params, opt_state, mbatch, opt_cfg,
+            )
+
+        o_shapes = jax.eval_shape(adamw_init, p_shapes)
+        o_shard = _opt_shardings(o_shapes, p_shard)
+        batch = {
+            "tokens": _sds((gb, seq), jnp.int32),
+            "labels": _sds((gb, seq), jnp.int32),
+        }
+        b_shard = {
+            "tokens": named_sharding((gb, seq), DATA),
+            "labels": named_sharding((gb, seq), DATA),
+        }
+        batch, b_shard = _micro(batch, b_shard, n_micro)
+        return Cell(
+            spec.arch_id, shape_name_of(shape), "lm", kind,
+            train_step, (p_shapes, o_shapes, batch),
+            (p_shard, o_shard, b_shard), (0, 1),
+            _lm_flops(cfg, gb * seq, train=True), cfg,
+        )
+
+    if kind == "prefill":
+        def prefill(params, tokens):
+            return tf.lm_prefill(params, tokens, cfg)
+
+        batch = _sds((gb, seq), jnp.int32)
+        return Cell(
+            spec.arch_id, shape_name_of(shape), "lm", kind,
+            prefill, (p_shapes, batch),
+            (p_shard, named_sharding((gb, seq), DATA)), (),
+            _lm_flops(cfg, gb * seq, train=False), cfg,
+        )
+
+    # decode: one new token against a seq-long cache
+    cache_shapes = jax.eval_shape(
+        lambda: tf.init_kv_cache(cfg, gb, seq)
+    )
+    # long-context single-request decode: the batch axis can't use the
+    # data dimension, so the sequence axis shards across the whole mesh
+    s_axis = EDGE if gb == 1 else MODEL
+    cache_shard = _sharding_tree(tf.cache_specs(cfg, s_axis=s_axis), cache_shapes)
+
+    def serve_step(params, cache, tokens, kv_len):
+        return tf.lm_decode_step(params, cache, tokens, kv_len, cfg)
+
+    toks = _sds((gb,), jnp.int32)
+    kvl = _sds((gb,), jnp.int32)
+    return Cell(
+        spec.arch_id, shape_name_of(shape), "lm", kind,
+        serve_step, (p_shapes, cache_shapes, toks, kvl),
+        (p_shard, cache_shard,
+         named_sharding((gb,), DATA), named_sharding((gb,), DATA)),
+        (1,),
+        _lm_flops(cfg, gb, train=False), cfg,
+        out_shardings=(None, cache_shard),  # alias the donated cache
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+
+def _build_gnn(spec: ArchSpec, shape: Dict, opt_cfg: AdamWConfig) -> Cell:
+    base: gnn.NequIPConfig = spec.config
+    cfg = dataclasses.replace(
+        base,
+        d_feat=shape["d_feat"],
+        n_out=shape["n_out"],
+        task=shape["task"],
+    )
+    # pad node/edge counts to mesh-divisible sizes (the data layer pads with
+    # masked nodes/edges -- non-divisible dims silently lose their sharding)
+    from repro.models.common import round_up
+
+    n = round_up(shape["n_nodes"], 1024)
+    e = round_up(shape["n_edges"], 1024)
+
+    p_shapes = _eval_params(lambda k: gnn.init_nequip_params(k, cfg))
+    p_shard = _sharding_tree(gnn.nequip_param_specs(cfg), p_shapes)
+
+    batch = {
+        "node_feats": _sds((n, cfg.d_feat), jnp.float32),
+        "positions": _sds((n, 3), jnp.float32),
+        "edge_index": _sds((2, e), jnp.int32),
+        "edge_mask": _sds((e,), jnp.float32),
+    }
+    b_shard = {
+        "node_feats": named_sharding((n, cfg.d_feat), DATA),
+        "positions": named_sharding((n, 3), DATA),
+        "edge_index": named_sharding((2, e), None, EDGE),
+        "edge_mask": named_sharding((e,), EDGE),
+    }
+    if cfg.task == "graph_energy":
+        g = shape["n_graphs"]
+        batch.update(
+            graph_ids=_sds((n,), jnp.int32),
+            energy=_sds((g,), jnp.float32),
+            node_mask=_sds((n,), jnp.float32),
+        )
+        b_shard.update(
+            graph_ids=named_sharding((n,), DATA),
+            energy=named_sharding((g,), DATA),
+            node_mask=named_sharding((n,), DATA),
+        )
+    else:
+        batch.update(
+            labels=_sds((n,), jnp.int32),
+            label_mask=_sds((n,), jnp.float32),
+        )
+        b_shard.update(
+            labels=named_sharding((n,), DATA),
+            label_mask=named_sharding((n,), DATA),
+        )
+
+    def train_step(params, opt_state, batch):
+        (loss, m), grads = jax.value_and_grad(
+            lambda p: gnn.nequip_loss(p, batch, cfg), has_aux=True
+        )(params)
+        params, opt_state, om = adamw_update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, {**m, **om}
+
+    o_shapes = jax.eval_shape(adamw_init, p_shapes)
+    o_shard = _opt_shardings(o_shapes, p_shard)
+
+    # message flops ~ E * paths * C * 9 * 2 (fwd) * 3 (fwd+bwd) + node mixes
+    flops = 3.0 * 2.0 * e * gnn.N_PATHS * cfg.channels * 9 * cfg.n_layers
+    return Cell(
+        spec.arch_id, shape_name_of(shape), "gnn", "train",
+        train_step, (p_shapes, o_shapes, batch),
+        (p_shard, o_shard, b_shard), (0, 1), flops, cfg,
+    )
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+
+def _recsys_batch(cfg, b: int, axis=DATA):
+    if isinstance(cfg, rs.XDeepFMConfig) or isinstance(cfg, rs.WideDeepConfig):
+        batch = {
+            "ids": _sds((b, cfg.n_sparse), jnp.int32),
+            "label": _sds((b,), jnp.int32),
+        }
+        shard = {
+            "ids": named_sharding((b, cfg.n_sparse), axis),
+            "label": named_sharding((b,), axis),
+        }
+    elif isinstance(cfg, rs.TwoTowerConfig):
+        batch = {
+            "user_hist": _sds((b, cfg.user_hist_len), jnp.int32),
+            "item_feats": _sds((b, cfg.item_n_feats), jnp.int32),
+        }
+        shard = {
+            "user_hist": named_sharding((b, cfg.user_hist_len), axis),
+            "item_feats": named_sharding((b, cfg.item_n_feats), axis),
+        }
+    else:  # bert4rec: fixed-M cloze positions (see bert4rec_loss_masked)
+        m = cfg.seq_len // 5
+        batch = {
+            "seq": _sds((b, cfg.seq_len), jnp.int32),
+            "mask_positions": _sds((b, m), jnp.int32),
+            "mask_labels": _sds((b, m), jnp.int32),
+            "mask_valid": _sds((b, m), jnp.int32),
+        }
+        shard = {
+            k: named_sharding(v.shape, axis) for k, v in batch.items()
+        }
+    return batch, shard
+
+
+_RS = {
+    rs.XDeepFMConfig: (rs.init_xdeepfm_params, rs.xdeepfm_param_specs,
+                       rs.xdeepfm_loss, rs.xdeepfm_forward),
+    rs.WideDeepConfig: (rs.init_widedeep_params, rs.widedeep_param_specs,
+                        rs.widedeep_loss, rs.widedeep_forward),
+    rs.TwoTowerConfig: (rs.init_twotower_params, rs.twotower_param_specs,
+                        rs.twotower_loss, rs.twotower_score),
+    rs.Bert4RecConfig: (rs.init_bert4rec_params, rs.bert4rec_param_specs,
+                        rs.bert4rec_loss_masked, None),
+}
+
+
+def _recsys_flops(cfg, b: int, train: bool) -> float:
+    """Dense-compute estimate per example (lookups excluded)."""
+    if isinstance(cfg, rs.XDeepFMConfig):
+        f, d = cfg.n_sparse, cfg.embed_dim
+        per = 0.0
+        h_prev = f
+        for h in cfg.cin_layers:
+            per += 2.0 * h_prev * f * d + 2.0 * h * h_prev * f * d
+            h_prev = h
+        sizes = [f * d, *cfg.mlp_layers, 1]
+        per += sum(2.0 * a * bb for a, bb in zip(sizes[:-1], sizes[1:]))
+    elif isinstance(cfg, rs.WideDeepConfig):
+        sizes = [cfg.n_sparse * cfg.embed_dim, *cfg.mlp_layers, 1]
+        per = sum(2.0 * a * bb for a, bb in zip(sizes[:-1], sizes[1:]))
+    elif isinstance(cfg, rs.TwoTowerConfig):
+        sizes = [cfg.feat_dim, *cfg.tower_mlp]
+        per = 2 * sum(2.0 * a * bb for a, bb in zip(sizes[:-1], sizes[1:]))
+        if train:
+            per += 2.0 * b * cfg.embed_dim  # in-batch logits row
+    else:  # bert4rec
+        d, l = cfg.embed_dim, cfg.seq_len
+        per_block = 8.0 * l * d * d + 4.0 * l * l * d + 4.0 * l * d * d * cfg.ffn_mult
+        per = cfg.n_blocks * per_block
+        if train:  # cloze projection at l//5 masked positions
+            per += 2.0 * (l // 5) * d * cfg.vocab_pad
+        else:  # serving projects the final position only
+            per += 2.0 * d * cfg.vocab_pad
+    return per * b * (3.0 if train else 1.0)
+
+
+def _build_recsys(spec: ArchSpec, shape: Dict, opt_cfg: AdamWConfig) -> Cell:
+    cfg = spec.config
+    kind = shape["kind"]
+    b = shape["global_batch"]
+    init_fn, spec_fn, loss_fn, score_fn = _RS[type(cfg)]
+
+    p_shapes = _eval_params(lambda k: init_fn(k, cfg))
+    p_shard = _sharding_tree(spec_fn(cfg), p_shapes)
+
+    if kind == "train":
+        batch, b_shard = _recsys_batch(cfg, b)
+        n_micro = shape.get("n_micro", 1)
+        batch, b_shard = _micro(batch, b_shard, n_micro)
+
+        def train_step(params, opt_state, mbatch):
+            return microbatched_train_step(
+                lambda p, bb: loss_fn(p, bb, cfg),
+                params, opt_state, mbatch, opt_cfg,
+            )
+
+        o_shapes = jax.eval_shape(adamw_init, p_shapes)
+        o_shard = _opt_shardings(o_shapes, p_shard)
+        return Cell(
+            spec.arch_id, shape_name_of(shape), "recsys", kind,
+            train_step, (p_shapes, o_shapes, batch),
+            (p_shard, o_shard, b_shard), (0, 1),
+            _recsys_flops(cfg, b, True), cfg,
+        )
+
+    if kind == "serve":
+        # serving is embarrassingly batch-parallel: use the whole mesh
+        batch, b_shard = _recsys_batch(cfg, b, axis=EDGE)
+
+        def _edge_batched(f):
+            def wrapped(*a, **kw):
+                set_batch_axes(EDGE)  # trace-time rebind
+                try:
+                    return f(*a, **kw)
+                finally:
+                    set_batch_axes(DATA)
+            return wrapped
+        for key in ("label", "labels", "mask", "mask_positions",
+                    "mask_labels", "mask_valid"):
+            batch.pop(key, None)
+            b_shard.pop(key, None)
+
+        if isinstance(cfg, rs.Bert4RecConfig):
+            def serve(params, batch):
+                return rs.bert4rec_serve(params, batch["seq"], cfg, k=10)
+        elif isinstance(cfg, rs.TwoTowerConfig):
+            def serve(params, batch):
+                return rs.twotower_score(params, batch, cfg)
+        else:
+            fwd = score_fn
+
+            def serve(params, batch):
+                return fwd(params, batch["ids"], cfg)
+
+        serve = _edge_batched(serve)
+        return Cell(
+            spec.arch_id, shape_name_of(shape), "recsys", kind,
+            serve, (p_shapes, batch), (p_shard, b_shard), (),
+            _recsys_flops(cfg, b, False), cfg,
+        )
+
+    # retrieval_cand: 1 query vs n candidates.  The candidate batch pads
+    # to a mesh-divisible size (the data layer zero-pads; padded rows score
+    # -inf and never reach the top-k).
+    from repro.models.common import round_up
+    nc = round_up(shape["n_candidates"], 1024)  # divisible on both meshes
+    if isinstance(cfg, rs.TwoTowerConfig):
+        batch = {
+            "user_hist": _sds((1, cfg.user_hist_len), jnp.int32),
+            "cand_embeds": _sds((nc, cfg.embed_dim), jnp.float32),
+        }
+        b_shard = {
+            "user_hist": named_sharding((1, cfg.user_hist_len), None),
+            "cand_embeds": named_sharding((nc, cfg.embed_dim), EDGE),
+        }
+
+        def retrieve(params, batch):
+            set_batch_axes(EDGE)
+            try:
+                return rs.twotower_retrieve(params, batch, cfg, k=100)
+            finally:
+                set_batch_axes(DATA)
+
+        flops = 2.0 * nc * cfg.embed_dim
+    elif isinstance(cfg, rs.Bert4RecConfig):
+        batch = {"seq": _sds((1, cfg.seq_len), jnp.int32)}
+        b_shard = {"seq": named_sharding((1, cfg.seq_len), None)}
+
+        def retrieve(params, batch):
+            return rs.bert4rec_serve(params, batch["seq"], cfg, k=100)
+
+        flops = _recsys_flops(cfg, 1, False)
+    else:
+        # score one user context against nc candidate items (broadcast ids)
+        batch = {"ids": _sds((nc, cfg.n_sparse), jnp.int32)}
+        b_shard = {"ids": named_sharding((nc, cfg.n_sparse), EDGE)}
+        fwd = score_fn
+
+        def retrieve(params, batch):
+            set_batch_axes(EDGE)
+            try:
+                scores = fwd(params, batch["ids"], cfg)
+            finally:
+                set_batch_axes(DATA)
+            return jax.lax.top_k(scores, 100)
+
+        flops = _recsys_flops(cfg, nc, False)
+
+    return Cell(
+        spec.arch_id, shape_name_of(shape), "recsys", "retrieve",
+        retrieve, (p_shapes, batch), (p_shard, b_shard), (), flops, cfg,
+    )
+
+
+# ---------------------------------------------------------------------------
+
+
+def _opt_shardings(o_shapes, p_shard):
+    """Optimizer state shards exactly like its params."""
+    out = {"step": named_sharding((), None),
+           "m": p_shard, "v": p_shard}
+    if "master" in o_shapes:
+        out["master"] = p_shard
+    return out
+
+
+_SHAPE_NAME: Dict[int, str] = {}
+
+
+def shape_name_of(shape: Dict) -> str:
+    return shape.get("_name", "?")
+
+
+def build_cell(
+    arch_id: str,
+    shape_name: str,
+    opt_cfg: AdamWConfig = AdamWConfig(),
+    overrides: Dict = None,
+) -> Cell:
+    spec = get_config(arch_id)
+    if overrides:
+        spec = dataclasses.replace(
+            spec, config=dataclasses.replace(spec.config, **overrides)
+        )
+    shape = dict(spec.shapes[shape_name])
+    shape["_name"] = shape_name
+    if spec.family == "lm":
+        return _build_lm(spec, shape, opt_cfg)
+    if spec.family == "gnn":
+        return _build_gnn(spec, shape, opt_cfg)
+    if spec.family == "recsys":
+        return _build_recsys(spec, shape, opt_cfg)
+    raise ValueError(spec.family)

@@ -1,0 +1,105 @@
+"""Training entrypoint.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \\
+      --steps 200 --scale 0.05 --ckpt-dir /tmp/ckpt
+
+``--scale`` shrinks the assigned config to a CPU-runnable size (layers,
+width, experts scaled down; same code path as the full config).  On a real
+cluster, omit --scale and pass --mesh pod|multipod.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def scaled_lm_config(cfg, scale: float):
+    from repro.models.common import round_up
+
+    d = max(64, round_up(int(cfg.d_model * scale), 16))
+    heads = max(2, int(cfg.n_heads * scale) or 2)
+    kv = max(1, min(cfg.n_kv_heads, heads))
+    while heads % kv:
+        kv -= 1
+    return dataclasses.replace(
+        cfg,
+        n_layers=max(2, int(cfg.n_layers * scale)),
+        d_model=d,
+        n_heads=heads,
+        n_kv_heads=kv,
+        head_dim=max(16, d // heads),
+        d_ff=max(64, round_up(int(cfg.d_ff * scale), 16)),
+        vocab=min(cfg.vocab, 4096),
+        n_experts=min(cfg.n_experts, 8) if cfg.n_experts else 0,
+        moe_top_k=min(cfg.moe_top_k, 2) if cfg.moe_top_k else 0,
+        q_lora_rank=max(16, int(cfg.q_lora_rank * scale)) if cfg.q_lora_rank else 0,
+        kv_lora_rank=max(16, int(cfg.kv_lora_rank * scale)) if cfg.kv_lora_rank else 0,
+        qk_nope_dim=max(8, int(cfg.qk_nope_dim * scale)) if cfg.qk_nope_dim else 0,
+        qk_rope_dim=max(8, int(cfg.qk_rope_dim * scale) // 2 * 2) if cfg.qk_rope_dim else 0,
+        v_head_dim=max(8, int(cfg.v_head_dim * scale)) if cfg.v_head_dim else 0,
+        q_chunk=64,
+        dtype=jnp.float32,
+        param_dtype=jnp.float32,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--scale", type=float, default=0.1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--flush-every", type=int, default=5)
+    ap.add_argument("--commit-every", type=int, default=25)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.data.lm import lm_batches
+    from repro.models.transformer import init_lm_params, lm_loss
+    from repro.optim.adamw import AdamWConfig
+    from repro.train.checkpoint import CheckpointConfig
+    from repro.train.loop import Trainer
+
+    spec = get_config(args.arch)
+    assert spec.family == "lm", "train.py drives LM archs; see examples/ for others"
+    cfg = scaled_lm_config(spec.config, args.scale)
+    print(f"[train] {args.arch} scaled to {cfg.n_params()/1e6:.1f}M params")
+
+    stream = lm_batches(args.batch, args.seq, cfg.vocab)
+    batches = [next(stream) for _ in range(64)]
+
+    def batch_fn(step: int):
+        return batches[step % len(batches)]
+
+    ckpt_cfg = (
+        CheckpointConfig(
+            args.ckpt_dir,
+            flush_every=args.flush_every,
+            commit_every=args.commit_every,
+        )
+        if args.ckpt_dir
+        else None
+    )
+    trainer = Trainer(
+        loss_fn=lambda p, b: lm_loss(p, b, cfg),
+        init_params=lambda k: init_lm_params(k, cfg),
+        batch_fn=batch_fn,
+        opt_cfg=AdamWConfig(lr=args.lr, warmup_steps=20, total_steps=args.steps),
+        ckpt_cfg=ckpt_cfg,
+    )
+    out = trainer.run(args.steps)
+    first = trainer.metrics_log[0] if trainer.metrics_log else {}
+    print(json.dumps({"first": first, **out}, indent=1, default=float))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Model zoo: the 10 assigned architectures as composable JAX modules.
+
+Families:
+  transformer.py — 5 LM archs (dense GQA, QKV-bias, MLA, 2 MoE) with
+                   chunked-causal training attention and KV-cache decode
+  nequip.py      — E(3)-equivariant GNN (Cartesian-irrep tensor products)
+  recsys.py      — xDeepFM (CIN), BERT4Rec, two-tower retrieval, wide&deep
+
+All models are pure functions over param pytrees (init / apply split), so
+pjit shardings attach at the leaves.
+"""

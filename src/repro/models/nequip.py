@@ -1,0 +1,267 @@
+"""NequIP: E(3)-equivariant message-passing GNN [arXiv:2101.03164].
+
+TPU adaptation (recorded in DESIGN.md): instead of spherical-harmonic irreps
+with sparse Clebsch-Gordan gathers (the GPU e3nn formulation), features are
+kept in *Cartesian* form —
+
+    l=0  scalars             (N, C)
+    l=1  vectors             (N, C, 3)
+    l=2  sym-traceless rank2 (N, C, 3, 3)
+
+and tensor-product paths are dense contractions (dot / outer / mat-vec /
+double-contraction), i.e. einsums that map straight onto the MXU, rather
+than CG-indexed gathers that map onto nothing on a TPU.  This spans the same
+function space for l_max = 2 (each Cartesian op below corresponds 1:1 to a
+CG path; the parity-odd l1xl1->l1 cross path is intentionally omitted so the
+model is exactly O(3)-equivariant, matching NequIP's even-parity paths).
+
+Message passing is edge-gather -> per-path contraction -> ``segment_sum``
+(JAX has no sparse SpMM; the scatter pipeline IS the system here).
+Rotation equivariance is property-tested in tests/test_nequip.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.api import shard, DATA, MODEL
+from repro.models.common import dense_init, mlp_apply, mlp_init
+
+N_PATHS = 10
+EDGE = (DATA, MODEL)  # edge arrays shard across the full mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class NequIPConfig:
+    name: str
+    n_layers: int = 5
+    channels: int = 32
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    d_feat: int = 4  # input node feature dim (atom types or graph features)
+    n_out: int = 1  # classes (node_class) or 1 (graph_energy)
+    task: str = "graph_energy"  # "graph_energy" | "node_class"
+    radial_hidden: int = 64
+    dtype: Any = jnp.float32
+
+    def n_params(self) -> int:
+        c = self.channels
+        per_layer = (
+            (self.n_rbf * self.radial_hidden + self.radial_hidden)
+            + (self.radial_hidden * N_PATHS * c + N_PATHS * c)
+            + 3 * c * c  # self-interaction per l
+            + 2 * c * c  # gates for l1, l2
+            + 2 * c
+        )
+        return (
+            self.d_feat * c
+            + self.n_layers * per_layer
+            + c * c + c
+            + c * self.n_out + self.n_out
+        )
+
+
+# ---------------------------------------------------------------------------
+
+
+def init_nequip_params(key, cfg: NequIPConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3 + cfg.n_layers)
+    c = cfg.channels
+    layers = []
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(ks[3 + i], 8)
+        layers.append(
+            {
+                "radial": mlp_init(
+                    lk[0], [cfg.n_rbf, cfg.radial_hidden, N_PATHS * c], cfg.dtype
+                ),
+                "self0": dense_init(lk[1], (c, c), dtype=cfg.dtype),
+                "self1": dense_init(lk[2], (c, c), dtype=cfg.dtype),
+                "self2": dense_init(lk[3], (c, c), dtype=cfg.dtype),
+                "gate1": dense_init(lk[4], (c, c), dtype=cfg.dtype),
+                "gate2": dense_init(lk[5], (c, c), dtype=cfg.dtype),
+                "bias0": jnp.zeros((c,), cfg.dtype),
+            }
+        )
+    # stack layers for scan
+    layers = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    return {
+        "embed": dense_init(ks[0], (cfg.d_feat, c), dtype=cfg.dtype),
+        "layers": layers,
+        "head": mlp_init(ks[1], [c, c, cfg.n_out], cfg.dtype),
+    }
+
+
+def nequip_param_specs(cfg: NequIPConfig) -> Dict[str, Any]:
+    """NequIP weights are tiny (d_hidden=32): replicate everywhere."""
+    layer = {
+        "radial": [{"w": (None,), "b": (None,)}] * 2,
+        "self0": (None,), "self1": (None,), "self2": (None,),
+        "gate1": (None,), "gate2": (None,), "bias0": (None,),
+    }
+    return {
+        "embed": (None,),
+        "layers": layer,
+        "head": [{"w": (None,), "b": (None,)}] * 2,
+    }
+
+
+# ---------------------------------------------------------------------------
+# geometry
+# ---------------------------------------------------------------------------
+
+
+def _radial_basis(d, cfg: NequIPConfig):
+    """Gaussian RBF on [0, cutoff] with a smooth cosine envelope."""
+    mu = jnp.linspace(0.0, cfg.cutoff, cfg.n_rbf)
+    gamma = cfg.n_rbf / cfg.cutoff
+    rbf = jnp.exp(-gamma * (d[:, None] - mu) ** 2)
+    env = 0.5 * (jnp.cos(jnp.pi * jnp.clip(d / cfg.cutoff, 0.0, 1.0)) + 1.0)
+    return rbf, env
+
+
+def _edge_harmonics(vec):
+    """Cartesian 'spherical harmonics': unit vector + sym-traceless outer."""
+    d = jnp.linalg.norm(vec, axis=-1)
+    rhat = vec / jnp.maximum(d, 1e-9)[:, None]
+    eye = jnp.eye(3)
+    y2 = rhat[:, :, None] * rhat[:, None, :] - eye / 3.0
+    return d, rhat, y2
+
+
+# ---------------------------------------------------------------------------
+# the tensor-product message layer
+# ---------------------------------------------------------------------------
+
+
+def _sym_traceless(m):
+    mt = 0.5 * (m + jnp.swapaxes(m, -1, -2))
+    tr = jnp.trace(mt, axis1=-2, axis2=-1)[..., None, None]
+    return mt - tr * jnp.eye(3) / 3.0
+
+
+def _interaction(feats, lp, src, dst, rhat, y2, rbf, env, n_nodes, cfg):
+    """One NequIP interaction block (all 10 even-parity paths, l_max=2)."""
+    c = cfg.channels
+    w = mlp_apply(lp["radial"], rbf, act=jax.nn.silu)  # (E, 10*C)
+    w = (w * env[:, None]).reshape(-1, N_PATHS, c)
+
+    # edge-gathered neighbor features: keep edge-sharded across the mesh
+    # (without the constraints GSPMD replicates these E-sized tensors)
+    f0 = shard(feats["l0"][src], EDGE)  # (E, C)
+    f1 = shard(feats["l1"][src], EDGE)  # (E, C, 3)
+    f2 = shard(feats["l2"][src], EDGE)  # (E, C, 3, 3)
+    y1e = rhat[:, None, :]  # (E, 1, 3)
+    y2e = y2[:, None, :, :]  # (E, 1, 3, 3)
+
+    # --- l=0 messages ---
+    m0 = (
+        w[:, 0] * f0
+        + w[:, 4] * jnp.einsum("eci,ei->ec", f1, rhat)
+        + w[:, 9] * jnp.einsum("ecij,eij->ec", f2, y2)
+    )
+    # --- l=1 messages ---
+    m1 = (
+        w[:, 1][..., None] * (f0[..., None] * y1e)
+        + w[:, 3][..., None] * f1
+        + w[:, 6][..., None] * jnp.einsum("eij,ecj->eci", y2, f1)
+        + w[:, 8][..., None] * jnp.einsum("ecij,ej->eci", f2, rhat)
+    )
+    # --- l=2 messages ---
+    m2 = (
+        w[:, 2][..., None, None] * (f0[..., None, None] * y2e)
+        + w[:, 5][..., None, None] * _sym_traceless(f1[..., :, None] * y1e[..., None, :])
+        + w[:, 7][..., None, None] * f2
+    )
+    m0, m1, m2 = shard(m0, EDGE), shard(m1, EDGE), shard(m2, EDGE)
+
+    def _agg(msg):
+        # scatter-add with an explicitly DATA-sharded accumulator: scatter
+        # output sharding follows the operand, so the aggregation lands
+        # node-sharded instead of replicated (61M-edge graphs do not fit
+        # otherwise)
+        zeros = shard(jnp.zeros((n_nodes,) + msg.shape[1:], msg.dtype), DATA)
+        return shard(zeros.at[dst].add(msg), DATA)
+
+    a0 = _agg(m0)
+    a1 = _agg(m1)
+    a2 = _agg(m2)
+
+    # self-interaction (channel mixing) + residual
+    h0 = feats["l0"] + a0 @ lp["self0"] + lp["bias0"]
+    h1 = feats["l1"] + jnp.einsum("nci,cd->ndi", a1, lp["self1"])
+    h2 = feats["l2"] + jnp.einsum("ncij,cd->ndij", a2, lp["self2"])
+
+    # gated nonlinearity: scalars via silu; l>0 gated by scalar channels
+    g1 = jax.nn.sigmoid(h0 @ lp["gate1"])  # (N, C)
+    g2 = jax.nn.sigmoid(h0 @ lp["gate2"])
+    return {
+        "l0": jax.nn.silu(h0),
+        "l1": h1 * g1[..., None],
+        "l2": h2 * g2[..., None, None],
+    }
+
+
+def nequip_forward(params, batch, cfg: NequIPConfig):
+    """batch: node_feats (N, d_feat), positions (N, 3), edge_index (2, E),
+    edge_mask (E,), node_mask (N,), graph_ids (N,) for batched graphs.
+
+    Returns per-node outputs (N, n_out).
+    """
+    x = batch["node_feats"].astype(cfg.dtype)
+    pos = batch["positions"].astype(cfg.dtype)
+    src, dst = batch["edge_index"][0], batch["edge_index"][1]
+    emask = batch.get("edge_mask")
+    n_nodes = x.shape[0]
+
+    vec = shard(pos[src] - pos[dst], EDGE)
+    d, rhat, y2 = _edge_harmonics(vec)
+    rbf, env = _radial_basis(d, cfg)
+    if emask is not None:
+        env = env * emask.astype(env.dtype)
+    rbf, env = shard(rbf, EDGE), shard(env, EDGE)
+
+    c = cfg.channels
+    feats = {
+        "l0": shard(x @ params["embed"], DATA),
+        "l1": jnp.zeros((n_nodes, c, 3), cfg.dtype),
+        "l2": jnp.zeros((n_nodes, c, 3, 3), cfg.dtype),
+    }
+
+    @jax.checkpoint  # recompute messages in backward: the (E, C, 3, 3)
+    def body(feats, lp):  # message stacks dominate memory if saved per layer
+        out = _interaction(feats, lp, src, dst, rhat, y2, rbf, env, n_nodes, cfg)
+        out = {k: shard(v, DATA) for k, v in out.items()}
+        return out, None
+
+    feats, _ = jax.lax.scan(body, feats, params["layers"])
+    return mlp_apply(params["head"], feats["l0"], act=jax.nn.silu)
+
+
+def nequip_loss(params, batch, cfg: NequIPConfig):
+    out = nequip_forward(params, batch, cfg)
+    nmask = batch.get("node_mask")
+    if cfg.task == "graph_energy":
+        gid = batch["graph_ids"]
+        n_graphs = batch["energy"].shape[0]
+        node_e = out[:, 0]
+        if nmask is not None:
+            node_e = node_e * nmask
+        e = jax.ops.segment_sum(node_e, gid, num_segments=n_graphs)
+        loss = jnp.mean((e - batch["energy"]) ** 2)
+        return loss, {"loss": loss}
+    # node classification
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(out.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    lmask = batch.get("label_mask")
+    if lmask is None:
+        lmask = jnp.ones_like(ll)
+    loss = -(ll * lmask).sum() / jnp.maximum(lmask.sum(), 1.0)
+    return loss, {"loss": loss}

@@ -1,0 +1,869 @@
+"""Decoder-only transformer covering the five assigned LM architectures.
+
+One configurable module expresses:
+  smollm-360m        — llama-arch GQA (15H / 5KV, d=960)
+  qwen2-1.5b         — GQA with QKV bias (12H / 2KV)
+  minicpm3-4b        — MLA (latent KV: q_lora 768, kv_lora 256, nope 64,
+                       rope 32, v 64) — the latent cache is also what makes
+                       its ``long_500k`` decode cell cheap
+  moonshot-v1-16b    — MoE 64 experts top-6 (+ GQA 16H/16KV)
+  phi3.5-moe-42b     — MoE 16 experts top-2 (+ GQA 32H/8KV)
+
+Design points:
+  * layers are stacked (leading L dim) and iterated with ``jax.lax.scan`` so
+    the HLO stays small at 512-device lowering,
+  * training attention is query-chunked with online accumulation (bounded
+    VMEM/HBM working set at 32k prefill; the TPU-kernel equivalent is
+    kernels/decode_attn.py for the decode side),
+  * MoE dispatch is scatter-based with a static capacity — no (T, E, C)
+    one-hot dispatch tensor (the GShard einsum blows up at 1M tokens),
+  * vocab/table dims are padded to multiples of 256 so jit in_shardings
+    divisibility holds on the 16-way model axis,
+  * every weight carries a logical sharding spec consumed by launch/dryrun.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.api import shard, DATA, MODEL
+from repro.models.common import (
+    apply_rope,
+    dense_init,
+    embed_init,
+    rms_norm,
+    round_up,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    attn: str = "gqa"  # "gqa" | "mla"
+    qkv_bias: bool = False
+    # MLA dims (minicpm3)
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    # MoE
+    n_experts: int = 0
+    moe_top_k: int = 0
+    capacity_factor: float = 1.25
+    n_shared_experts: int = 0
+    # misc
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-6
+    q_chunk: int = 1024
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    tie_embeddings: bool = False
+    # --- perf-iteration knobs (EXPERIMENTS.md section Perf; defaults = baseline)
+    #: skip fully-masked KV blocks in training attention (upper-triangle
+    #: work drops ~2x at the cost of nq distinct chunk shapes)
+    causal_skip: bool = False
+    #: MoE dispatch: "scatter" (GSPMD decides; baseline), "sharded"
+    #: (expert-sharded scatter operand), or "grouped" (GShard-style local
+    #: per-data-shard capacity: local ranks, local scatter, all-to-all)
+    moe_dispatch: str = "scatter"
+    #: token groups for "grouped" dispatch (= data-axis size in production)
+    moe_groups: int = 16
+
+    @property
+    def vocab_pad(self) -> int:
+        return round_up(self.vocab, 256)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def group_size(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    def n_params(self) -> int:
+        """Exact parameter count (excluding vocab padding)."""
+        d = self.d_model
+        if self.attn == "mla":
+            attn = (
+                d * self.q_lora_rank
+                + self.q_lora_rank
+                + self.q_lora_rank * self.n_heads * (self.qk_nope_dim + self.qk_rope_dim)
+                + d * self.kv_lora_rank
+                + self.kv_lora_rank
+                + self.kv_lora_rank * self.n_heads * (self.qk_nope_dim + self.v_head_dim)
+                + d * self.qk_rope_dim
+                + self.n_heads * self.v_head_dim * d
+            )
+        else:
+            attn = d * self.head_dim * (self.n_heads + 2 * self.n_kv_heads) * 1
+            attn += self.n_heads * self.head_dim * d
+            if self.qkv_bias:
+                attn += self.head_dim * (self.n_heads + 2 * self.n_kv_heads)
+        if self.is_moe:
+            ffn = self.n_experts * 3 * d * self.d_ff + d * self.n_experts
+            ffn += self.n_shared_experts * 3 * d * self.d_ff
+        else:
+            ffn = 3 * d * self.d_ff
+        per_layer = attn + ffn + 2 * d
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + d
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: only routed experts count)."""
+        if not self.is_moe:
+            return self.n_params()
+        d = self.d_model
+        full_ffn = self.n_experts * 3 * d * self.d_ff
+        active_ffn = (self.moe_top_k + self.n_shared_experts) * 3 * d * self.d_ff
+        return self.n_params() - self.n_layers * (full_ffn - active_ffn)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: LMConfig) -> Dict[str, jnp.ndarray]:
+    ks = iter(jax.random.split(key, 24))
+    d, pd = cfg.d_model, cfg.param_dtype
+    p: Dict[str, jnp.ndarray] = {
+        "ln1": jnp.ones((d,), pd),
+        "ln2": jnp.ones((d,), pd),
+    }
+    if cfg.attn == "mla":
+        nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+        p.update(
+            wq_a=dense_init(next(ks), (d, cfg.q_lora_rank), dtype=pd),
+            q_norm=jnp.ones((cfg.q_lora_rank,), pd),
+            wq_b=dense_init(
+                next(ks), (cfg.q_lora_rank, cfg.n_heads * (nope + rope)), dtype=pd
+            ),
+            wkv_a=dense_init(next(ks), (d, cfg.kv_lora_rank), dtype=pd),
+            kv_norm=jnp.ones((cfg.kv_lora_rank,), pd),
+            wk_nope=dense_init(
+                next(ks), (cfg.kv_lora_rank, cfg.n_heads * nope), dtype=pd
+            ),
+            wv=dense_init(next(ks), (cfg.kv_lora_rank, cfg.n_heads * vd), dtype=pd),
+            wk_rope=dense_init(next(ks), (d, rope), dtype=pd),
+            wo=dense_init(next(ks), (cfg.n_heads * vd, d), dtype=pd),
+        )
+    else:
+        hd = cfg.head_dim
+        p.update(
+            wq=dense_init(next(ks), (d, cfg.n_heads * hd), dtype=pd),
+            wk=dense_init(next(ks), (d, cfg.n_kv_heads * hd), dtype=pd),
+            wv=dense_init(next(ks), (d, cfg.n_kv_heads * hd), dtype=pd),
+            wo=dense_init(next(ks), (cfg.n_heads * hd, d), dtype=pd),
+        )
+        if cfg.qkv_bias:
+            p.update(
+                bq=jnp.zeros((cfg.n_heads * hd,), pd),
+                bk=jnp.zeros((cfg.n_kv_heads * hd,), pd),
+                bv=jnp.zeros((cfg.n_kv_heads * hd,), pd),
+            )
+    if cfg.is_moe:
+        p.update(
+            router=dense_init(next(ks), (d, cfg.n_experts), dtype=jnp.float32),
+            w1=dense_init(next(ks), (cfg.n_experts, d, cfg.d_ff), dtype=pd),
+            w3=dense_init(next(ks), (cfg.n_experts, d, cfg.d_ff), dtype=pd),
+            w2=dense_init(
+                next(ks), (cfg.n_experts, cfg.d_ff, d), in_axis=-2, dtype=pd
+            ),
+        )
+        if cfg.n_shared_experts:
+            ff = cfg.n_shared_experts * cfg.d_ff
+            p.update(
+                sw1=dense_init(next(ks), (d, ff), dtype=pd),
+                sw3=dense_init(next(ks), (d, ff), dtype=pd),
+                sw2=dense_init(next(ks), (ff, d), dtype=pd),
+            )
+    else:
+        p.update(
+            w1=dense_init(next(ks), (d, cfg.d_ff), dtype=pd),
+            w3=dense_init(next(ks), (d, cfg.d_ff), dtype=pd),
+            w2=dense_init(next(ks), (cfg.d_ff, d), dtype=pd),
+        )
+    return p
+
+
+def init_lm_params(key, cfg: LMConfig) -> Dict[str, Any]:
+    k_emb, k_out, k_layers = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys)
+    params = {
+        "embed": embed_init(k_emb, (cfg.vocab_pad, cfg.d_model), cfg.param_dtype),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(
+            k_out, (cfg.d_model, cfg.vocab_pad), dtype=cfg.param_dtype
+        )
+    return params
+
+
+def param_specs(cfg: LMConfig) -> Dict[str, Any]:
+    """Logical PartitionSpec tree matching init_lm_params' structure.
+
+    2D scheme: weights shard (fan-in on data [FSDP], fan-out on model [TP]);
+    expert dim shards on model (EP).  Dims that don't divide are dropped by
+    ``named_sharding`` at jit time.
+    """
+    L = (None,)
+
+    def s(*ax):
+        return ax
+
+    layer: Dict[str, Any] = {
+        "ln1": L, "ln2": L,
+    }
+    if cfg.attn == "mla":
+        layer.update(
+            wq_a=s(None, DATA, MODEL), q_norm=L,
+            wq_b=s(None, DATA, MODEL),
+            wkv_a=s(None, DATA, MODEL), kv_norm=L,
+            wk_nope=s(None, DATA, MODEL),
+            wv=s(None, DATA, MODEL),
+            wk_rope=s(None, DATA, None),
+            wo=s(None, MODEL, DATA),
+        )
+    else:
+        layer.update(
+            wq=s(None, DATA, MODEL),
+            wk=s(None, DATA, MODEL),
+            wv=s(None, DATA, MODEL),
+            wo=s(None, MODEL, DATA),
+        )
+        if cfg.qkv_bias:
+            layer.update(bq=s(None, MODEL), bk=s(None, MODEL), bv=s(None, MODEL))
+    if cfg.is_moe:
+        layer.update(
+            router=s(None, DATA, None),
+            w1=s(None, MODEL, DATA, None),
+            w3=s(None, MODEL, DATA, None),
+            w2=s(None, MODEL, None, DATA),
+        )
+        if cfg.n_shared_experts:
+            layer.update(
+                sw1=s(None, DATA, MODEL), sw3=s(None, DATA, MODEL),
+                sw2=s(None, MODEL, DATA),
+            )
+    else:
+        layer.update(
+            w1=s(None, DATA, MODEL), w3=s(None, DATA, MODEL),
+            w2=s(None, MODEL, DATA),
+        )
+    specs = {
+        "embed": s(MODEL, DATA),
+        "layers": layer,
+        "final_norm": (None,),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = s(DATA, MODEL)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def _chunked_causal_attention(q, k, v, q_chunk: int):
+    """Query-chunked causal attention with fp32 softmax.
+
+    q: (B, S, Kv, G, Dq); k: (B, S, Kv, Dq); v: (B, S, Kv, Dv)
+    returns (B, S, Kv, G, Dv).
+
+    Working set per chunk is (B, Kv, G, C, S) — bounded and independent of
+    the full S^2 score matrix.  Baseline computes masked scores against all
+    S keys per chunk (upper-triangle waste is a recorded hillclimb item).
+    """
+    b, s, kv, g, dq = q.shape
+    dv = v.shape[-1]
+    c = min(q_chunk, s)
+    assert s % c == 0, (s, c)
+    nq = s // c
+    scale = 1.0 / np.sqrt(dq)
+
+    qc = q.reshape(b, nq, c, kv, g, dq)
+    qc = jnp.moveaxis(qc, 1, 0)  # (nq, B, C, Kv, G, Dq)
+    key_pos = jnp.arange(s)
+
+    @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def chunk(i, qi):
+        # qi: (B, C, Kv, G, Dq).  Rematted: without this, scan-backward
+        # stacks every chunk's softmax weights = the full S^2 matrix.
+        scores = jnp.einsum(
+            "bckgd,bskd->bkgcs", qi, k, preferred_element_type=jnp.float32
+        ) * scale
+        qpos = i * c + jnp.arange(c)
+        mask = qpos[:, None] >= key_pos[None, :]  # (C, S)
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+        w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return jnp.einsum("bkgcs,bskd->bckgd", w, v)
+
+    out = jax.lax.map(lambda args: chunk(*args), (jnp.arange(nq), qc))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, s, kv, g, dv)
+    return out
+
+
+def _chunked_causal_attention_skip(q, k, v, q_chunk: int):
+    """Causal-skip variant (cfg.causal_skip): chunk i attends only to keys
+    [0, (i+1)*C) -- fully-masked KV blocks are never computed, halving
+    attention FLOPs/bytes vs the masked-full baseline.  Unrolled over nq
+    chunks (distinct shapes), each rematted."""
+    b, s, kv, g, dq = q.shape
+    dv = v.shape[-1]
+    c = min(q_chunk, s)
+    assert s % c == 0, (s, c)
+    nq = s // c
+    scale = 1.0 / np.sqrt(dq)
+
+    @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable,
+             static_argnums=(3,))
+    def chunk(qi, ki, vi, i):
+        scores = jnp.einsum(
+            "bckgd,bskd->bkgcs", qi, ki, preferred_element_type=jnp.float32
+        ) * scale
+        qpos = i * c + jnp.arange(c)
+        mask = qpos[:, None] >= jnp.arange(ki.shape[1])[None, :]
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+        w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return jnp.einsum("bkgcs,bskd->bckgd", w, vi)
+
+    outs = []
+    for i in range(nq):
+        qi = jax.lax.slice_in_dim(q, i * c, (i + 1) * c, axis=1)
+        ki = jax.lax.slice_in_dim(k, 0, (i + 1) * c, axis=1)
+        vi = jax.lax.slice_in_dim(v, 0, (i + 1) * c, axis=1)
+        outs.append(chunk(qi, ki, vi, i))
+    return jnp.concatenate(outs, axis=1).reshape(b, s, kv, g, dv)
+
+
+def _gqa_train(x, lp, cfg: LMConfig, positions):
+    b, s, d = x.shape
+    hd, h, kvh = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = x @ lp["wq"]
+    k = x @ lp["wk"]
+    v = x @ lp["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = q.reshape(b, s, kvh, cfg.group_size, hd)
+    k = k.reshape(b, s, kvh, hd)
+    v = v.reshape(b, s, kvh, hd)
+    q = apply_rope(
+        q.reshape(b, s, h, hd), positions, cfg.rope_theta
+    ).reshape(b, s, kvh, cfg.group_size, hd)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    attn_fn = (
+        _chunked_causal_attention_skip if cfg.causal_skip
+        else _chunked_causal_attention
+    )
+    o = attn_fn(q, k, v, cfg.q_chunk)
+    o = shard(o.reshape(b, s, h * hd), DATA)
+    return o @ lp["wo"]
+
+
+def _mla_train(x, lp, cfg: LMConfig, positions):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q = rms_norm(x @ lp["wq_a"], lp["q_norm"], cfg.rms_eps) @ lp["wq_b"]
+    q = q.reshape(b, s, h, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = rms_norm(x @ lp["wkv_a"], lp["kv_norm"], cfg.rms_eps)  # (B,S,r)
+    k_nope = (c_kv @ lp["wk_nope"]).reshape(b, s, h, nope)
+    v = (c_kv @ lp["wv"]).reshape(b, s, h, vd)
+    k_rope = apply_rope(
+        (x @ lp["wk_rope"]).reshape(b, s, 1, rope), positions, cfg.rope_theta
+    )
+
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)  # (B,S,H,nope+rope)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, h, rope))], axis=-1
+    )
+    # treat each head as its own KV head (MLA trains like MHA)
+    qg = q_full.reshape(b, s, h, 1, nope + rope)
+    attn_fn = (
+        _chunked_causal_attention_skip if cfg.causal_skip
+        else _chunked_causal_attention
+    )
+    o = attn_fn(qg, k_full, v, cfg.q_chunk)
+    o = shard(o.reshape(b, s, h * vd), DATA)
+    return o @ lp["wo"]
+
+
+# ---------------------------------------------------------------------------
+# FFN / MoE
+# ---------------------------------------------------------------------------
+
+
+def _dense_ffn(x, w1, w3, w2):
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def moe_ffn_grouped(x2d, lp, cfg: LMConfig):
+    """GShard-style grouped dispatch (cfg.moe_dispatch == "grouped").
+
+    Tokens are grouped by data shard; ranks/capacity are computed *within*
+    each group (a local cumsum instead of a global one — no collective),
+    the scatter is batched per group (local), and the only communication is
+    the (G, E, C_g, d) -> (E, G, C_g, d) reshard, which GSPMD lowers to the
+    all-to-all an MoE actually needs.  Capacity is enforced per group,
+    exactly as in GShard/Switch.
+    """
+    t, d = x2d.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    g = cfg.moe_groups if t % cfg.moe_groups == 0 else 1
+    tg = t // g
+    cap = round_up(int(tg * k / e * cfg.capacity_factor) + 1, 8)
+
+    xg = shard(x2d.reshape(g, tg, d), DATA)
+    logits = xg.astype(jnp.float32) @ lp["router"]  # (G, TG, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (G, TG, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    me = probs.mean((0, 1))
+    ce = jnp.zeros((e,), jnp.float32).at[gate_idx.reshape(-1)].add(
+        1.0 / (t * k)
+    )
+    aux = e * jnp.sum(me * ce)
+
+    eids = gate_idx.reshape(g, tg * k)  # (G, TG*K)
+    onehot = jax.nn.one_hot(eids, e, dtype=jnp.int32)  # (G, TG*K, E)
+    rank = jnp.cumsum(onehot, axis=1) - onehot  # LOCAL prefix sum
+    rank = (rank * onehot).sum(-1)
+    slot = eids * cap + jnp.minimum(rank, cap - 1)  # (G, TG*K)
+    valid = rank < cap
+
+    xr = jnp.repeat(xg, k, axis=1)  # (G, TG*K, d)
+    gidx = jnp.arange(g)[:, None]
+    disp = (
+        jnp.zeros((g, e * cap, d), x2d.dtype)
+        .at[gidx, jnp.where(valid, slot, e * cap)]
+        .add(xr, mode="drop")
+        .reshape(g, e, cap, d)
+    )
+    # (G, E, C, d) sharded on BOTH axes (G=data, E=model): the expert
+    # einsum is then fully local (E is a batch dim shared with the
+    # model-sharded expert weights) -- the only communication left is the
+    # combine gather below
+    disp = shard(disp, DATA, MODEL)
+    h = jax.nn.silu(
+        jnp.einsum("gecd,edf->gecf", disp, lp["w1"])
+    ) * jnp.einsum("gecd,edf->gecf", disp, lp["w3"])
+    y = jnp.einsum("gecf,efd->gecd", h, lp["w2"]).astype(x2d.dtype)
+    y = y.reshape(g, e * cap, d)  # combine gather crosses the model axis
+
+    gate = (gate_vals.reshape(g, tg * k) * valid).astype(x2d.dtype)
+    yc = y[gidx, slot] * gate[..., None]  # (G, TG*K, d) local gather
+    out = yc.reshape(g, tg, k, d).sum(2).reshape(t, d)
+
+    if cfg.n_shared_experts:
+        out = out + _dense_ffn(x2d, lp["sw1"], lp["sw3"], lp["sw2"])
+    return out.astype(x2d.dtype), aux
+
+
+def moe_ffn_hier(x2d, lp, cfg: LMConfig):
+    """Baseline global-capacity dispatch with HIERARCHICAL ranks
+    (cfg.moe_dispatch == "hier").
+
+    The baseline's global one-hot cumsum makes GSPMD all-gather a
+    (T*K, E) int32 tensor and all-reduce its prefix sums every layer
+    (~618 GB/device/step on moonshot train_4k).  Ranks decompose exactly:
+        rank(token) = offset[group(token), expert] + local_rank(token)
+    where offset is an exclusive scan of the (G, E) per-group counts — a
+    4 KB collective instead of a multi-GB one.  Slot assignment (and
+    therefore numerics, modulo drop order within a step) matches the
+    baseline global-capacity policy.
+    """
+    t, d = x2d.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    g = cfg.moe_groups if t % cfg.moe_groups == 0 else 1
+    tg = t // g
+    cap = round_up(int(t * k / e * cfg.capacity_factor) + 1, 8)
+
+    xg = shard(x2d.reshape(g, tg, d), DATA)
+    logits = xg.astype(jnp.float32) @ lp["router"]  # (G, TG, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    me = probs.mean((0, 1))
+    ce = jnp.zeros((e,), jnp.float32).at[gate_idx.reshape(-1)].add(1.0 / (t * k))
+    aux = e * jnp.sum(me * ce)
+
+    eids = gate_idx.reshape(g, tg * k)
+    onehot = jax.nn.one_hot(eids, e, dtype=jnp.int32)  # (G, TG*K, E) local
+    rank_local = ((jnp.cumsum(onehot, axis=1) - onehot) * onehot).sum(-1)
+    counts = onehot.sum(axis=1)  # (G, E) — tiny
+    offsets = jnp.cumsum(counts, axis=0) - counts  # exclusive over groups
+    rank = rank_local + jnp.take_along_axis(
+        offsets, eids, axis=1
+    )  # (G, TG*K) global rank, no big collective
+
+    slot = (eids * cap + jnp.minimum(rank, cap - 1)).reshape(t * k)
+    valid = (rank < cap).reshape(t * k)
+    gate = (gate_vals.reshape(g, tg * k) * (rank < cap)).astype(
+        x2d.dtype
+    ).reshape(t * k)
+
+    xr = jnp.repeat(x2d, k, axis=0)  # (T*K, d)
+    disp = (
+        jnp.zeros((e * cap, d), x2d.dtype)
+        .at[jnp.where(valid, slot, e * cap)]
+        .add(xr, mode="drop")
+        .reshape(e, cap, d)
+    )
+    disp = shard(disp, MODEL)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", disp, lp["w1"])) * jnp.einsum(
+        "ecd,edf->ecf", disp, lp["w3"]
+    )
+    y = jnp.einsum("ecf,efd->ecd", h, lp["w2"]).reshape(e * cap, d)
+    y = y[slot] * gate[:, None]
+    out = y.reshape(t, k, d).sum(1)
+
+    if cfg.n_shared_experts:
+        out = out + _dense_ffn(x2d, lp["sw1"], lp["sw3"], lp["sw2"])
+    return out.astype(x2d.dtype), aux
+
+
+def moe_ffn(x2d, lp, cfg: LMConfig):
+    if cfg.moe_dispatch == "grouped":
+        return moe_ffn_grouped(x2d, lp, cfg)
+    if cfg.moe_dispatch == "hier":
+        return moe_ffn_hier(x2d, lp, cfg)
+    """Scatter-based static-capacity top-k MoE (see module docstring).
+
+    x2d: (T, d) -> (T, d); aux load-balance loss returned alongside.
+    """
+    t, d = x2d.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    cap = round_up(int(t * k / e * cfg.capacity_factor) + 1, 8)
+
+    logits = x2d.astype(jnp.float32) @ lp["router"]  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9
+    )
+
+    # aux loss (Switch-style load balancing)
+    me = probs.mean(0)
+    ce = jnp.zeros((e,), jnp.float32).at[gate_idx.reshape(-1)].add(
+        1.0 / (t * k)
+    )
+    aux = e * jnp.sum(me * ce)
+
+    eids = gate_idx.reshape(-1)  # (T*K,)
+    onehot = jax.nn.one_hot(eids, e, dtype=jnp.int32)
+    rank = (jnp.cumsum(onehot, axis=0) - onehot)
+    rank = (rank * onehot).sum(-1)  # position within expert
+    slot = eids * cap + jnp.minimum(rank, cap - 1)
+    valid = rank < cap
+
+    xr = jnp.repeat(x2d, k, axis=0)  # (T*K, d)
+    zeros = jnp.zeros((e * cap, d), x2d.dtype)
+    if cfg.moe_dispatch == "sharded":
+        # expert-sharded scatter operand: GSPMD keeps the dispatch buffer
+        # sharded and reduce-scatters updates instead of all-reducing the
+        # whole (E*cap, d) buffer per layer (EXPERIMENTS.md §Perf)
+        zeros = shard(zeros, MODEL)
+    disp = (
+        zeros
+        .at[jnp.where(valid, slot, e * cap)]
+        .add(xr, mode="drop")
+        .reshape(e, cap, d)
+    )
+    disp = shard(disp, MODEL)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", disp, lp["w1"])) * jnp.einsum(
+        "ecd,edf->ecf", disp, lp["w3"]
+    )
+    y = jnp.einsum("ecf,efd->ecd", h, lp["w2"]).reshape(e * cap, d)
+    gate = (gate_vals.reshape(-1) * valid).astype(x2d.dtype)  # keep bf16 carry
+    y = y[slot] * gate[:, None]
+    out = y.reshape(t, k, d).sum(1)
+
+    if cfg.n_shared_experts:
+        out = out + _dense_ffn(x2d, lp["sw1"], lp["sw3"], lp["sw2"])
+    return out.astype(x2d.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+
+def _layer_fwd(x, lp, cfg: LMConfig, positions):
+    h = rms_norm(x, lp["ln1"], cfg.rms_eps)
+    attn = _mla_train(h, lp, cfg, positions) if cfg.attn == "mla" else _gqa_train(
+        h, lp, cfg, positions
+    )
+    x = x + attn
+    h = rms_norm(x, lp["ln2"], cfg.rms_eps)
+    if cfg.is_moe:
+        b, s, d = h.shape
+        out, aux = moe_ffn(h.reshape(b * s, d), lp, cfg)
+        x = x + out.reshape(b, s, d)
+    else:
+        aux = jnp.float32(0.0)
+        x = x + _dense_ffn(h, lp["w1"], lp["w3"], lp["w2"])
+    return shard(x, DATA), aux
+
+
+def lm_forward(params, tokens, cfg: LMConfig):
+    """tokens: (B, S) -> logits (B, S, vocab_pad)."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    x = shard(x, DATA)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    body = partial(_layer_fwd, cfg=cfg, positions=positions)
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+
+    def scan_body(x, lp):
+        x, aux = body(x, lp)
+        return x, aux
+
+    x, auxes = jax.lax.scan(scan_body, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    unembed = params.get("unembed")
+    if unembed is None:
+        unembed = params["embed"].T
+    logits = x @ unembed.astype(cfg.dtype)
+    return shard(logits, DATA, None, MODEL), auxes.sum()
+
+
+def lm_loss(params, batch, cfg: LMConfig, aux_weight: float = 0.01):
+    tokens, labels = batch["tokens"], batch["labels"]
+    logits, aux = lm_forward(params, tokens, cfg)
+    logits = logits.astype(jnp.float32)
+    # mask vocab padding
+    neg = jnp.finfo(jnp.float32).min
+    pad_mask = jnp.arange(cfg.vocab_pad) < cfg.vocab
+    logits = jnp.where(pad_mask, logits, neg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = -ll.mean()
+    return loss + aux_weight * aux, {"loss": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None):
+    """KV cache pytree for decode.  GQA: K/V per head; MLA: latent + rope
+    (the compression that makes 500k-context decode cheap)."""
+    dt = dtype or cfg.dtype
+    if cfg.attn == "mla":
+        return {
+            "c_kv": jnp.zeros(
+                (cfg.n_layers, batch, max_len, cfg.kv_lora_rank), dt
+            ),
+            "k_rope": jnp.zeros(
+                (cfg.n_layers, batch, max_len, cfg.qk_rope_dim), dt
+            ),
+        }
+    return {
+        "k": jnp.zeros(
+            (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dt
+        ),
+        "v": jnp.zeros(
+            (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dt
+        ),
+    }
+
+
+def cache_specs(cfg: LMConfig, s_axis=MODEL):
+    if cfg.attn == "mla":
+        return {
+            "c_kv": (None, DATA, s_axis, None),
+            "k_rope": (None, DATA, s_axis, None),
+        }
+    return {
+        "k": (None, DATA, s_axis, None, None),
+        "v": (None, DATA, s_axis, None, None),
+    }
+
+
+def _decode_attn_jnp(q, k, v, kv_len):
+    """(B,Hkv,G,D) x (B,S,Hkv,D) -> (B,Hkv,G,Dv); fp32 softmax, masked to
+    kv_len.  Same math as kernels/decode_attn.py (which serves as the TPU
+    path); this jnp path is what the dry-run lowers."""
+    s = k.shape[1]
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = jnp.einsum(
+        "bhgd,bshd->bhgs", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    mask = jnp.arange(s)[None, None, None, :] < kv_len[:, None, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum(
+        "bhgs,bshd->bhgd", w, v, preferred_element_type=jnp.float32
+    )
+
+
+def _gqa_decode(x, lp, cache_k, cache_v, kv_len, cfg: LMConfig):
+    """x: (B, d) one token; cache_k/v: (B, S, Kv, hd)."""
+    b, d = x.shape
+    hd, h, kvh = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = x @ lp["wq"]
+    k = x @ lp["wk"]
+    v = x @ lp["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    pos = kv_len.astype(jnp.float32)  # (B,)
+    q = apply_rope(
+        q.reshape(b, 1, h, hd), pos[:, None], cfg.rope_theta
+    ).reshape(b, kvh, cfg.group_size, hd)
+    k = apply_rope(k.reshape(b, 1, kvh, hd), pos[:, None], cfg.rope_theta)[:, 0]
+    v = v.reshape(b, kvh, hd)
+
+    # append to cache at position kv_len (uniform across batch in our shapes)
+    p0 = kv_len[0]
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype)[:, None], p0, axis=1
+    )
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype)[:, None], p0, axis=1
+    )
+    o = _decode_attn_jnp(q, cache_k, cache_v, kv_len + 1)  # (B,Kv,G,hd)
+    o = o.reshape(b, h * hd).astype(x.dtype)
+    return o @ lp["wo"], cache_k, cache_v
+
+
+def _mla_decode(x, lp, c_kv_cache, k_rope_cache, kv_len, cfg: LMConfig):
+    """Absorbed MLA decode: score against the latent cache directly."""
+    b, d = x.shape
+    h = cfg.n_heads
+    nope, rope, vd, r = (
+        cfg.qk_nope_dim,
+        cfg.qk_rope_dim,
+        cfg.v_head_dim,
+        cfg.kv_lora_rank,
+    )
+    pos = kv_len.astype(jnp.float32)
+    q = rms_norm(x @ lp["wq_a"], lp["q_norm"], cfg.rms_eps) @ lp["wq_b"]
+    q = q.reshape(b, h, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope.reshape(b, 1, h, rope), pos[:, None], cfg.rope_theta)[
+        :, 0
+    ]
+
+    c_kv = rms_norm(x @ lp["wkv_a"], lp["kv_norm"], cfg.rms_eps)  # (B, r)
+    k_rope_new = apply_rope(
+        (x @ lp["wk_rope"]).reshape(b, 1, 1, rope), pos[:, None], cfg.rope_theta
+    )[:, 0, 0]
+
+    p0 = kv_len[0]
+    c_kv_cache = jax.lax.dynamic_update_slice_in_dim(
+        c_kv_cache, c_kv.astype(c_kv_cache.dtype)[:, None], p0, axis=1
+    )
+    k_rope_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_rope_cache, k_rope_new.astype(k_rope_cache.dtype)[:, None], p0, axis=1
+    )
+
+    # absorb W_k_nope into q: q_eff (B, H, r)
+    wkn = lp["wk_nope"].reshape(r, h, nope)
+    q_eff = jnp.einsum(
+        "bhn,rhn->bhr", q_nope, wkn, preferred_element_type=jnp.float32
+    ).astype(q_nope.dtype)
+    s_lat = jnp.einsum(
+        "bhr,bsr->bhs", q_eff, c_kv_cache, preferred_element_type=jnp.float32
+    )
+    s_rope = jnp.einsum(
+        "bhr,bsr->bhs", q_rope, k_rope_cache, preferred_element_type=jnp.float32
+    )
+    scale = 1.0 / np.sqrt(nope + rope)
+    logits = (s_lat + s_rope) * scale
+    smax = c_kv_cache.shape[1]
+    mask = jnp.arange(smax)[None, None, :] < (kv_len + 1)[:, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1).astype(c_kv_cache.dtype)
+    ctx = jnp.einsum(
+        "bhs,bsr->bhr", w, c_kv_cache, preferred_element_type=jnp.float32
+    ).astype(c_kv_cache.dtype)  # (B,H,r)
+    wv = lp["wv"].reshape(r, h, vd)
+    o = jnp.einsum("bhr,rhv->bhv", ctx, wv, preferred_element_type=jnp.float32)
+    o = o.reshape(b, h * vd).astype(x.dtype)
+    return o @ lp["wo"], c_kv_cache, k_rope_cache
+
+
+def lm_decode_step(params, cache, tokens, kv_len, cfg: LMConfig):
+    """One decode step.  tokens: (B,) int32; kv_len: (B,) current lengths.
+
+    Returns (logits (B, vocab_pad), new_cache).
+    """
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    x = shard(x, DATA)
+
+    is_mla = cfg.attn == "mla"
+
+    def body(carry, lp_and_cache):
+        x = carry
+        if is_mla:
+            lp, ck, kr = lp_and_cache
+            h = rms_norm(x, lp["ln1"], cfg.rms_eps)
+            attn, ck, kr = _mla_decode(h, lp, ck, kr, kv_len, cfg)
+            new_cache = (ck, kr)
+        else:
+            lp, k_c, v_c = lp_and_cache
+            h = rms_norm(x, lp["ln1"], cfg.rms_eps)
+            attn, k_c, v_c = _gqa_decode(h, lp, k_c, v_c, kv_len, cfg)
+            new_cache = (k_c, v_c)
+        x = x + attn
+        h = rms_norm(x, lp["ln2"], cfg.rms_eps)
+        if cfg.is_moe:
+            out, _ = moe_ffn(h, lp, cfg)
+            x = x + out
+        else:
+            x = x + _dense_ffn(h, lp["w1"], lp["w3"], lp["w2"])
+        return x, new_cache
+
+    if is_mla:
+        xs = (params["layers"], cache["c_kv"], cache["k_rope"])
+    else:
+        xs = (params["layers"], cache["k"], cache["v"])
+    x, new_caches = jax.lax.scan(body, x, xs)
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    unembed = params.get("unembed")
+    if unembed is None:
+        unembed = params["embed"].T
+    logits = x @ unembed.astype(cfg.dtype)
+    if is_mla:
+        cache = {"c_kv": new_caches[0], "k_rope": new_caches[1]}
+    else:
+        cache = {"k": new_caches[0], "v": new_caches[1]}
+    return shard(logits, DATA, MODEL), cache
+
+
+def lm_prefill(params, tokens, cfg: LMConfig):
+    """Prefill forward: logits for the whole prompt (cache write elided in
+    the dry-run cell; the compute/memory profile is the full forward)."""
+    logits, _ = lm_forward(params, tokens, cfg)
+    return logits

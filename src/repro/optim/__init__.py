@@ -1,0 +1,12 @@
+"""Optimizers + distributed-optimization tricks."""
+
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, cosine_lr
+from repro.optim.compression import compressed_pod_mean
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "cosine_lr",
+    "compressed_pod_mean",
+]

@@ -1,0 +1,101 @@
+"""AdamW with decoupled weight decay, global-norm clipping, cosine schedule.
+
+Optimizer state is kept in fp32 regardless of (bf16) param dtype: ``m``,
+``v``, and an fp32 master copy when params are low-precision — the standard
+mixed-precision recipe.  State shards exactly like the params (the specs
+tree is reused leaf-for-leaf), which is what makes the 42B-param Phi-3.5-MoE
+cell fit: params+m+v+master ~ 14 bytes/param spread over 256 chips.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def cosine_lr(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog)
+    )
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def _needs_master(p) -> bool:
+    return p.dtype in (jnp.bfloat16, jnp.float16)
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros32, params),
+        "v": jax.tree.map(zeros32, params),
+    }
+    if any(_needs_master(p) for p in jax.tree.leaves(params)):
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params
+        )
+    return state
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = cosine_lr(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    masters = state.get("master", params)
+
+    def upd(g, m, v, p, master):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        mw = master.astype(jnp.float32)
+        new = mw - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * mw)
+        return new.astype(p.dtype), m, v, new
+
+    flat = jax.tree.map(upd, grads, state["m"], state["v"], params, masters)
+    new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    if "master" in state:
+        new_state["master"] = jax.tree.map(
+            lambda t: t[3], flat, is_leaf=lambda t: isinstance(t, tuple)
+        )
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,68 @@
+"""Gradient compression for the slow (cross-pod) links.
+
+int8 quantization with error feedback [1-bit Adam / EF-SGD lineage]:
+each pod keeps a residual buffer; gradients are quantized per-tensor to
+int8 before crossing the pod boundary and the quantization error is added
+back next step.  Wire bytes across the pod axis drop 4x (8x vs a ring
+all-reduce of fp32, since the all-gather+local-reduce pattern halves hops
+at pod count 2).
+
+Used via ``shard_map`` over the ``pod`` axis only — intra-pod reduction
+stays fp32 (ICI within a pod is fast; the paper's lesson applied: optimize
+the slow tier of the hierarchy, keep the fast tier simple).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _quantize(x):
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_pod_mean(grads, residual, mesh, axis: str = "pod"):
+    """Mean-reduce ``grads`` across the pod axis with int8 + error feedback.
+
+    grads/residual: pytrees replicated across ``axis`` shards after the
+    intra-pod reduction.  Returns (reduced_grads, new_residual).
+    """
+    n = mesh.shape[axis]
+
+    def per_leaf(g, r):
+        def body(g, r):
+            g = g.astype(jnp.float32) + r
+            q, scale = _quantize(g)
+            new_r = g - _dequantize(q, scale)
+            # all-gather int8 + local dequant-sum: int8 on the wire
+            qs = jax.lax.all_gather(q, axis)  # (n, ...)
+            ss = jax.lax.all_gather(scale, axis)  # (n,)
+            total = jnp.tensordot(
+                ss, qs.astype(jnp.float32), axes=([0], [0])
+            )
+            return total / n, new_r
+
+        spec = P()  # replicated within-pod view; pod axis mapped
+        return jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(spec, spec),
+            out_specs=(spec, spec),
+            check_vma=False,
+        )(g, r)
+
+    out = jax.tree.map(per_leaf, grads, residual)
+    red = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    res = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return red, res

@@ -1,0 +1,6 @@
+"""Serving: KV-cache-as-segments + batched decode driver."""
+
+from repro.serve.kv_segments import KVSegmentStore
+from repro.serve.engine import ServeEngine
+
+__all__ = ["KVSegmentStore", "ServeEngine"]

@@ -1,0 +1,152 @@
+"""ServeEngine: batched decode driver over the KV-segment store.
+
+Small-model serving loop used by examples/serve_lm.py and the NRT-style
+serving benchmark: requests arrive, prefill seals their prompt KV into
+immutable segments, decode appends to the mutable tail, finished requests
+release their blocks (shared prefix blocks survive via refcounting).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import (
+    LMConfig,
+    init_kv_cache,
+    lm_decode_step,
+    lm_forward,
+)
+from repro.serve.kv_segments import KVSegmentStore
+
+
+@dataclasses.dataclass
+class Request:
+    rid: str
+    prompt: np.ndarray  # (S,)
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Static-batch decode engine (batch slots, continuous refill)."""
+
+    def __init__(
+        self,
+        params,
+        cfg: LMConfig,
+        batch_slots: int = 8,
+        max_len: int = 512,
+        heap_path: Optional[str] = None,
+    ) -> None:
+        self.params = params
+        self.cfg = cfg
+        self.batch = batch_slots
+        self.max_len = max_len
+        self.cache = init_kv_cache(cfg, batch_slots, max_len, dtype=jnp.float32)
+        self.kv_len = np.zeros(batch_slots, np.int32)
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.store = KVSegmentStore(
+            cfg.n_layers,
+            cfg.n_kv_heads,
+            cfg.head_dim,
+            block_size=64,
+            heap_path=heap_path,
+        )
+        self._decode = jax.jit(
+            lambda p, c, t, l: lm_decode_step(p, c, t, l, cfg)
+        )
+        self.completed: List[Request] = []
+
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def admit(self, req: Request) -> bool:
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        self.slots[slot] = req
+        self.store.new_request(req.rid)
+        # prefill token-by-token through the decode path (single-slot state)
+        self.kv_len[slot] = 0
+        for t in req.prompt:
+            self._step_one(slot, int(t))
+        return True
+
+    def _mirror_kv(self, slot: int) -> None:
+        """Copy the newest token's K/V into the segment store (seals blocks,
+        dedupes shared prefixes, enables flush-to-byte-tier)."""
+        req = self.slots[slot]
+        if req is None or self.cfg.attn == "mla":
+            return
+        pos = int(self.kv_len[slot]) - 1
+        k_tok = np.asarray(self.cache["k"][:, slot, pos]).astype(np.float16)
+        v_tok = np.asarray(self.cache["v"][:, slot, pos]).astype(np.float16)
+        self.store.append(req.rid, k_tok, v_tok)
+
+    def _step_one(self, slot: int, token: int) -> int:
+        toks = np.zeros(self.batch, np.int32)
+        toks[slot] = token
+        kvl = jnp.asarray(self.kv_len)
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(toks), kvl
+        )
+        self.kv_len[slot] += 1
+        self._mirror_kv(slot)
+        return int(jnp.argmax(logits[slot, : self.cfg.vocab]))
+
+    def step(self) -> int:
+        """One decode step across active slots; returns #active."""
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return 0
+        toks = np.zeros(self.batch, np.int32)
+        for i in active:
+            req = self.slots[i]
+            toks[i] = req.out[-1] if req.out else (req.prompt[-1] if len(req.prompt) else 1)
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(self.kv_len)
+        )
+        nxt = np.asarray(jnp.argmax(logits[:, : self.cfg.vocab], axis=-1))
+        for i in active:
+            req = self.slots[i]
+            self.kv_len[i] += 1
+            self._mirror_kv(i)
+            req.out.append(int(nxt[i]))
+            if len(req.out) >= req.max_new or self.kv_len[i] >= self.max_len - 1:
+                req.done = True
+                self.completed.append(req)
+                self.store.release(req.rid)
+                self.slots[i] = None
+                self.kv_len[i] = 0
+        return len(active)
+
+    def run(self, requests: List[Request]) -> Dict:
+        t0 = time.perf_counter()
+        pending = list(requests)
+        steps = 0
+        while pending or any(s is not None for s in self.slots):
+            while pending and self._free_slot() is not None:
+                self.admit(pending.pop(0))
+            if self.step() == 0 and not pending:
+                break
+            steps += 1
+        wall = time.perf_counter() - t0
+        toks = sum(len(r.out) for r in self.completed)
+        return {
+            "requests": len(self.completed),
+            "decode_steps": steps,
+            "tokens": toks,
+            "wall_s": wall,
+            "tok_per_s": toks / max(wall, 1e-9),
+            "kv_stats": dict(self.store.stats),
+        }

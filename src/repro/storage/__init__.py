@@ -1,0 +1,24 @@
+"""Storage substrate: device models, persistence paths, tiered checkpoint store.
+
+This package is the paper's center of gravity: it models the three storage
+technologies the paper compares (DRAM / NVDIMM / SSD), and implements the two
+*access paths* whose difference is the paper's main insight:
+
+  - the **file path**: serialize -> syscall write -> fsync (Lucene's Directory
+    over ext4, with or without DAX).  Software overhead + page-cache
+    indirection masks the device speed (the paper's NRT negative result).
+  - the **byte path**: load/store directly into a persistent heap
+    (the paper's proposed future work, which we build).
+"""
+
+from repro.storage.device_model import DeviceModel, SSD, PMEM, DRAM, DEVICE_MODELS
+from repro.storage.heap import PersistentHeap
+
+__all__ = [
+    "DeviceModel",
+    "SSD",
+    "PMEM",
+    "DRAM",
+    "DEVICE_MODELS",
+    "PersistentHeap",
+]

@@ -1,0 +1,108 @@
+"""Calibrated storage-device cost models.
+
+The paper could not measure real 3D-XPoint either (their footnote 2: "the
+numbers for 3D-XPoint are speculative"); it carved DRAM into /dev/pmem and
+cited the standard latency table [jboner/2841832].  We use the same cited
+constants, so the *modeled* commit/search times in the benchmarks are a
+faithful stand-in, and we additionally measure real wall-clock on this
+machine's storage for the two access paths.
+
+Every charge is accounted in both dimensions:
+  t = n_ops * (software_overhead + device_latency) + bytes / bandwidth
+
+``software_overhead`` is the file-abstraction tax (syscall + VFS + ext4
+journaling amortized per op).  The byte path sets it to ~0 per store, with a
+single barrier per commit (``sfence + clwb`` analogue).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+#: Lucene-codec encode rate (vints, checksums, block packing).  This CPU
+#: cost is device-independent on the file path and is exactly what the byte
+#: path (load/store, no serialization) eliminates.  ~220 MB/s matches
+#: luceneutil-class flush/commit encode rates on the paper's Xeon
+#: (stored fields + postings + doc values codecs).
+SERIALIZE_BW_Bps = 220e6
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceModel:
+    """Latency/bandwidth model of one storage technology."""
+
+    name: str
+    #: seconds per device-level access (the paper's cited numbers:
+    #: DRAM 100ns, 3D-XPoint DIMM 500ns, SATA SSD 30us).
+    device_latency_s: float
+    #: sustained sequential write bandwidth, bytes/sec.
+    write_bw_Bps: float
+    #: sustained sequential read bandwidth, bytes/sec.
+    read_bw_Bps: float
+    #: per-syscall/VFS/journal overhead when reached through a filesystem.
+    fs_op_overhead_s: float
+    #: extra fsync barrier cost through the filesystem (flush of dirty pages,
+    #: journal commit).  The byte path replaces this with a cacheline flush
+    #: barrier costed at ``byte_barrier_s``.
+    fsync_base_s: float
+    #: barrier cost for the byte-addressable path (CLWB+SFENCE analogue).
+    byte_barrier_s: float = 200e-9
+
+    def file_write_time(self, n_ops: int, n_bytes: int) -> float:
+        """Modeled time to write through the file abstraction (no fsync)."""
+        return n_ops * (self.fs_op_overhead_s + self.device_latency_s) + (
+            n_bytes / self.write_bw_Bps
+        )
+
+    def fsync_time(self, n_bytes_dirty: int) -> float:
+        """Modeled fsync: journal barrier + flushing dirty bytes to media."""
+        return self.fsync_base_s + n_bytes_dirty / self.write_bw_Bps
+
+    def file_read_time(self, n_ops: int, n_bytes: int) -> float:
+        return n_ops * (self.fs_op_overhead_s + self.device_latency_s) + (
+            n_bytes / self.read_bw_Bps
+        )
+
+    def byte_store_time(self, n_bytes: int) -> float:
+        """Modeled time for direct load/store persistence (no serialization,
+        no syscalls): bandwidth-bound stores + one barrier."""
+        return self.byte_barrier_s + n_bytes / self.write_bw_Bps
+
+    def byte_load_time(self, n_bytes: int) -> float:
+        return self.device_latency_s + n_bytes / self.read_bw_Bps
+
+
+# Constants: latency from the paper's citation [6] (jboner gist), bandwidths
+# from public SATA3/DDR4/Optane-DIMM figures.  SATA3.0 tops out at 6 Gbps on
+# the wire; ~520 MB/s is the usual sustained figure for the paper's class of
+# SSD.  Optane DC PMM: ~2.3 GB/s write, ~6.6 GB/s read per DIMM.  DDR4-2400:
+# ~17 GB/s per channel (the paper's RAM-carved pmem behaves like this).
+SSD = DeviceModel(
+    name="ssd",
+    device_latency_s=30e-6,
+    write_bw_Bps=520e6,
+    read_bw_Bps=550e6,
+    fs_op_overhead_s=6e-6,
+    fsync_base_s=400e-6,
+)
+
+PMEM = DeviceModel(
+    name="pmem",
+    device_latency_s=500e-9,
+    write_bw_Bps=2.3e9,
+    read_bw_Bps=6.6e9,
+    fs_op_overhead_s=6e-6,  # same VFS path: this is exactly the paper's point
+    fsync_base_s=30e-6,  # DAX fsync: no page writeback, metadata journal only
+)
+
+DRAM = DeviceModel(
+    name="dram",
+    device_latency_s=100e-9,
+    write_bw_Bps=17e9,
+    read_bw_Bps=17e9,
+    fs_op_overhead_s=6e-6,
+    fsync_base_s=10e-6,
+)
+
+DEVICE_MODELS = {"ssd": SSD, "pmem": PMEM, "dram": DRAM}

@@ -1,0 +1,152 @@
+"""Persistent byte-addressable heap: the paper's proposed future work, built.
+
+A ``PersistentHeap`` is a flat region backed by ``np.memmap`` into which numpy
+arrays are *stored* (slice assignment = CPU stores into persistent memory) and
+from which they are *loaded* as zero-copy views.  There is no serialization
+step and no per-array syscall: the exact mechanism the paper says Lucene would
+need to exploit NVM ("read/written directly into NVM using loads/stores").
+
+Layout (all little-endian):
+
+    [0:8)    magic  b"RPRHEAP1"
+    [8:16)   committed watermark (uint64) -- bytes before this offset are
+             durable as of the last barrier; this is the "commit point".
+    [16:24)  bump-allocator tail (uint64)
+    [24:...) allocations, each 64-byte aligned:
+             [dtype code u32][ndim u32][shape u64 x ndim][payload]
+
+Durability barrier: on real pmem this is CLWB+SFENCE; on a file-backed memmap
+we ``flush()`` the mapping.  Crucially the cost is *one barrier per commit*,
+not per file: commit latency stops scaling with segment count.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+_MAGIC = b"RPRHEAP1"
+_HEADER = 24
+_ALIGN = 64
+
+# stable wire codes for dtypes we store
+_DTYPES: List[np.dtype] = [
+    np.dtype(d)
+    for d in (
+        "int8", "int16", "int32", "int64",
+        "uint8", "uint16", "uint32", "uint64",
+        "float16", "float32", "float64", "bool",
+    )
+]
+_DTYPE_CODE: Dict[np.dtype, int] = {d: i for i, d in enumerate(_DTYPES)}
+
+
+def _align(n: int) -> int:
+    return (n + _ALIGN - 1) & ~(_ALIGN - 1)
+
+
+class PersistentHeap:
+    """Bump-allocated persistent array heap with a commit watermark."""
+
+    def __init__(self, path: str, capacity_bytes: int = 1 << 28):
+        self.path = path
+        exists = os.path.exists(path) and os.path.getsize(path) >= _HEADER
+        if not exists:
+            # create sparse file of the full capacity
+            with open(path, "wb") as f:
+                f.truncate(capacity_bytes)
+            self._mm = np.memmap(path, dtype=np.uint8, mode="r+")
+            self._mm[0:8] = np.frombuffer(_MAGIC, dtype=np.uint8)
+            self._set_u64(8, _HEADER)   # committed watermark
+            self._set_u64(16, _HEADER)  # tail
+            self._mm.flush()
+        else:
+            self._mm = np.memmap(path, dtype=np.uint8, mode="r+")
+            if bytes(self._mm[0:8]) != _MAGIC:
+                raise ValueError(f"{path}: not a repro heap")
+
+    # -- header accessors ---------------------------------------------------
+    def _get_u64(self, off: int) -> int:
+        return int(self._mm[off : off + 8].view(np.uint64)[0])
+
+    def _set_u64(self, off: int, val: int) -> None:
+        self._mm[off : off + 8].view(np.uint64)[0] = val
+
+    @property
+    def committed(self) -> int:
+        return self._get_u64(8)
+
+    @property
+    def tail(self) -> int:
+        return self._get_u64(16)
+
+    @property
+    def capacity(self) -> int:
+        return self._mm.shape[0]
+
+    # -- store / load -------------------------------------------------------
+    def store(self, arr: np.ndarray) -> int:
+        """Store one array with CPU stores; returns its heap offset.
+
+        Not durable until :meth:`barrier` is called (mirrors store+CLWB
+        semantics: data is in the memory hierarchy, persistence point is the
+        fence).
+        """
+        arr = np.ascontiguousarray(arr)
+        code = _DTYPE_CODE[arr.dtype]
+        meta = np.empty(2 + arr.ndim, dtype=np.uint64)
+        meta[0] = (code << 32) | arr.ndim
+        meta[1] = arr.nbytes
+        meta[2:] = arr.shape
+        off = _align(self.tail)
+        need = off + meta.nbytes + _align(arr.nbytes)
+        if need > self.capacity:
+            self._grow(max(need, self.capacity * 2))
+        self._mm[off : off + meta.nbytes] = meta.view(np.uint8)
+        payload = off + meta.nbytes
+        # the store: byte-addressable write, no serialization
+        self._mm[payload : payload + arr.nbytes] = arr.view(np.uint8).reshape(-1)
+        self._set_u64(16, payload + arr.nbytes)
+        return off
+
+    def load(self, off: int) -> np.ndarray:
+        """Zero-copy load of the array stored at ``off``."""
+        head = self._mm[off : off + 16].view(np.uint64)
+        code_ndim = int(head[0])
+        code, ndim = code_ndim >> 32, code_ndim & 0xFFFFFFFF
+        nbytes = int(head[1])
+        shape = tuple(
+            int(x) for x in self._mm[off + 16 : off + 16 + 8 * ndim].view(np.uint64)
+        )
+        payload = off + 16 + 8 * ndim
+        dtype = _DTYPES[code]
+        flat = self._mm[payload : payload + nbytes].view(dtype)
+        return flat.reshape(shape)
+
+    def barrier(self) -> None:
+        """Durability fence: everything stored so far becomes committed.
+
+        One barrier per commit -- this is what collapses Lucene's
+        fsync-per-file commit cost on the byte path.
+        """
+        tail = self.tail
+        self._mm.flush()
+        self._set_u64(8, tail)
+        self._mm.flush()
+
+    def truncate_to_committed(self) -> None:
+        """Crash simulation: discard everything past the commit watermark."""
+        self._set_u64(16, self.committed)
+
+    def _grow(self, new_cap: int) -> None:
+        self._mm.flush()
+        del self._mm
+        with open(self.path, "r+b") as f:
+            f.truncate(new_cap)
+        self._mm = np.memmap(self.path, dtype=np.uint8, mode="r+")
+
+    def close(self) -> None:
+        self._mm.flush()
+        del self._mm

@@ -1,0 +1,6 @@
+"""Training substrate: tiered checkpointing (the paper's durability
+semantics applied to training state), train loop, elastic restart."""
+
+from repro.train.checkpoint import CheckpointManager, CheckpointConfig
+
+__all__ = ["CheckpointManager", "CheckpointConfig"]

@@ -1,0 +1,12 @@
+import os
+
+# Tests run single-device (the dry-run subprocess sets its own device count).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

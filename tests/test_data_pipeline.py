@@ -1,0 +1,68 @@
+"""Data substrate: corpus determinism, LM batches, samplers, recsys streams."""
+
+import numpy as np
+
+from repro.data.corpus import CorpusConfig, synthetic_corpus
+from repro.data.graph import NeighborSampler, synthetic_graph
+from repro.data.lm import lm_batches
+from repro.data.recsys_data import bert4rec_batches, ctr_batches, twotower_batches
+
+
+def test_corpus_deterministic():
+    a = list(synthetic_corpus(CorpusConfig(n_docs=20, seed=3)))
+    b = list(synthetic_corpus(CorpusConfig(n_docs=20, seed=3)))
+    assert a == b
+    c = list(synthetic_corpus(CorpusConfig(n_docs=20, seed=4)))
+    assert a != c
+
+
+def test_lm_batches_shapes():
+    it = lm_batches(batch=4, seq=32, vocab=1000, n_docs=500)
+    b = next(it)
+    assert b["tokens"].shape == (4, 32)
+    assert b["labels"].shape == (4, 32)
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+    assert b["tokens"].min() >= 1
+    assert b["tokens"].max() < 1000
+
+
+def test_neighbor_sampler_static_shapes():
+    g = synthetic_graph(2000, 10, 8, 4, seed=0)
+    s = NeighborSampler(g, fanout=(5, 3), seed=1)
+    n_static = 32 * (1 + 5 + 15)
+    e_static = 32 * 5 * (1 + 3)
+    for _ in range(3):
+        seeds = np.random.default_rng(0).choice(2000, 32, replace=False)
+        sub = s.sample(seeds)
+        assert sub["node_feats"].shape == (n_static, 8)
+        assert sub["edge_index"].shape == (2, e_static)
+        assert sub["label_mask"].sum() == 32  # supervise seeds only
+        # all edges reference in-range local ids
+        assert sub["edge_index"].max() < n_static
+
+
+def test_ctr_batches():
+    it = ctr_batches(64, 10, 1000, seed=0)
+    b = next(it)
+    assert b["ids"].shape == (64, 10)
+    # field offsets: ids of field j live in [j*1000, (j+1)*1000)
+    for j in range(10):
+        assert (b["ids"][:, j] // 1000 == j).all()
+    assert set(np.unique(b["label"])) <= {0, 1}
+
+
+def test_bert4rec_batches_mask():
+    b = next(bert4rec_batches(8, 100, 20, seed=0))
+    m = 20 // 5
+    assert b["mask_positions"].shape == (8, m)
+    # masked positions carry the MASK id; labels are the original items
+    taken = np.take_along_axis(b["seq"], b["mask_positions"], axis=1)
+    assert (taken == 101).all()
+    assert (b["mask_labels"] >= 1).all() and (b["mask_labels"] <= 100).all()
+
+
+def test_twotower_batches():
+    b = next(twotower_batches(16, 1000, 500, 8, 4, seed=0))
+    assert b["user_hist"].shape == (16, 8)
+    assert b["item_feats"].shape == (16, 4)

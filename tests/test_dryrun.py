@@ -1,0 +1,77 @@
+"""Dry-run smoke in a subprocess (needs its own XLA_FLAGS device count).
+
+The full 40-cell x 2-mesh matrix runs via
+``python -m repro.launch.dryrun --all`` (results in dryrun_results/); here we
+verify the machinery end-to-end on one representative cell per family.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_cell(tmp_path, arch, shape):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", arch, "--shape", shape,
+            "--mesh", "multipod", "--out", str(tmp_path),
+        ],
+        env=env, capture_output=True, text=True, timeout=1200, cwd=ROOT,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    recs = [f for f in os.listdir(tmp_path) if f.endswith(".json")]
+    assert len(recs) == 1
+    with open(os.path.join(tmp_path, recs[0])) as f:
+        return json.load(f)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "arch,shape",
+    [
+        ("smollm-360m", "train_4k"),
+        ("nequip", "molecule"),
+        ("two-tower-retrieval", "retrieval_cand"),
+    ],
+)
+def test_dryrun_cell(tmp_path, arch, shape):
+    rec = _run_cell(tmp_path, arch, shape)
+    assert rec["n_chips"] == 512
+    assert rec["mesh"] == [2, 16, 16]
+    assert rec["memory"]["fits_hbm_tpu_est"], rec["memory"]
+    rl = rec["roofline"]
+    assert rl["compute_s"] > 0
+    assert rl["dominant"] in ("compute", "memory", "collective")
+
+
+def test_hlo_cost_parser_known_flops():
+    """The while-aware HLO analyzer reproduces analytic matmul FLOPs."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.distributed.hlo import analyze_hlo
+
+    L, B, D, F = 3, 8, 32, 64
+
+    def f(w, x):
+        def body(h, wl):
+            return jnp.tanh(h @ wl), None
+        h, _ = jax.lax.scan(body, x, w)
+        return h.sum()
+
+    w = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+    x = jax.ShapeDtypeStruct((B, D), jnp.float32)
+    c = jax.jit(f).lower(w, x).compile()
+    cost = analyze_hlo(c.as_text())
+    analytic = 2 * B * D * D * L  # dots only
+    assert cost.flops >= analytic, (cost.flops, analytic)
+    assert cost.flops <= analytic * 1.3  # + elementwise slack
+    assert L in cost.while_trips

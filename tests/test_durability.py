@@ -1,0 +1,98 @@
+"""Durability semantics across the three directories (paper §2.2-2.3).
+
+The contract being reproduced:
+  * buffered docs: searchable only after reopen (flush), durable only after
+    commit;
+  * NRT flush: searchable, NOT durable on the file path (page cache),
+    durable-at-next-barrier on the byte path;
+  * crash: the file path keeps only commit points; the byte path keeps the
+    committed heap watermark; RAM keeps nothing.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import SearchEngine
+from repro.core.engine import make_directory
+from repro.core.search import TermQuery
+
+
+def _fill(eng, n=30, prefix="alpha"):
+    for i in range(n):
+        eng.add(
+            {"body": f"{prefix} token{i % 7} common"},
+            {"month": i % 12},
+        )
+
+
+def test_buffer_not_searchable_until_reopen(tmp_path):
+    eng = SearchEngine("fs-ssd", str(tmp_path / "a"))
+    _fill(eng)
+    assert eng.search(TermQuery("body", "common")).total_hits == 0
+    eng.reopen()
+    assert eng.search(TermQuery("body", "common")).total_hits == 30
+
+
+@pytest.mark.parametrize("kind", ["fs-ssd", "fs-pmem", "byte-pmem"])
+def test_commit_survives_crash(tmp_path, kind):
+    eng = SearchEngine(kind, str(tmp_path / "d"))
+    _fill(eng, 40)
+    eng.commit()
+    _fill(eng, 25, prefix="beta")  # buffered, uncommitted
+    eng.flush()  # flushed, still uncommitted
+    eng.reopen()
+    assert eng.search(TermQuery("body", "beta"), k=5).total_hits == 25
+
+    eng2 = eng.crash_and_recover()
+    td = eng2.search(TermQuery("body", "common"))
+    assert td.total_hits == 40  # committed docs survive
+    assert eng2.search(TermQuery("body", "beta")).total_hits == 0  # lost
+
+
+def test_ram_directory_loses_everything(tmp_path):
+    eng = SearchEngine("ram")
+    _fill(eng)
+    eng.commit()
+    eng2 = eng.crash_and_recover()
+    assert eng2.search(TermQuery("body", "common")).total_hits == 0
+
+
+def test_byte_path_commit_is_cheap(tmp_path):
+    """The byte path's *modeled* commit cost must not scale with data size —
+    one barrier — while the file path's fsync does (the paper's Fig 3
+    mechanism)."""
+    fs = SearchEngine("fs-ssd", str(tmp_path / "fs"))
+    by = SearchEngine("byte-pmem", str(tmp_path / "by"))
+    for eng in (fs, by):
+        _fill(eng, 60)
+    fs.commit()
+    by.commit()
+    fs_commit = fs.directory.clock.modeled["commit"]
+    by_commit = by.directory.clock.modeled["commit"]
+    assert by_commit < fs_commit / 50, (fs_commit, by_commit)
+
+
+def test_reopened_engine_continues_indexing(tmp_path):
+    path = str(tmp_path / "c")
+    eng = SearchEngine("byte-pmem", path)
+    _fill(eng, 20)
+    eng.commit()
+    eng2 = eng.crash_and_recover()
+    _fill(eng2, 20, prefix="gamma")
+    eng2.commit()
+    eng2.reopen()
+    assert eng2.search(TermQuery("body", "common")).total_hits == 40
+    assert eng2.search(TermQuery("body", "gamma"), k=5).total_hits == 20
+
+
+def test_segment_merge_preserves_results(tmp_path):
+    eng = SearchEngine("ram")
+    eng.writer.merge_factor = 3  # force merges
+    for i in range(120):
+        eng.add({"body": f"tok{i % 11} shared"}, {"month": i % 12})
+        if i % 10 == 9:
+            eng.flush()
+    eng.reopen()
+    assert len(eng.writer.segments) < 12  # merged
+    td = eng.search(TermQuery("body", "shared"))
+    assert td.total_hits == 120

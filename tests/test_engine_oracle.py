@@ -1,0 +1,240 @@
+"""Engine correctness vs a brute-force Python oracle.
+
+The oracle re-implements Lucene scoring semantics directly over the raw
+corpus (dict-of-lists inverted index, explicit BM25); the JAX engine must
+return the same documents and scores for every query family.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import Analyzer, SearchEngine
+from repro.core.search import (
+    BooleanQuery,
+    FacetQuery,
+    PhraseQuery,
+    RangeQuery,
+    SortQuery,
+    TermQuery,
+)
+from repro.data.corpus import CorpusConfig, synthetic_corpus
+
+K1, B = 0.9, 0.4
+
+
+class Oracle:
+    """Brute-force reference implementation."""
+
+    def __init__(self):
+        self.docs = []  # list of (tokens_by_field, dv)
+        self.an = Analyzer()
+
+    def add(self, fields, dv):
+        toks = {f: self.an.tokenize(t) for f, t in fields.items()}
+        self.docs.append((toks, dv, True))
+
+    def delete(self, field, token):
+        for i, (toks, dv, live) in enumerate(self.docs):
+            if token in toks.get(field, []):
+                self.docs[i] = (toks, dv, False)
+
+    @property
+    def n_docs(self):
+        return len(self.docs)
+
+    @property
+    def avgdl(self):
+        tot = sum(sum(len(t) for t in toks.values()) for toks, _, _ in self.docs)
+        return tot / max(self.n_docs, 1)
+
+    def df(self, field, token):
+        return sum(
+            1 for toks, _, _ in self.docs if token in toks.get(field, [])
+        )
+
+    def idf(self, field, token):
+        df = self.df(field, token)
+        return math.log(1 + (self.n_docs - df + 0.5) / (df + 0.5))
+
+    def bm25(self, doc_i, field, token):
+        toks, _, _ = self.docs[doc_i]
+        tf = toks.get(field, []).count(token)
+        if tf == 0:
+            return None
+        dl = sum(len(t) for t in toks.values())
+        return (
+            self.idf(field, token)
+            * tf
+            * (K1 + 1)
+            / (tf + K1 * (1 - B + B * dl / self.avgdl))
+        )
+
+    def term(self, field, token, k=10):
+        hits = []
+        for i, (toks, dv, live) in enumerate(self.docs):
+            if not live:
+                continue
+            s = self.bm25(i, field, token)
+            if s is not None:
+                hits.append((s, i))
+        hits.sort(key=lambda t: (-t[0], t[1]))
+        return hits[:k], len(hits)
+
+    def boolean(self, terms, mode, k=10):
+        hits = []
+        for i, (toks, dv, live) in enumerate(self.docs):
+            if not live:
+                continue
+            scores = [self.bm25(i, f, t) for f, t in terms]
+            present = [s is not None for s in scores]
+            ok = all(present) if mode == "and" else any(present)
+            if ok:
+                hits.append((sum(s for s in scores if s is not None), i))
+        hits.sort(key=lambda t: (-t[0], t[1]))
+        return hits[:k], len(hits)
+
+    def phrase(self, field, tokens):
+        out = []
+        for i, (toks, dv, live) in enumerate(self.docs):
+            if not live:
+                continue
+            seq = toks.get(field, [])
+            n = sum(
+                1
+                for j in range(len(seq) - len(tokens) + 1)
+                if seq[j : j + len(tokens)] == list(tokens)
+            )
+            if n:
+                out.append(i)
+        return out
+
+    def facet(self, dv_field, n_bins):
+        counts = np.zeros(n_bins)
+        for toks, dv, live in self.docs:
+            if live:
+                counts[dv[dv_field]] += 1
+        return counts
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return list(synthetic_corpus(CorpusConfig(n_docs=300, vocab=500, seed=7)))
+
+
+@pytest.fixture(scope="module")
+def engines(corpus):
+    eng = SearchEngine("ram")
+    orc = Oracle()
+    for i, (fields, dv) in enumerate(corpus):
+        eng.add(fields, dv)
+        orc.add(fields, dv)
+        if (i + 1) % 50 == 0:
+            eng.flush()  # multiple segments
+    eng.commit()
+    eng.reopen()
+    return eng, orc
+
+
+def common_tokens(corpus, n=5):
+    from collections import Counter
+
+    c = Counter()
+    an = Analyzer()
+    for fields, _ in corpus:
+        c.update(set(an.tokenize(fields["body"])))
+    return [t for t, _ in c.most_common(n)]
+
+
+def test_term_query_matches_oracle(engines, corpus):
+    eng, orc = engines
+    for tok in common_tokens(corpus, 8):
+        td = eng.search(TermQuery("body", tok), k=10)
+        ohits, ototal = orc.term("body", tok, k=10)
+        assert td.total_hits == ototal, tok
+        assert list(td.doc_ids) == [i for _, i in ohits], tok
+        np.testing.assert_allclose(
+            td.scores, [s for s, _ in ohits], rtol=1e-4
+        )
+
+
+def test_boolean_and_or(engines, corpus):
+    eng, orc = engines
+    toks = common_tokens(corpus, 4)
+    for mode in ("and", "or"):
+        q = BooleanQuery(
+            (TermQuery("body", toks[0]), TermQuery("body", toks[1])), mode
+        )
+        td = eng.search(q, k=10)
+        ohits, ototal = orc.boolean(
+            [("body", toks[0]), ("body", toks[1])], mode, k=10
+        )
+        assert td.total_hits == ototal, mode
+        assert list(td.doc_ids) == [i for _, i in ohits], mode
+        np.testing.assert_allclose(td.scores, [s for s, _ in ohits], rtol=1e-4)
+
+
+def test_phrase_query(engines, corpus):
+    eng, orc = engines
+    # pick an actual bigram from doc 0
+    an = Analyzer()
+    toks = an.tokenize(corpus[0][0]["body"])
+    bigram = (toks[0], toks[1])
+    td = eng.search(PhraseQuery("body", bigram), k=50)
+    expected = orc.phrase("body", bigram)
+    assert sorted(td.doc_ids.tolist()) == sorted(expected)
+    assert td.total_hits == len(expected)
+
+
+def test_facets_match_oracle(engines):
+    eng, orc = engines
+    td = eng.search(FacetQuery(None, "month", 12))
+    np.testing.assert_array_equal(td.facets, orc.facet("month", 12))
+
+
+def test_range_query(engines):
+    eng, orc = engines
+    td = eng.search(RangeQuery("month", 3, 7), k=10)
+    expected = sum(1 for toks, dv, live in orc.docs if live and 3 <= dv["month"] <= 7)
+    assert td.total_hits == expected
+
+
+def test_sort_query_descending(engines, corpus):
+    eng, orc = engines
+    tok = common_tokens(corpus, 1)[0]
+    td = eng.search(SortQuery(TermQuery("body", tok), "timestamp"), k=10)
+    assert list(td.scores) == sorted(td.scores, reverse=True)
+
+
+def test_deletion_semantics(corpus):
+    eng = SearchEngine("ram")
+    orc = Oracle()
+    for fields, dv in corpus[:100]:
+        eng.add(fields, dv)
+        orc.add(fields, dv)
+    eng.reopen()
+    tok = common_tokens(corpus[:100], 1)[0]
+    before = eng.search(TermQuery("body", tok)).total_hits
+    eng.delete("body", tok)
+    orc.delete("body", tok)
+    eng.reopen()
+    td = eng.search(TermQuery("body", tok))
+    assert td.total_hits == 0
+    # unrelated docs survive
+    other = common_tokens(corpus[:100], 5)[-1]
+    ohits, ototal = orc.term("body", other)
+    assert eng.search(TermQuery("body", other)).total_hits == ototal
+
+
+def test_pallas_searcher_matches_jnp(engines, corpus):
+    eng, orc = engines
+    from repro.core.search import Searcher
+
+    s_pallas = Searcher(eng.writer.segments, use_pallas=True)
+    for tok in common_tokens(corpus, 4):
+        a = eng.search(TermQuery("body", tok), k=10)
+        b = s_pallas.search(TermQuery("body", tok), k=10)
+        assert a.total_hits == b.total_hits
+        assert list(a.doc_ids) == list(b.doc_ids)
+        np.testing.assert_allclose(a.scores, b.scores, rtol=1e-5)

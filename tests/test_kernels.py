@@ -1,0 +1,95 @@
+"""Pallas kernel sweeps: shapes x dtypes vs the pure-jnp oracles (ref.py).
+
+Kernels run with interpret=True on CPU (the Bash-level target is TPU; the
+interpreter executes the same kernel body).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.bm25_topk import bm25_topk_blocks, BLOCK
+
+
+@pytest.mark.parametrize("p", [1024, 2048, 8192])
+@pytest.mark.parametrize("k", [1, 10, 64])
+def test_bm25_topk_shapes(rng, p, k):
+    freqs = jnp.asarray(rng.integers(0, 20, p).astype(np.int32))
+    dl = jnp.asarray(rng.integers(10, 500, p).astype(np.float32))
+    valid = jnp.asarray(rng.random(p) > 0.2)
+    args = (freqs, dl, valid, 1.7, 123.0, 0.9, 0.4)
+    blk_v, blk_i = bm25_topk_blocks(*args, k=k, interpret=True)
+    vals, idx = jax.lax.top_k(blk_v.reshape(-1), k)
+    rv, ri = ref.bm25_topk_ref(*args, k)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rv), rtol=1e-5)
+    # indices must select the same score multiset
+    got = blk_i.reshape(-1)[np.asarray(idx)]
+    s = ref.bm25_scores_ref(*args)
+    np.testing.assert_allclose(
+        np.asarray(s)[np.asarray(got)], np.asarray(rv), rtol=1e-5
+    )
+
+
+def test_bm25_topk_all_invalid(rng):
+    p = BLOCK
+    freqs = jnp.zeros(p, jnp.int32)
+    dl = jnp.ones(p, jnp.float32)
+    valid = jnp.zeros(p, bool)
+    blk_v, blk_i = bm25_topk_blocks(
+        freqs, dl, valid, 1.0, 10.0, 0.9, 0.4, k=5, interpret=True
+    )
+    assert not np.isfinite(np.asarray(blk_v)[:, :5]).any()
+
+
+@pytest.mark.parametrize("t", [1, 2, 4, 7])
+@pytest.mark.parametrize("w", [1024, 5000])
+@pytest.mark.parametrize("mode", ["and", "or"])
+def test_bitset_sweep(rng, t, w, mode):
+    bm = jnp.asarray(rng.integers(0, 2**32, (t, w), dtype=np.uint32))
+    comb, cnt = ops.bitset_combine(bm, mode)
+    rcomb, rcnt = ref.bitset_combine_ref(bm, mode)
+    np.testing.assert_array_equal(np.asarray(comb), np.asarray(rcomb))
+    assert int(cnt) == int(rcnt)
+
+
+@pytest.mark.parametrize(
+    "b,hkv,g,d,s,dv",
+    [
+        (1, 1, 1, 64, 256, 64),     # MHA single
+        (2, 2, 5, 96, 700, 80),     # GQA ragged dims
+        (1, 1, 16, 320, 1024, 128), # MLA-like absorbed
+        (4, 8, 4, 128, 512, 128),   # aligned
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attn_sweep(rng, b, hkv, g, d, s, dv, dtype):
+    q = jnp.asarray(rng.standard_normal((b, hkv, g, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, hkv, s, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, hkv, s, dv)), dtype)
+    kvl = jnp.asarray(rng.integers(1, s + 1, b).astype(np.int32))
+    out = ops.decode_attention(q, k, v, kv_len=kvl)
+    rout = ref.decode_attn_ref(q, k, v, kv_len=kvl)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(rout), rtol=tol, atol=tol
+    )
+
+
+def test_decode_attn_matches_model_path(rng):
+    """Kernel == the jnp decode attention used by serve_step."""
+    from repro.models.transformer import _decode_attn_jnp
+
+    b, hkv, g, d, s = 2, 2, 3, 64, 512
+    q = jnp.asarray(rng.standard_normal((b, hkv, g, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    kvl = jnp.asarray([512, 300], np.int32)
+    model_out = _decode_attn_jnp(q, k, v, kvl)  # (B,Hkv,G,D)
+    kern_out = ops.decode_attention(
+        q, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3), kv_len=kvl
+    )
+    np.testing.assert_allclose(
+        np.asarray(model_out), np.asarray(kern_out), rtol=2e-5, atol=2e-5
+    )

@@ -1,0 +1,137 @@
+"""Hypothesis property tests on system invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SearchEngine
+from repro.core.search import TermQuery, BooleanQuery
+from repro.models.recsys import embedding_bag
+from repro.storage.heap import PersistentHeap
+
+import jax.numpy as jnp
+
+TOKENS = [f"w{i}" for i in range(12)]
+
+
+def docs_strategy():
+    doc = st.lists(st.sampled_from(TOKENS), min_size=1, max_size=12)
+    return st.lists(doc, min_size=1, max_size=40)
+
+
+@settings(max_examples=25, deadline=None)
+@given(docs=docs_strategy(), flush_every=st.integers(1, 10))
+def test_segmentation_invariance(docs, flush_every):
+    """Search results are invariant to how docs are split into segments."""
+    def build(fe):
+        eng = SearchEngine("ram")
+        for i, toks in enumerate(docs):
+            eng.add({"body": " ".join(toks)}, {"month": i % 12})
+            if (i + 1) % fe == 0:
+                eng.flush()
+        eng.reopen()
+        return eng
+
+    a = build(flush_every)
+    b = build(len(docs) + 1)  # single segment
+    for tok in TOKENS[:4]:
+        # k >= n_docs: no truncation boundary, so 1-ulp FMA differences
+        # between differently-shaped executables cannot change membership
+        ta = a.search(TermQuery("body", tok), k=len(docs))
+        tb = b.search(TermQuery("body", tok), k=len(docs))
+        assert ta.total_hits == tb.total_hits
+        np.testing.assert_allclose(ta.scores, tb.scores, rtol=1e-4)
+        # identical ranking up to reordering within float32-equal scores
+        key_a = sorted(zip(np.round(ta.scores, 5), ta.doc_ids))
+        key_b = sorted(zip(np.round(tb.scores, 5), tb.doc_ids))
+        assert key_a == key_b
+
+
+@settings(max_examples=20, deadline=None)
+@given(docs=docs_strategy())
+def test_and_is_subset_of_or(docs):
+    eng = SearchEngine("ram")
+    for toks in docs:
+        eng.add({"body": " ".join(toks)})
+    eng.reopen()
+    q_and = BooleanQuery((TermQuery("body", "w0"), TermQuery("body", "w1")), "and")
+    q_or = BooleanQuery((TermQuery("body", "w0"), TermQuery("body", "w1")), "or")
+    a = eng.search(q_and, k=50)
+    o = eng.search(q_or, k=50)
+    assert a.total_hits <= o.total_hits
+    assert set(a.doc_ids.tolist()) <= set(o.doc_ids.tolist())
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    data=st.data(),
+    n_rows=st.integers(2, 30),
+    dim=st.integers(1, 8),
+)
+def test_embedding_bag_equals_onehot_matmul(data, n_rows, dim):
+    """EmbeddingBag == sum-of-one-hot matmul (the dense definition)."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    table = rng.standard_normal((n_rows, dim)).astype(np.float32)
+    n_idx = data.draw(st.integers(1, 40))
+    indices = rng.integers(0, n_rows, n_idx)
+    n_bags = data.draw(st.integers(1, 6))
+    cuts = np.sort(rng.integers(0, n_idx + 1, n_bags - 1)) if n_bags > 1 else np.array([], int)
+    offsets = np.concatenate([[0], cuts, [n_idx]]).astype(np.int32)
+
+    out = embedding_bag(jnp.asarray(table), jnp.asarray(indices), jnp.asarray(offsets))
+    onehot = np.zeros((n_bags, n_rows), np.float32)
+    for b in range(n_bags):
+        for i in indices[offsets[b] : offsets[b + 1]]:
+            onehot[b, i] += 1
+    np.testing.assert_allclose(np.asarray(out), onehot @ table, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_heap_store_load_roundtrip(data, tmp_path_factory):
+    """Byte path: arrays survive store -> barrier -> crash -> load."""
+    tmp = tmp_path_factory.mktemp("heap")
+    heap = PersistentHeap(str(tmp / "h.pmem"), 1 << 20)
+    dtypes = [np.float32, np.int32, np.uint8, np.float64, np.bool_]
+    arrays = []
+    for i in range(data.draw(st.integers(1, 6))):
+        dt = data.draw(st.sampled_from(dtypes))
+        shape = tuple(
+            data.draw(st.integers(1, 8)) for _ in range(data.draw(st.integers(1, 3)))
+        )
+        rng = np.random.default_rng(i)
+        a = (rng.standard_normal(shape) * 10).astype(dt)
+        arrays.append((heap.store(a), a))
+    heap.barrier()
+    uncommitted = heap.store(np.ones(4, np.float32))
+    heap.truncate_to_committed()  # crash
+    for off, a in arrays:
+        np.testing.assert_array_equal(heap.load(off), a)
+    heap.close()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_nequip_rotation_invariance(seed):
+    """O(3) invariance of scalar outputs under random rotations+translation."""
+    import jax
+    from scipy.spatial.transform import Rotation
+    from repro.models.nequip import NequIPConfig, init_nequip_params, nequip_forward
+
+    cfg = NequIPConfig("t", n_layers=2, channels=4, n_rbf=4, d_feat=3, n_out=2)
+    p = init_nequip_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+    batch = {
+        "node_feats": jnp.asarray(rng.standard_normal((10, 3)).astype(np.float32)),
+        "positions": jnp.asarray(rng.standard_normal((10, 3)).astype(np.float32)),
+        "edge_index": jnp.asarray(rng.integers(0, 10, (2, 24)).astype(np.int32)),
+    }
+    out = nequip_forward(p, batch, cfg)
+    R = jnp.asarray(
+        Rotation.random(random_state=seed % 1000).as_matrix(), jnp.float32
+    )
+    b2 = dict(batch)
+    b2["positions"] = batch["positions"] @ R.T + jnp.asarray(
+        rng.standard_normal(3).astype(np.float32)
+    )
+    out2 = nequip_forward(p, b2, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2), atol=2e-4)
