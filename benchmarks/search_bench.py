@@ -1,4 +1,5 @@
-"""Paper Figure 5: search-family QPS on SSD vs PMEM directories.
+"""Paper Figure 5: search-family QPS on SSD vs PMEM directories,
+plus batched-execution throughput (planner/executor path) per directory kind.
 
 luceneutil's search bench covers ~32 query families; we reproduce the
 families its figure names (term / boolean AND / boolean OR / phrase /
@@ -43,6 +44,11 @@ from repro.storage.device_model import DEVICE_MODELS
 
 N_DOCS = 20000
 N_REPS = 3
+
+# batched-execution section
+BATCH = 32
+BATCH_N_DOCS = 10000
+BATCH_KINDS = ("ram", "fs-ssd", "byte-pmem")
 
 
 def _families():
@@ -126,16 +132,7 @@ def _touched_bytes(eng: SearchEngine, q) -> int:
 
 
 def _build(path: str) -> SearchEngine:
-    eng = SearchEngine("fs-ssd", path)
-    for i, (fields, dv) in enumerate(
-        synthetic_corpus(CorpusConfig(n_docs=N_DOCS, seed=23))
-    ):
-        eng.add(fields, dv)
-        if (i + 1) % 2500 == 0:
-            eng.flush()
-    eng.commit()
-    eng.reopen()
-    return eng
+    return _build_kind("fs-ssd", path, N_DOCS)
 
 
 def run() -> List[Dict]:
@@ -181,6 +178,84 @@ def run() -> List[Dict]:
     return rows
 
 
+def _batched_families(batch: int = BATCH) -> Dict[str, List]:
+    toks = [_word(i + 1) for i in range(batch)]
+    return {
+        "TermBatch": [TermQuery("body", t) for t in toks],
+        "AndBatch": [
+            BooleanQuery(
+                (TermQuery("body", toks[i]), TermQuery("body", toks[(i + 7) % batch])),
+                "and",
+            )
+            for i in range(batch)
+        ],
+        "SortBatch": [
+            SortQuery(TermQuery("body", toks[i]), "dayOfYear") for i in range(batch)
+        ],
+        "RangeBatch": [
+            RangeQuery("timestamp", 0, 1 << (10 + i % 18)) for i in range(batch)
+        ],
+        "FacetBatch": [
+            FacetQuery(TermQuery("body", toks[i]), "month", 12) for i in range(batch)
+        ],
+    }
+
+
+def _build_kind(kind: str, path: str, n_docs: int) -> SearchEngine:
+    eng = SearchEngine(kind, path if kind != "ram" else None)
+    for i, (fields, dv) in enumerate(
+        synthetic_corpus(CorpusConfig(n_docs=n_docs, seed=23))
+    ):
+        eng.add(fields, dv)
+        if (i + 1) % 2500 == 0:
+            eng.flush()
+    eng.commit()
+    eng.reopen()
+    return eng
+
+
+def run_batched(kinds=BATCH_KINDS, batch: int = BATCH) -> List[Dict]:
+    """Batched QPS (planner/executor path) vs the per-query loop, per
+    directory kind.  Both paths serve from device-resident segments; the
+    batched one spends one dispatch per (family, segment) instead of one
+    per (query, segment) and merges top-k on device instead of in heapq."""
+    rows = []
+    for kind in kinds:
+        path = tempfile.mkdtemp(prefix=f"search-batch-{kind}-")
+        try:
+            eng = _build_kind(kind, path, BATCH_N_DOCS)
+            searcher = eng.searcher
+            for fam, queries in _batched_families(batch).items():
+                for q in queries:  # warm both jit caches
+                    searcher.search_single(q)
+                eng.search_batch(queries)
+
+                seq_times, batch_times = [], []
+                for _ in range(N_REPS):
+                    t0 = time.perf_counter()
+                    for q in queries:
+                        searcher.search_single(q)
+                    seq_times.append(time.perf_counter() - t0)
+                    t0 = time.perf_counter()
+                    eng.search_batch(queries)
+                    batch_times.append(time.perf_counter() - t0)
+                qps_seq = batch / min(seq_times)
+                qps_batch = batch / min(batch_times)
+                rows.append(
+                    {
+                        "kind": kind,
+                        "family": fam,
+                        "batch": batch,
+                        "qps_seq": qps_seq,
+                        "qps_batch": qps_batch,
+                        "speedup": qps_batch / qps_seq,
+                    }
+                )
+        finally:
+            shutil.rmtree(path, ignore_errors=True)
+    return rows
+
+
 def main():
     rows = run()
     out = []
@@ -193,6 +268,14 @@ def main():
             f",qps_cold_pmem={r['qps_cold_pmem']:.0f}"
             f",cold_gain={r['cold_gain_pct']:.1f}%"
             f",hot_gain={r['hot_gain_pct']:.1f}%"
+        )
+    for r in run_batched():
+        out.append(
+            f"search_batched,{r['kind']},{r['family']},"
+            f"batch={r['batch']}"
+            f",qps_seq={r['qps_seq']:.0f}"
+            f",qps_batch={r['qps_batch']:.0f}"
+            f",speedup={r['speedup']:.2f}x"
         )
     return out
 

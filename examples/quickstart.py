@@ -9,7 +9,7 @@ directory: add -> reopen (NRT) -> search -> commit -> crash -> recover.
 import tempfile
 
 from repro.core import SearchEngine
-from repro.core.search import BooleanQuery, FacetQuery, TermQuery
+from repro.core.search import BooleanQuery, FacetQuery, RangeQuery, TermQuery
 
 DOCS = [
     ("Apache Lucene is a high-performance text search engine library", 0),
@@ -46,6 +46,28 @@ def main() -> None:
 
     td = eng.search(FacetQuery(None, "month", 12))
     print(f"facet months: {td.facets[:8].tolist()}")
+
+    print("\n== batched search ==")
+    # the primary serving entry point: a heterogeneous batch is planned into
+    # family groups and each group is scored in one dispatch per segment
+    batch = [
+        TermQuery("body", "lucene"),
+        TermQuery("body", "memory"),
+        TermQuery("body", "search"),
+        RangeQuery("month", 2, 5),
+        FacetQuery(None, "month", 12),
+    ]
+    results = eng.search_batch(batch, k=3)
+    for q, td in zip(batch, results):
+        if td.facets is not None:  # facet doc_ids are bin indices, not docs
+            print(f"{q}: {td.total_hits} hits -> bins {td.facets[:6].tolist()}")
+        else:
+            print(f"{q}: {td.total_hits} hits -> docs {td.doc_ids.tolist()}")
+    stats = eng.device_cache.stats
+    print(
+        f"device cache: {stats.segment_uploads} segment uploads, "
+        f"{stats.hits} hits"
+    )
 
     print("\n== durability ==")
     eng.commit()

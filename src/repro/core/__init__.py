@@ -19,11 +19,14 @@ from repro.core.directory import (
     SimClock,
 )
 from repro.core.writer import IndexWriter
+from repro.core.query.cache import CacheStats, SegmentDeviceCache
 from repro.core.search import Searcher, TopDocs
 from repro.core.nrt import SearcherManager
 from repro.core.engine import SearchEngine
 
 __all__ = [
+    "CacheStats",
+    "SegmentDeviceCache",
     "Analyzer",
     "term_hash",
     "Segment",

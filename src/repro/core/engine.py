@@ -12,7 +12,7 @@ from __future__ import annotations
 import os
 import shutil
 import tempfile
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence
 
 from repro.core.analyzer import Analyzer
 from repro.core.directory import (
@@ -22,6 +22,8 @@ from repro.core.directory import (
     RAMDirectory,
 )
 from repro.core.nrt import SearcherManager
+from repro.core.query.cache import SegmentDeviceCache
+from repro.core.query.types import Query
 from repro.core.search import Searcher, TopDocs
 from repro.core.writer import IndexWriter
 from repro.storage.device_model import DEVICE_MODELS
@@ -52,8 +54,14 @@ class SearchEngine:
             directory = make_directory(directory, path)
         self.directory = directory
         self.analyzer = analyzer or Analyzer()
+        self.use_pallas = use_pallas
         self.writer = IndexWriter(directory, self.analyzer)
-        self.manager = SearcherManager(self.writer, use_pallas=use_pallas)
+        # engine-owned device cache: segment arrays stay resident across
+        # NRT reopens (only new/changed segments are uploaded)
+        self.device_cache = SegmentDeviceCache()
+        self.manager = SearcherManager(
+            self.writer, use_pallas=use_pallas, device_cache=self.device_cache
+        )
 
     # -- indexing -------------------------------------------------------------
     def add(self, fields: Dict[str, str], doc_values: Optional[Dict] = None) -> int:
@@ -79,6 +87,11 @@ class SearchEngine:
     def search(self, query, k: int = 10) -> TopDocs:
         return self.manager.searcher.search(query, k)
 
+    def search_batch(self, queries: Sequence[Query], k: int = 10) -> List[TopDocs]:
+        """Primary serving entry point: score a whole batch of queries with
+        one dispatch per (family group, segment)."""
+        return self.manager.searcher.search_batch(queries, k)
+
     # -- failure simulation -----------------------------------------------------
     def crash_and_recover(self) -> "SearchEngine":
         """Simulate power failure and reopen from the last commit point."""
@@ -86,8 +99,13 @@ class SearchEngine:
         eng = object.__new__(SearchEngine)
         eng.directory = self.directory
         eng.analyzer = self.analyzer
+        eng.use_pallas = self.use_pallas
         eng.writer = IndexWriter(self.directory, self.analyzer)
-        eng.manager = SearcherManager(eng.writer)
+        # post-crash device state is untrusted: start from a cold cache
+        eng.device_cache = SegmentDeviceCache()
+        eng.manager = SearcherManager(
+            eng.writer, use_pallas=self.use_pallas, device_cache=eng.device_cache
+        )
         return eng
 
     def stats(self) -> dict:

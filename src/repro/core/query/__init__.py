@@ -1,0 +1,41 @@
+"""Layered batched query execution.
+
+  types.py  query dataclasses + TopDocs
+  plan.py   batch planner: family grouping + shared power-of-two padding
+  exec.py   per-family jitted/vmapped executors + device-side top-k merge
+  cache.py  persistent device-resident segment cache (shared across
+            Searcher generations; the NRT reopen fast path)
+"""
+
+from repro.core.query.cache import CacheStats, SegmentDeviceCache
+from repro.core.query.exec import execute_group, merge_topk
+from repro.core.query.plan import BatchPlan, FamilyGroup, family_key, plan_batch
+from repro.core.query.types import (
+    BooleanQuery,
+    FacetQuery,
+    PhraseQuery,
+    Query,
+    RangeQuery,
+    SortQuery,
+    TermQuery,
+    TopDocs,
+)
+
+__all__ = [
+    "BatchPlan",
+    "BooleanQuery",
+    "CacheStats",
+    "FacetQuery",
+    "FamilyGroup",
+    "PhraseQuery",
+    "Query",
+    "RangeQuery",
+    "SegmentDeviceCache",
+    "SortQuery",
+    "TermQuery",
+    "TopDocs",
+    "execute_group",
+    "family_key",
+    "merge_topk",
+    "plan_batch",
+]

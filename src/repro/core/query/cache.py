@@ -1,0 +1,138 @@
+"""Persistent device-resident segment cache.
+
+Segments are immutable, so their device arrays (doc lengths, deletion
+bitmap, doc-values columns) can outlive any single point-in-time
+``Searcher``.  ``SegmentDeviceCache`` is owned by the engine and shared
+across Searcher generations: an NRT reopen uploads only segments the device
+has not seen yet — the paper's Fig 4b reopen-latency path, where re-staging
+the *whole* index on every refresh is exactly the per-file-abstraction tax
+a byte-addressable design deletes.
+
+Keying: segment name + deletion-bitmap identity.  The only mutation a
+flushed segment ever sees is a new ``live`` array object (buffered deletes
+swap in a fresh bitmap, never write in place), so ``live is cached_live``
+detects staleness without hashing; a stale hit re-uploads the bitmap alone
+and keeps every other device buffer.
+
+Stale point-in-time views: after a tiered merge, ``retain`` narrows the
+cache to the current segment list.  A held pre-merge Searcher can still
+query its (merged-away) segments, but those uploads go into the
+*Searcher's own* fallback dict rather than the shared store — otherwise the
+pre- and post-merge copies of the same docs would both stay device-resident
+across reopens.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Optional, Sequence
+
+import jax.numpy as jnp
+
+from repro.core.segment import Segment
+
+
+@dataclasses.dataclass
+class CacheStats:
+    segment_uploads: int = 0  # segments staged into the shared store
+    array_uploads: int = 0  # arrays moved to device (incl. transient stagings)
+    bytes_uploaded: int = 0
+    live_refreshes: int = 0  # deletion-bitmap-only re-uploads
+    hits: int = 0
+    evictions: int = 0
+    transient_uploads: int = 0  # stale views staged outside the store
+
+    def snapshot(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+class SegmentDeviceCache:
+    def __init__(self) -> None:
+        self._store: Dict[str, Dict[str, jnp.ndarray]] = {}
+        # None = unrestricted (standalone Searcher); retain() narrows it to
+        # the current segment view so stale searchers can't re-pollute
+        self._retained: Optional[set] = None
+        self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._store
+
+    # ------------------------------------------------------------------
+    def _stage(self, seg: Segment) -> Dict[str, jnp.ndarray]:
+        """Upload every doc-side array of ``seg`` (counted in stats)."""
+        st: Dict[str, jnp.ndarray] = {"_live_version": seg.live}
+        hosts = {"doc_lens": seg.doc_lens, "live": seg.live}
+        for k, v in seg.doc_values.items():
+            hosts[f"dv.{k}"] = v
+        for key, host in hosts.items():
+            st[key] = jnp.asarray(host)
+            self.stats.array_uploads += 1
+            self.stats.bytes_uploaded += host.nbytes
+        return st
+
+    def get(
+        self,
+        seg: Segment,
+        fallback: Optional[Dict[str, Dict[str, jnp.ndarray]]] = None,
+    ) -> Dict[str, jnp.ndarray]:
+        """Device arrays for ``seg``, uploading whatever is missing/stale.
+
+        ``fallback`` is the calling Searcher's private dict: segments that
+        are no longer in the retained view are memoized there instead of
+        the shared store.
+        """
+        st = self._store.get(seg.name)
+        if st is None:
+            if self._retained is not None and seg.name not in self._retained:
+                # stale point-in-time view of a merged-away segment
+                if fallback is not None:
+                    st = fallback.get(seg.name)
+                    if st is not None and st["_live_version"] is seg.live:
+                        self.stats.hits += 1
+                        return st
+                self.stats.transient_uploads += 1
+                st = self._stage(seg)
+                if fallback is not None:
+                    fallback[seg.name] = st
+                return st
+            self.stats.segment_uploads += 1
+            self._store[seg.name] = st = self._stage(seg)
+            return st
+        if st["_live_version"] is not seg.live:
+            # deletes swapped in a new bitmap: refresh it, keep the rest
+            st["live"] = jnp.asarray(seg.live)
+            st["_live_version"] = seg.live
+            self.stats.array_uploads += 1
+            self.stats.bytes_uploaded += seg.live.nbytes
+            self.stats.live_refreshes += 1
+        else:
+            self.stats.hits += 1
+        return st
+
+    # ------------------------------------------------------------------
+    def warm(self, segments: Iterable[Segment]) -> None:
+        """Upload any not-yet-resident segments (NRT reopen path)."""
+        for seg in segments:
+            self.get(seg)
+
+    def retain(self, names: Sequence[str]) -> None:
+        """Evict device state for segments no longer in the live view
+        (merged away or dropped at recovery)."""
+        keep = set(names)
+        self._retained = keep
+        for name in list(self._store):
+            if name not in keep:
+                del self._store[name]
+                self.stats.evictions += 1
+
+    def sync(self, segments: Sequence[Segment]) -> None:
+        """retain + warm against the current segment list."""
+        self.retain([s.name for s in segments])
+        self.warm(segments)
+
+    def clear(self) -> None:
+        self.retain([])
+        self._retained = None  # back to unrestricted: store may repopulate

@@ -1,0 +1,438 @@
+"""Per-family batched executors + device-side cross-segment top-k merge.
+
+Layering (see ARCHITECTURE.md):
+
+  plan.py   groups/pads a batch of queries      (host, numpy)
+  exec.py   scores a whole same-family batch against each segment in ONE
+            jitted dispatch (vmapped over the batch dim), then merges the
+            per-segment candidates on device — replacing the per-query
+            Python loop + heapq merge of the sequential path
+  cache.py  owns the device residency of segment arrays
+
+The unbatched jitted primitives live here too: they are both the oracle for
+the batched path (exact BM25 + tie-break parity is asserted in tests) and
+the reference semantics for the Pallas TPU kernels in
+``repro.kernels.bm25_topk``.
+
+Every score is computed by the *same* elementwise expression in both paths
+(the batch kernels are ``jax.vmap`` of the same cores), so batched results
+are bit-identical to sequential ones; candidate selection differs only in
+shared padding, which contributes ``-inf`` rows that trim away.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.query.plan import (
+    FamilyGroup,
+    bucket_batch,
+    stage_bool_postings,
+    stage_term_postings,
+)
+from repro.core.query.types import (
+    FacetQuery,
+    RangeQuery,
+    SortQuery,
+    TermQuery,
+    TopDocs,
+    empty_topdocs,
+)
+
+# ---------------------------------------------------------------------------
+# scoring cores (shared verbatim by the single and batched paths)
+# ---------------------------------------------------------------------------
+
+
+def bm25(tf, dl, idf, avgdl, k1, b):
+    tf = tf.astype(jnp.float32)
+    dl = dl.astype(jnp.float32)
+    return idf * (tf * (k1 + 1.0)) / (tf + k1 * (1.0 - b + b * dl / avgdl))
+
+
+def _term_core(docs, freqs, doc_lens, live, idf, avgdl, k1, b, k):
+    """Single-term: top-k straight over the postings list."""
+    dl = doc_lens[docs]
+    score = bm25(freqs, dl, idf, avgdl, k1, b)
+    valid = (freqs > 0) & live[docs]
+    score = jnp.where(valid, score, -jnp.inf)
+    vals, idx = jax.lax.top_k(score, min(k, score.shape[0]))
+    return vals, docs[idx], valid.sum()
+
+
+def _bool_core(
+    docs, freqs, idfs, doc_lens, live, avgdl, k1, b, k, conjunctive, n_terms
+):
+    """Boolean over T terms: dense scatter-combine on the segment, then top-k.
+
+    docs/freqs: (T, P) padded postings (freq 0 = padding).
+    """
+    n_docs = doc_lens.shape[0]
+    dl = doc_lens[docs]
+    score = bm25(freqs, dl, idfs[:, None], avgdl, k1, b)
+    valid = freqs > 0
+    score = jnp.where(valid, score, 0.0)
+    dense = jnp.zeros(n_docs, jnp.float32).at[docs.ravel()].add(score.ravel())
+    count = (
+        jnp.zeros(n_docs, jnp.int32)
+        .at[docs.ravel()]
+        .add(valid.ravel().astype(jnp.int32))
+    )
+    ok = (count == n_terms) if conjunctive else (count > 0)
+    ok = ok & live
+    dense = jnp.where(ok, dense, -jnp.inf)
+    vals, ids = jax.lax.top_k(dense, min(k, dense.shape[0]))
+    return vals, ids, ok.sum()
+
+
+def _sort_core(docs, freqs, dv, live, k):
+    """Matches of one term ordered by a doc-values column (desc)."""
+    n_docs = dv.shape[0]
+    valid = (freqs > 0) & live[docs]
+    # scatter-max, not set: padding rows alias doc 0 (docs=0, valid=False)
+    # and an in-order .set would overwrite a real match of local doc 0
+    matched = jnp.zeros(n_docs, bool).at[docs].max(valid, mode="drop")
+    key = jnp.where(matched, dv.astype(jnp.float32), -jnp.inf)
+    vals, ids = jax.lax.top_k(key, min(k, key.shape[0]))
+    return vals, ids, matched.sum()
+
+
+def _range_core(dv, live, lo, hi, k):
+    n_docs = dv.shape[0]
+    ok = (dv >= lo) & (dv <= hi) & live
+    # constant-score; return lowest doc ids first (Lucene order)
+    key = jnp.where(ok, -jnp.arange(n_docs, dtype=jnp.float32), -jnp.inf)
+    vals, ids = jax.lax.top_k(key, min(k, key.shape[0]))
+    return jnp.where(jnp.isfinite(vals), 1.0, -jnp.inf), ids, ok.sum()
+
+
+def _matched_core(docs, freqs, live):
+    n_docs = live.shape[0]
+    valid = freqs > 0
+    # scatter-max for the same doc-0 padding-alias reason as _sort_core
+    m = jnp.zeros(n_docs, bool).at[docs].max(valid, mode="drop")
+    return m & live
+
+
+def _facet_core(matched, dv_bins, n_bins):
+    """Histogram of a doc-values column over matching docs (the columnar
+    scan whose storage sensitivity the paper calls out).  bincount is the
+    shared definition for both paths: negative bins clip to 0, bins >=
+    n_bins drop."""
+    return jnp.bincount(
+        dv_bins, weights=matched.astype(jnp.float32), length=n_bins
+    )
+
+
+# -- unbatched jitted primitives (sequential/oracle path) -------------------
+
+_term_topk = partial(jax.jit, static_argnames=("k",))(_term_core)
+_bool_topk = partial(
+    jax.jit, static_argnames=("k", "conjunctive", "n_terms")
+)(_bool_core)
+_sort_topk = partial(jax.jit, static_argnames=("k",))(_sort_core)
+_range_topk = partial(jax.jit, static_argnames=("k",))(_range_core)
+_facet_counts = partial(jax.jit, static_argnames=("n_bins",))(_facet_core)
+_matched_from_postings = jax.jit(_matched_core)
+
+
+# -- batched jitted executors (vmap of the same cores) ----------------------
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _term_topk_batch(docs, freqs, doc_lens, live, idfs, avgdl, k1, b, k):
+    """docs/freqs: (B, P); idfs: (B,).  One dispatch for the whole batch."""
+    return jax.vmap(
+        lambda d, f, i: _term_core(d, f, doc_lens, live, i, avgdl, k1, b, k)
+    )(docs, freqs, idfs)
+
+
+@partial(jax.jit, static_argnames=("k", "conjunctive", "n_terms"))
+def _bool_topk_batch(
+    docs, freqs, idfs, doc_lens, live, avgdl, k1, b, k, conjunctive, n_terms
+):
+    """docs/freqs: (B, T, P); idfs: (B, T)."""
+    return jax.vmap(
+        lambda d, f, i: _bool_core(
+            d, f, i, doc_lens, live, avgdl, k1, b, k, conjunctive, n_terms
+        )
+    )(docs, freqs, idfs)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _sort_topk_batch(docs, freqs, dv, live, k):
+    return jax.vmap(lambda d, f: _sort_core(d, f, dv, live, k))(docs, freqs)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _range_topk_batch(dv, live, los, his, k):
+    return jax.vmap(lambda lo, hi: _range_core(dv, live, lo, hi, k))(los, his)
+
+
+@partial(jax.jit, static_argnames=("n_bins",))
+def _facet_batch(docs, freqs, live, dv_bins, n_bins):
+    """(B, P) postings -> (B, n_bins) counts + (B,) match totals."""
+
+    def one(d, f):
+        m = _matched_core(d, f, live)
+        return _facet_core(m, dv_bins, n_bins), m.sum()
+
+    return jax.vmap(one)(docs, freqs)
+
+
+# ---------------------------------------------------------------------------
+# device-side cross-segment merge (replaces the Python heapq merge)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("k",))
+def merge_topk(vals, ids, k):
+    """Merge per-segment candidates: (B, C) -> (B, min(k, C)).
+
+    Primary key: score descending; tie-break: global doc id ascending
+    (Lucene's ordering — identical to the sequential heapq merge).
+    """
+    kk = min(k, vals.shape[1])
+    order = jnp.lexsort((ids, -vals), axis=-1)[:, :kk]
+    return (
+        jnp.take_along_axis(vals, order, axis=-1),
+        jnp.take_along_axis(ids, order, axis=-1),
+    )
+
+
+def _finalize_scored(
+    vals: jnp.ndarray, ids: jnp.ndarray, totals: jnp.ndarray, n: int
+) -> List[TopDocs]:
+    """Trim -inf padding and box per-query TopDocs (rows beyond ``n`` are
+    batch padding)."""
+    vals_h = np.asarray(vals)
+    ids_h = np.asarray(ids)
+    totals_h = np.asarray(totals)
+    out = []
+    for i in range(n):
+        m = np.isfinite(vals_h[i])
+        out.append(
+            TopDocs(
+                int(totals_h[i]),
+                ids_h[i][m].astype(np.int64),
+                vals_h[i][m].astype(np.float32),
+            )
+        )
+    return out
+
+
+def _merge_segment_candidates(
+    per_seg: List[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]],
+    n: int,
+    k: int,
+) -> List[TopDocs]:
+    if not per_seg:
+        return [empty_topdocs() for _ in range(n)]
+    vals = jnp.concatenate([v for v, _, _ in per_seg], axis=1)
+    ids = jnp.concatenate([i for _, i, _ in per_seg], axis=1)
+    totals = per_seg[0][2]
+    for _, _, h in per_seg[1:]:
+        totals = totals + h
+    vals, ids = merge_topk(vals, ids, k)
+    return _finalize_scored(vals, ids, totals, n)
+
+
+# ---------------------------------------------------------------------------
+# group executors.  ``ctx`` is the Searcher (segments, cache, stats, knobs).
+# ---------------------------------------------------------------------------
+
+
+def _exec_term(ctx, group: FamilyGroup, k: int) -> List[TopDocs]:
+    n = len(group.queries)
+    pad = bucket_batch(n) - n
+    idfs = np.asarray(
+        [ctx.idf(q) for q in group.queries] + [0.0] * pad, dtype=np.float32
+    )
+    idfs_dev = jnp.asarray(idfs)  # batch-constant: upload once, not per seg
+    per_seg = []
+    for seg in ctx.segments:
+        staged = stage_term_postings(seg, group.queries, pad_rows=pad)
+        if staged is None:
+            continue
+        docs, freqs = staged
+        st = ctx._seg_dev(seg)
+        if ctx.use_pallas:
+            from repro.kernels import ops as kops
+
+            vals, ids, hits = kops.bm25_topk_batch(
+                jnp.asarray(docs),
+                jnp.asarray(freqs),
+                st["doc_lens"],
+                st["live"],
+                idfs_dev,
+                ctx.avgdl,
+                ctx.k1,
+                ctx.b,
+                k,
+            )
+        else:
+            vals, ids, hits = _term_topk_batch(
+                jnp.asarray(docs),
+                jnp.asarray(freqs),
+                st["doc_lens"],
+                st["live"],
+                idfs_dev,
+                ctx.avgdl,
+                ctx.k1,
+                ctx.b,
+                k,
+            )
+        per_seg.append((vals, ids + seg.base_doc, hits))
+    return _merge_segment_candidates(per_seg, n, k)
+
+
+def _exec_bool(ctx, group: FamilyGroup, k: int) -> List[TopDocs]:
+    n = len(group.queries)
+    pad = bucket_batch(n) - n
+    mode, n_terms = group.key[1], group.key[2]
+    conj = mode == "and"
+    idfs = np.zeros((n + pad, n_terms), dtype=np.float32)
+    for i, q in enumerate(group.queries):
+        idfs[i] = [ctx.idf(t) for t in q.terms]
+    idfs_dev = jnp.asarray(idfs)
+    per_seg = []
+    for seg in ctx.segments:
+        staged = stage_bool_postings(seg, group.queries, pad_rows=pad)
+        if staged is None:
+            continue
+        docs, freqs = staged
+        st = ctx._seg_dev(seg)
+        vals, ids, hits = _bool_topk_batch(
+            jnp.asarray(docs),
+            jnp.asarray(freqs),
+            idfs_dev,
+            st["doc_lens"],
+            st["live"],
+            ctx.avgdl,
+            ctx.k1,
+            ctx.b,
+            k,
+            conj,
+            n_terms,
+        )
+        per_seg.append((vals, ids + seg.base_doc, hits))
+    return _merge_segment_candidates(per_seg, n, k)
+
+
+def _exec_sort(ctx, group: FamilyGroup, k: int) -> List[TopDocs]:
+    n = len(group.queries)
+    pad = bucket_batch(n) - n
+    dv_field = group.key[1]
+    terms = [q.term for q in group.queries]
+    per_seg = []
+    for seg in ctx.segments:
+        staged = stage_term_postings(seg, terms, pad_rows=pad)
+        if staged is None:
+            continue
+        docs, freqs = staged
+        st = ctx._seg_dev(seg)
+        vals, ids, hits = _sort_topk_batch(
+            jnp.asarray(docs),
+            jnp.asarray(freqs),
+            st[f"dv.{dv_field}"],
+            st["live"],
+            k,
+        )
+        per_seg.append((vals, ids + seg.base_doc, hits))
+    return _merge_segment_candidates(per_seg, n, k)
+
+
+def _exec_range(ctx, group: FamilyGroup, k: int) -> List[TopDocs]:
+    n = len(group.queries)
+    pad = bucket_batch(n) - n
+    dv_field = group.key[1]
+    los = jnp.asarray(
+        [q.lo for q in group.queries] + [0] * pad, dtype=jnp.int32
+    )
+    his = jnp.asarray(
+        [q.hi for q in group.queries] + [-1] * pad, dtype=jnp.int32
+    )
+    per_seg = []
+    for seg in ctx.segments:
+        st = ctx._seg_dev(seg)
+        vals, ids, hits = _range_topk_batch(
+            st[f"dv.{dv_field}"],
+            st["live"],
+            los,
+            his,
+            k,
+        )
+        per_seg.append((vals, ids + seg.base_doc, hits))
+    return _merge_segment_candidates(per_seg, n, k)
+
+
+def _exec_facet(ctx, group: FamilyGroup, k: int) -> List[TopDocs]:
+    n = len(group.queries)
+    dv_field, n_bins, match_all = group.key[1], group.key[2], group.key[3]
+    counts = np.zeros((n, n_bins), dtype=np.float64)
+    totals = np.zeros(n, dtype=np.int64)
+    for seg in ctx.segments:
+        st = ctx._seg_dev(seg)
+        dv_bins = st[f"dv.{dv_field}"].astype(jnp.int32)
+        if match_all:
+            # identical per query: one dispatch, replicated host-side
+            c = np.asarray(
+                _facet_counts(st["live"], dv_bins, n_bins), dtype=np.float64
+            )
+            t = int(np.asarray(st["live"].sum()))
+            counts += c[None, :]
+            totals += t
+        else:
+            pad = bucket_batch(n) - n
+            staged = stage_term_postings(
+                seg, [q.term for q in group.queries], pad_rows=pad
+            )
+            if staged is None:
+                continue
+            docs, freqs = staged
+            c, t = _facet_batch(
+                jnp.asarray(docs),
+                jnp.asarray(freqs),
+                st["live"],
+                dv_bins,
+                n_bins,
+            )
+            counts += np.asarray(c, dtype=np.float64)[:n]
+            totals += np.asarray(t, dtype=np.int64)[:n]
+    out = []
+    for i, q in enumerate(group.queries):
+        order = np.argsort(-counts[i], kind="stable")[:k]
+        out.append(
+            TopDocs(
+                int(totals[i]),
+                order.astype(np.int64),
+                counts[i][order].astype(np.float32),
+                facets=counts[i],
+            )
+        )
+    return out
+
+
+def _exec_phrase(ctx, group: FamilyGroup, k: int) -> List[TopDocs]:
+    """Phrase verification is a host-side positions merge (Lucene's exact
+    phrase scorer is too); the batch executor is the sequential scorer."""
+    return [ctx.search_single(q, k) for q in group.queries]
+
+
+_EXECUTORS = {
+    "term": _exec_term,
+    "bool": _exec_bool,
+    "sort": _exec_sort,
+    "range": _exec_range,
+    "facet": _exec_facet,
+    "phrase": _exec_phrase,
+}
+
+
+def execute_group(ctx, group: FamilyGroup, k: int) -> List[TopDocs]:
+    return _EXECUTORS[group.kind](ctx, group, k)

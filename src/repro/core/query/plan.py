@@ -1,0 +1,151 @@
+"""Batch query planner.
+
+``plan_batch`` groups a heterogeneous batch of queries into *family groups*
+that a single jitted/vmapped executor dispatch can score together (see
+``repro.core.query.exec``).  Two queries land in the same group when they
+share an executor signature:
+
+  term                         -> ("term",)
+  boolean                      -> ("bool", mode, n_terms)
+  phrase                       -> ("phrase",)           (host executor)
+  sort                         -> ("sort", dv_field)
+  range                        -> ("range", dv_field)
+  facet                        -> ("facet", dv_field, n_bins, match_all)
+
+Postings staging pads every query in a group to one *shared* power-of-two
+bucket per segment, so same-family batches of similar size reuse compiled
+executables instead of fanning out one XLA program per (query, segment).
+The batch dimension is likewise padded to a power of two with inert rows
+(empty postings / empty ranges) that score ``-inf`` everywhere and are
+dropped at trim time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.analyzer import term_hash
+from repro.core.query.types import (
+    BooleanQuery,
+    FacetQuery,
+    PhraseQuery,
+    Query,
+    RangeQuery,
+    SortQuery,
+    TermQuery,
+)
+from repro.core.segment import Segment
+
+
+def bucket(n: int, floor: int = 8) -> int:
+    """Smallest power of two >= max(n, floor)."""
+    b = floor
+    while b < n:
+        b <<= 1
+    return b
+
+
+def bucket_batch(n: int) -> int:
+    """Power-of-two batch padding (floor 1: a batch of one stays a one)."""
+    return bucket(n, floor=1)
+
+
+def family_key(q: Query) -> Tuple:
+    if isinstance(q, TermQuery):
+        return ("term",)
+    if isinstance(q, BooleanQuery):
+        return ("bool", q.mode, len(q.terms))
+    if isinstance(q, PhraseQuery):
+        return ("phrase",)
+    if isinstance(q, SortQuery):
+        return ("sort", q.dv_field)
+    if isinstance(q, RangeQuery):
+        return ("range", q.dv_field)
+    if isinstance(q, FacetQuery):
+        return ("facet", q.dv_field, q.n_bins, q.term is None)
+    raise TypeError(f"unknown query type {type(q)}")
+
+
+@dataclasses.dataclass
+class FamilyGroup:
+    """Same-family queries scheduled for one executor."""
+
+    key: Tuple
+    indices: List[int]  # positions in the original batch
+    queries: List[Query]
+
+    @property
+    def kind(self) -> str:
+        return self.key[0]
+
+
+@dataclasses.dataclass
+class BatchPlan:
+    groups: List[FamilyGroup]
+    n_queries: int
+
+
+def plan_batch(queries: Sequence[Query]) -> BatchPlan:
+    order: List[Tuple] = []
+    by_key: Dict[Tuple, FamilyGroup] = {}
+    for i, q in enumerate(queries):
+        key = family_key(q)
+        g = by_key.get(key)
+        if g is None:
+            g = by_key[key] = FamilyGroup(key=key, indices=[], queries=[])
+            order.append(key)
+        g.indices.append(i)
+        g.queries.append(q)
+    return BatchPlan(groups=[by_key[k] for k in order], n_queries=len(queries))
+
+
+# ---------------------------------------------------------------------------
+# Postings staging (host side): pad to shared buckets
+# ---------------------------------------------------------------------------
+
+
+def stage_term_postings(
+    seg: Segment, terms: Sequence[TermQuery], pad_rows: int = 0
+) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+    """(B+pad_rows, P) padded postings for one term per row, or None when no
+    row has postings in this segment.  P is the shared power-of-two bucket."""
+    posts = [seg.postings(term_hash(t.field, t.token)) for t in terms]
+    longest = max((len(d) for d, _ in posts), default=0)
+    if longest == 0:
+        return None
+    p = bucket(longest)
+    rows = len(terms) + pad_rows
+    docs = np.zeros((rows, p), dtype=np.int32)
+    freqs = np.zeros((rows, p), dtype=np.int32)
+    for i, (d, f) in enumerate(posts):
+        docs[i, : len(d)] = d
+        freqs[i, : len(f)] = f
+    return docs, freqs
+
+
+def stage_bool_postings(
+    seg: Segment, queries: Sequence[BooleanQuery], pad_rows: int = 0
+) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+    """(B+pad_rows, T, P) padded postings, or None when nothing matches."""
+    n_terms = len(queries[0].terms)
+    posts = [
+        [seg.postings(term_hash(t.field, t.token)) for t in q.terms]
+        for q in queries
+    ]
+    longest = max(
+        (len(d) for row in posts for d, _ in row), default=0
+    )
+    if longest == 0:
+        return None
+    p = bucket(longest)
+    rows = len(queries) + pad_rows
+    docs = np.zeros((rows, n_terms, p), dtype=np.int32)
+    freqs = np.zeros((rows, n_terms, p), dtype=np.int32)
+    for i, row in enumerate(posts):
+        for t, (d, f) in enumerate(row):
+            docs[i, t, : len(d)] = d
+            freqs[i, t, : len(f)] = f
+    return docs, freqs

@@ -1,0 +1,75 @@
+"""Query types and result containers.
+
+The six query families mirror the luceneutil buckets the paper benchmarks
+(Fig 5): term, boolean AND/OR, phrase, doc-values sort, doc-values range,
+and facets (the ``BrowseMonthSSDVFacets`` family that showed the largest
+NVM gains).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TermQuery:
+    field: str
+    token: str
+
+
+@dataclasses.dataclass(frozen=True)
+class BooleanQuery:
+    terms: Tuple[TermQuery, ...]
+    mode: str = "and"  # "and" | "or"
+
+
+@dataclasses.dataclass(frozen=True)
+class PhraseQuery:
+    field: str
+    tokens: Tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class RangeQuery:
+    dv_field: str
+    lo: int
+    hi: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SortQuery:
+    """Match ``term``, order by a doc-values column (descending)."""
+
+    term: TermQuery
+    dv_field: str
+
+
+@dataclasses.dataclass(frozen=True)
+class FacetQuery:
+    """Count matches per doc-values bin (BrowseMonthSSDVFacets analogue)."""
+
+    term: Optional[TermQuery]  # None = MatchAllDocs
+    dv_field: str
+    n_bins: int
+
+
+Query = Union[
+    TermQuery, BooleanQuery, PhraseQuery, RangeQuery, SortQuery, FacetQuery
+]
+
+
+@dataclasses.dataclass
+class TopDocs:
+    total_hits: int
+    doc_ids: np.ndarray  # global ids
+    scores: np.ndarray
+    facets: Optional[np.ndarray] = None
+
+
+def empty_topdocs() -> TopDocs:
+    return TopDocs(
+        0, np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.float32)
+    )

@@ -1,190 +1,83 @@
 """Searcher: the JAX data plane over immutable segments.
 
-Query families mirror the luceneutil buckets the paper benchmarks (Fig 5):
-term, boolean AND/OR, phrase, doc-values sort, doc-values range, and
-facets (the ``BrowseMonthSSDVFacets`` family that showed the largest NVM
-gains).  Scoring is Lucene's BM25 (k1=0.9, b=0.4 defaults) with global
-collection statistics.
+The query-execution machinery lives in ``repro.core.query``:
 
-JIT strategy: postings are padded to power-of-two buckets so segments of
-similar size share compiled executables; per-segment dense combine uses the
-segment's static ``n_docs``.  The fused score+select hot loop also exists as
-a Pallas TPU kernel (``repro.kernels.bm25_topk``) — the pure-jnp functions
-here double as its oracle.
+  * ``query.types``  — the six query dataclasses + ``TopDocs`` (re-exported
+    here for compatibility),
+  * ``query.plan``   — the batch planner (family grouping, shared
+    power-of-two padding),
+  * ``query.exec``   — per-family jitted/vmapped executors and the
+    device-side cross-segment top-k merge,
+  * ``query.cache``  — the persistent device-resident segment cache shared
+    across Searcher generations.
+
+``search_batch`` is the primary entry point: a heterogeneous batch of
+queries is planned into family groups and each group is scored against
+every segment in one dispatch.  ``search`` is a batch of one.  The original
+per-query path survives as ``search_single`` — it is the oracle the batched
+path must match bit-for-bit (same BM25 scores, same ascending-docid
+tie-breaks), and its pure-jnp primitives double as the oracle for the
+Pallas TPU kernel (``repro.kernels.bm25_topk``).
+
+Scoring is Lucene's BM25 (k1=0.9, b=0.4 defaults) with global collection
+statistics.  Postings are padded to power-of-two buckets so segments (and
+batches) of similar size share compiled executables.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import heapq
-from functools import partial
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.analyzer import Analyzer, term_hash
+from repro.core.query.cache import SegmentDeviceCache
+from repro.core.query.exec import (
+    _bool_topk,
+    _facet_counts,
+    _matched_from_postings,
+    _range_topk,
+    _sort_topk,
+    _term_topk,
+    bm25,
+    execute_group,
+)
+from repro.core.query.plan import bucket as _pow2_bucket
+from repro.core.query.plan import plan_batch
+from repro.core.query.types import (
+    BooleanQuery,
+    FacetQuery,
+    PhraseQuery,
+    Query,
+    RangeQuery,
+    SortQuery,
+    TermQuery,
+    TopDocs,
+)
 from repro.core.segment import Segment
 
 K1_DEFAULT = 0.9
 B_DEFAULT = 0.4
 
-
-# ---------------------------------------------------------------------------
-# Query types
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass(frozen=True)
-class TermQuery:
-    field: str
-    token: str
-
-
-@dataclasses.dataclass(frozen=True)
-class BooleanQuery:
-    terms: Tuple[TermQuery, ...]
-    mode: str = "and"  # "and" | "or"
-
-
-@dataclasses.dataclass(frozen=True)
-class PhraseQuery:
-    field: str
-    tokens: Tuple[str, ...]
-
-
-@dataclasses.dataclass(frozen=True)
-class RangeQuery:
-    dv_field: str
-    lo: int
-    hi: int
-
-
-@dataclasses.dataclass(frozen=True)
-class SortQuery:
-    """Match ``term``, order by a doc-values column (descending)."""
-
-    term: TermQuery
-    dv_field: str
-
-
-@dataclasses.dataclass(frozen=True)
-class FacetQuery:
-    """Count matches per doc-values bin (BrowseMonthSSDVFacets analogue)."""
-
-    term: Optional[TermQuery]  # None = MatchAllDocs
-    dv_field: str
-    n_bins: int
-
-
-@dataclasses.dataclass
-class TopDocs:
-    total_hits: int
-    doc_ids: np.ndarray  # global ids
-    scores: np.ndarray
-    facets: Optional[np.ndarray] = None
-
-
-# ---------------------------------------------------------------------------
-# jitted scoring primitives (these are also the Pallas kernels' oracles)
-# ---------------------------------------------------------------------------
-
-
-def bm25(tf, dl, idf, avgdl, k1, b):
-    tf = tf.astype(jnp.float32)
-    dl = dl.astype(jnp.float32)
-    return idf * (tf * (k1 + 1.0)) / (tf + k1 * (1.0 - b + b * dl / avgdl))
-
-
-@partial(jax.jit, static_argnames=("k",))
-def _term_topk(docs, freqs, doc_lens, live, idf, avgdl, k1, b, k):
-    """Single-term: top-k straight over the postings list."""
-    dl = doc_lens[docs]
-    score = bm25(freqs, dl, idf, avgdl, k1, b)
-    valid = (freqs > 0) & live[docs]
-    score = jnp.where(valid, score, -jnp.inf)
-    vals, idx = jax.lax.top_k(score, min(k, score.shape[0]))
-    return vals, docs[idx], valid.sum()
-
-
-@partial(jax.jit, static_argnames=("k", "conjunctive", "n_terms"))
-def _bool_topk(
-    docs, freqs, idfs, doc_lens, live, avgdl, k1, b, k, conjunctive, n_terms
-):
-    """Boolean over T terms: dense scatter-combine on the segment, then top-k.
-
-    docs/freqs: (T, P) padded postings (freq 0 = padding).
-    """
-    n_docs = doc_lens.shape[0]
-    dl = doc_lens[docs]
-    score = bm25(freqs, dl, idfs[:, None], avgdl, k1, b)
-    valid = freqs > 0
-    score = jnp.where(valid, score, 0.0)
-    dense = jnp.zeros(n_docs, jnp.float32).at[docs.ravel()].add(score.ravel())
-    count = (
-        jnp.zeros(n_docs, jnp.int32)
-        .at[docs.ravel()]
-        .add(valid.ravel().astype(jnp.int32))
-    )
-    ok = (count == n_terms) if conjunctive else (count > 0)
-    ok = ok & live
-    dense = jnp.where(ok, dense, -jnp.inf)
-    vals, ids = jax.lax.top_k(dense, min(k, dense.shape[0]))
-    return vals, ids, ok.sum()
-
-
-@partial(jax.jit, static_argnames=("k",))
-def _sort_topk(docs, freqs, dv, live, k):
-    """Matches of one term ordered by a doc-values column (desc)."""
-    n_docs = dv.shape[0]
-    valid = (freqs > 0) & live[docs]
-    matched = jnp.zeros(n_docs, bool).at[docs].set(valid, mode="drop")
-    key = jnp.where(matched, dv.astype(jnp.float32), -jnp.inf)
-    vals, ids = jax.lax.top_k(key, min(k, key.shape[0]))
-    return vals, ids, matched.sum()
-
-
-@partial(jax.jit, static_argnames=("k",))
-def _range_topk(dv, live, lo, hi, k):
-    n_docs = dv.shape[0]
-    ok = (dv >= lo) & (dv <= hi) & live
-    # constant-score; return lowest doc ids first (Lucene order)
-    key = jnp.where(ok, -jnp.arange(n_docs, dtype=jnp.float32), -jnp.inf)
-    vals, ids = jax.lax.top_k(key, min(k, key.shape[0]))
-    return jnp.where(jnp.isfinite(vals), 1.0, -jnp.inf), ids, ok.sum()
-
-
-@partial(jax.jit, static_argnames=("n_bins",))
-def _facet_counts(matched, dv_bins, n_bins):
-    """Doc-values aggregation: histogram of a column over matching docs.
-
-    This is the columnar scan whose storage sensitivity the paper calls out —
-    it streams the whole doc-values column.
-    """
-    return jnp.bincount(
-        dv_bins, weights=matched.astype(jnp.float32), length=n_bins
-    )
-
-
-@jax.jit
-def _matched_from_postings(docs, freqs, live):
-    n_docs = live.shape[0]
-    valid = freqs > 0
-    m = jnp.zeros(n_docs, bool).at[docs].set(valid, mode="drop")
-    return m & live
-
-
-# ---------------------------------------------------------------------------
-# Searcher
-# ---------------------------------------------------------------------------
+__all__ = [
+    "Searcher",
+    "TopDocs",
+    "TermQuery",
+    "BooleanQuery",
+    "PhraseQuery",
+    "RangeQuery",
+    "SortQuery",
+    "FacetQuery",
+    "bm25",
+    "K1_DEFAULT",
+    "B_DEFAULT",
+]
 
 
 def _bucket(n: int) -> int:
-    b = 8
-    while b < n:
-        b <<= 1
-    return b
+    return _pow2_bucket(n)
 
 
 class Searcher:
@@ -192,6 +85,9 @@ class Searcher:
 
     Immutability means a Searcher never locks: new flushes create *new*
     segments and a *new* Searcher (see SearcherManager) — the paper's §2.1.
+    Device residency is delegated to a ``SegmentDeviceCache``; passing the
+    engine-owned cache lets consecutive Searcher generations share device
+    buffers so an NRT reopen uploads only new segments.
     """
 
     def __init__(
@@ -201,6 +97,7 @@ class Searcher:
         k1: float = K1_DEFAULT,
         b: float = B_DEFAULT,
         use_pallas: bool = False,
+        device_cache: Optional[SegmentDeviceCache] = None,
     ) -> None:
         self.segments = list(segments)
         self.analyzer = analyzer or Analyzer()
@@ -209,21 +106,17 @@ class Searcher:
         self.total_docs = sum(s.n_docs for s in self.segments)
         tokens = sum(s.total_tokens for s in self.segments)
         self.avgdl = float(tokens) / max(self.total_docs, 1)
-        self._dev: Dict[str, Dict[str, jnp.ndarray]] = {}
+        # explicit None check: an empty cache is falsy (it has __len__)
+        self.device_cache = (
+            device_cache if device_cache is not None else SegmentDeviceCache()
+        )
+        # memo for segments evicted from the shared cache while this
+        # point-in-time view still references them (post-merge stale reads)
+        self._transient_dev: Dict[str, Dict[str, jnp.ndarray]] = {}
 
     # -- device residency ---------------------------------------------------
     def _seg_dev(self, seg: Segment) -> Dict[str, jnp.ndarray]:
-        st = self._dev.get(seg.name)
-        if st is None or st["_live_version"] is not seg.live:
-            st = {
-                "doc_lens": jnp.asarray(seg.doc_lens),
-                "live": jnp.asarray(seg.live),
-                "_live_version": seg.live,
-            }
-            for k, v in seg.doc_values.items():
-                st[f"dv.{k}"] = jnp.asarray(v)
-            self._dev[seg.name] = st
-        return st
+        return self.device_cache.get(seg, fallback=self._transient_dev)
 
     # -- stats ----------------------------------------------------------------
     def doc_freq(self, q: TermQuery) -> int:
@@ -251,7 +144,23 @@ class Searcher:
         return d, f, len(docs)
 
     # -- public API -----------------------------------------------------------
-    def search(self, query, k: int = 10) -> TopDocs:
+    def search(self, query: Query, k: int = 10) -> TopDocs:
+        """Single query == a batch of one (same planner/executor path)."""
+        return self.search_batch([query], k)[0]
+
+    def search_batch(self, queries: Sequence[Query], k: int = 10) -> List[TopDocs]:
+        """Score a heterogeneous batch: group by family, one vmapped dispatch
+        per (family group, segment), device-side cross-segment merge."""
+        plan = plan_batch(queries)
+        results: List[Optional[TopDocs]] = [None] * plan.n_queries
+        for group in plan.groups:
+            for qi, td in zip(group.indices, execute_group(self, group, k)):
+                results[qi] = td
+        return results  # type: ignore[return-value]
+
+    def search_single(self, query: Query, k: int = 10) -> TopDocs:
+        """The sequential per-query path (one dispatch per segment, heapq
+        merge on host).  Kept as the oracle for the batched executors."""
         if isinstance(query, TermQuery):
             return self._search_term(query, k)
         if isinstance(query, BooleanQuery):
@@ -266,7 +175,7 @@ class Searcher:
             return self._search_facet(query, k)
         raise TypeError(f"unknown query type {type(query)}")
 
-    # -- per-family implementations --------------------------------------------
+    # -- sequential per-family implementations (oracle path) -------------------
     def _merge(self, per_seg: List[Tuple[np.ndarray, np.ndarray]], k: int):
         # min-heap of (score, -doc): among equal scores the LARGEST doc id
         # is evicted first, preserving Lucene's ascending-docid tie-break

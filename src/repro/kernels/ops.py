@@ -68,6 +68,20 @@ def bm25_topk(docs, freqs, doc_lens, live, idf, avgdl, k1, b, k=10):
     return vals, ids, valid.sum()
 
 
+def bm25_topk_batch(docs, freqs, doc_lens, live, idfs, avgdl, k1, b, k=10):
+    """Batched executor surface over the fused kernel.
+
+    docs/freqs: (B, P) padded postings, idfs: (B,).  vmap's pallas_call
+    batching rule folds the batch into the kernel grid, so the whole batch
+    is one dispatch per segment — same shape contract as the jnp executor
+    (``repro.core.query.exec._term_topk_batch``): (vals (B, kk),
+    doc_ids (B, kk), hits (B,)).
+    """
+    return jax.vmap(
+        lambda d, f, i: bm25_topk(d, f, doc_lens, live, i, avgdl, k1, b, k)
+    )(jnp.asarray(docs), jnp.asarray(freqs), jnp.asarray(idfs))
+
+
 def bitset_combine(bitmaps, mode="and"):
     """(T, W) uint32 -> (combined (W,), cardinality)."""
     t, w = bitmaps.shape

@@ -75,6 +75,10 @@ def run_cell(arch: str, shape: str, multi_pod: bool, overrides=None) -> dict:
         t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
         xla_cost = compiled.cost_analysis()
+        # jax<=0.4.x returns a one-element list of dicts; newer returns the
+        # dict directly.
+        if isinstance(xla_cost, (list, tuple)):
+            xla_cost = xla_cost[0] if xla_cost else {}
         hlo = compiled.as_text()
         cost = analyze_hlo(hlo)  # while-aware flops/bytes/collectives
     set_mesh(None)

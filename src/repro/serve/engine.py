@@ -96,7 +96,9 @@ class ServeEngine:
     def _step_one(self, slot: int, token: int) -> int:
         toks = np.zeros(self.batch, np.int32)
         toks[slot] = token
-        kvl = jnp.asarray(self.kv_len)
+        # jnp.array (copy): jnp.asarray zero-copies an aligned numpy buffer,
+        # and self.kv_len is mutated in place while the dispatch is in flight
+        kvl = jnp.array(self.kv_len)
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(toks), kvl
         )
@@ -114,7 +116,7 @@ class ServeEngine:
             req = self.slots[i]
             toks[i] = req.out[-1] if req.out else (req.prompt[-1] if len(req.prompt) else 1)
         logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(toks), jnp.asarray(self.kv_len)
+            self.params, self.cache, jnp.asarray(toks), jnp.array(self.kv_len)
         )
         nxt = np.asarray(jnp.argmax(logits[:, : self.cfg.vocab], axis=-1))
         for i in active:

@@ -82,7 +82,13 @@ def test_flush_is_cheaper_than_commit(rng, tmp_path):
     tr.run(20, log_every=10)
     st = tr.ckpt.stats
     assert st["flushes"] > st["commits"] > 0
-    assert st["flush_s"] / st["flushes"] < st["commit_s"] / st["commits"]
+    # wall-clock *averages* flake under CI load (one slow scheduler tick
+    # flips them); compare best-case per-op times instead — the flush floor
+    # (one msync barrier) must sit below the commit floor (serialize + two
+    # fsyncs + gc)
+    flush_times = [tr.ckpt.flush(100 + i, tr.state.params) for i in range(5)]
+    commit_times = [tr.ckpt.commit(100 + i, tr.state.params) for i in range(5)]
+    assert min(flush_times) < min(commit_times)
 
 
 def test_elastic_reshard_roundtrip(rng, tmp_path):

@@ -1,0 +1,294 @@
+"""Batched query execution: parity with the sequential oracle + device cache.
+
+The batched planner/executor path (``Searcher.search_batch``) must return
+bit-identical ``TopDocs`` to the surviving per-query oracle path
+(``Searcher.search_single``) for every query family and every directory
+kind, and the engine-owned ``SegmentDeviceCache`` must not re-upload
+unchanged segments across NRT reopens.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import SearchEngine, SegmentDeviceCache
+from repro.core.query.plan import family_key, plan_batch
+from repro.core.search import (
+    BooleanQuery,
+    FacetQuery,
+    PhraseQuery,
+    RangeQuery,
+    SortQuery,
+    TermQuery,
+)
+from repro.data.corpus import CorpusConfig, synthetic_corpus, _word
+
+N_DOCS = 400
+
+
+def _build(kind: str, path=None) -> SearchEngine:
+    eng = SearchEngine(kind, path=str(path) if path else None)
+    for i, (fields, dv) in enumerate(
+        synthetic_corpus(CorpusConfig(n_docs=N_DOCS, vocab=500, seed=11))
+    ):
+        eng.add(fields, dv)
+        if (i + 1) % 90 == 0:
+            eng.flush()  # several segments
+    eng.delete("body", _word(120))  # exercise the live bitmap
+    eng.reopen()
+    return eng
+
+
+def _mixed_batch():
+    highs = [_word(i) for i in (1, 2, 3)]
+    meds = [_word(i) for i in (20, 40, 60)]
+    return (
+        [TermQuery("body", t) for t in highs + meds]
+        + [
+            BooleanQuery((TermQuery("body", a), TermQuery("body", b)), m)
+            for m in ("and", "or")
+            for a, b in [(highs[0], highs[1]), (highs[2], meds[0])]
+        ]
+        + [PhraseQuery("body", (highs[0], highs[1]))]
+        + [SortQuery(TermQuery("body", t), "timestamp") for t in highs]
+        + [RangeQuery("month", 2, 9), RangeQuery("month", 0, 5)]
+        + [
+            FacetQuery(None, "month", 12),
+            FacetQuery(TermQuery("body", highs[0]), "month", 12),
+        ]
+    )
+
+
+def _assert_topdocs_identical(a, b, ctx=""):
+    assert a.total_hits == b.total_hits, ctx
+    np.testing.assert_array_equal(a.doc_ids, b.doc_ids, err_msg=ctx)
+    # bit-identical scores: the batched executors are vmap of the same cores
+    np.testing.assert_array_equal(a.scores, b.scores, err_msg=ctx)
+    assert (a.facets is None) == (b.facets is None), ctx
+    if a.facets is not None:
+        np.testing.assert_array_equal(a.facets, b.facets, err_msg=ctx)
+
+
+@pytest.mark.parametrize("kind", ["ram", "fs-ssd", "byte-pmem"])
+def test_search_batch_parity_all_families(kind, tmp_path):
+    eng = _build(kind, tmp_path / kind if kind != "ram" else None)
+    queries = _mixed_batch()
+    batch = eng.search_batch(queries, k=10)
+    assert len(batch) == len(queries)
+    s = eng.searcher
+    for q, td in zip(queries, batch):
+        _assert_topdocs_identical(td, s.search_single(q, k=10), ctx=repr(q))
+
+
+def test_search_is_batch_of_one():
+    eng = _build("ram")
+    for q in _mixed_batch()[:6]:
+        _assert_topdocs_identical(
+            eng.search(q, k=10), eng.search_batch([q], k=10)[0], ctx=repr(q)
+        )
+
+
+def test_batch_parity_with_deletes_and_k_edge():
+    """k larger than every postings list + deletions applied mid-stream."""
+    eng = _build("ram")
+    eng.delete("body", _word(1))
+    eng.reopen()
+    queries = [TermQuery("body", _word(i)) for i in (1, 2, 3, 999983)]
+    batch = eng.search_batch(queries, k=N_DOCS)
+    s = eng.searcher
+    for q, td in zip(queries, batch):
+        _assert_topdocs_identical(td, s.search_single(q, k=N_DOCS), ctx=repr(q))
+    # the deleted + absent terms return empty results with the right shape
+    assert batch[0].total_hits == 0
+    assert batch[3].total_hits == 0
+    assert batch[3].doc_ids.dtype == np.int64
+
+
+def test_sort_and_facet_include_local_doc_zero():
+    """Padding rows alias local doc 0 (docs=0, valid=False); the scatter
+    must not erase a real match of doc 0 (regression: .set -> .max)."""
+    eng = SearchEngine("ram")
+    texts = ["target alpha", "filler beta", "target gamma", "filler d", "target e"]
+    for i, text in enumerate(texts):
+        eng.add({"body": text}, {"month": i % 3, "ts": i})
+    eng.reopen()
+    td = eng.search(SortQuery(TermQuery("body", "target"), "ts"), k=10)
+    assert td.total_hits == 3
+    assert sorted(td.doc_ids.tolist()) == [0, 2, 4]
+    fd = eng.search(FacetQuery(TermQuery("body", "target"), "month", 3))
+    assert fd.total_hits == 3
+    np.testing.assert_array_equal(fd.facets, [1.0, 1.0, 1.0])  # m0,m2,m1
+
+
+def test_crash_recover_preserves_pallas_flag(tmp_path):
+    eng = SearchEngine("byte-pmem", str(tmp_path / "p"), use_pallas=True)
+    for i in range(12):
+        eng.add({"body": f"alpha w{i % 3}"}, {"month": i % 12})
+    eng.reopen()
+    eng.commit()
+    eng2 = eng.crash_and_recover()
+    assert eng2.use_pallas and eng2.manager.use_pallas
+    assert eng2.searcher.use_pallas
+    assert eng2.search(TermQuery("body", "alpha")).total_hits == 12
+
+
+def test_facet_parity_with_out_of_range_bins():
+    """Negative doc-values clip to bin 0 and overflow bins drop — the
+    batched path must share bincount semantics with the oracle."""
+    eng = SearchEngine("ram")
+    for i in range(40):
+        eng.add({"body": f"alpha w{i % 4}"}, {"month": i % 15 - 2})  # -2..12
+    eng.reopen()
+    queries = [
+        FacetQuery(None, "month", 12),
+        FacetQuery(TermQuery("body", "alpha"), "month", 12),
+    ]
+    batch = eng.search_batch(queries, k=12)
+    s = eng.searcher
+    for q, td in zip(queries, batch):
+        _assert_topdocs_identical(td, s.search_single(q, k=12), ctx=repr(q))
+
+
+def test_planner_groups_by_family():
+    queries = _mixed_batch()
+    plan = plan_batch(queries)
+    assert plan.n_queries == len(queries)
+    # every query lands in exactly one group, original order recoverable
+    seen = sorted(i for g in plan.groups for i in g.indices)
+    assert seen == list(range(len(queries)))
+    for g in plan.groups:
+        assert all(family_key(q) == g.key for q in g.queries)
+    # terms share one group; and/or booleans are distinct executor signatures
+    kinds = [g.key[0] for g in plan.groups]
+    assert kinds.count("term") == 1
+    assert kinds.count("bool") == 2
+
+
+def test_pallas_batch_matches_pallas_single():
+    eng = _build("ram")
+    from repro.core.search import Searcher
+
+    s = Searcher(eng.writer.segments, use_pallas=True)
+    queries = [TermQuery("body", _word(i)) for i in (1, 2, 20)]
+    batch = s.search_batch(queries, k=10)
+    for q, td in zip(queries, batch):
+        _assert_topdocs_identical(td, s.search_single(q, k=10), ctx=repr(q))
+
+
+# ---------------------------------------------------------------------------
+# SegmentDeviceCache
+# ---------------------------------------------------------------------------
+
+
+def test_nrt_reopen_uploads_only_new_segment():
+    eng = SearchEngine("ram")
+    for i, (fields, dv) in enumerate(
+        synthetic_corpus(CorpusConfig(n_docs=200, vocab=300, seed=3))
+    ):
+        eng.add(fields, dv)
+        if (i + 1) % 50 == 0:
+            eng.flush()
+    eng.reopen()
+    eng.search(TermQuery("body", _word(1)))
+    stats = eng.device_cache.stats
+    base_segments = stats.segment_uploads
+    base_arrays = stats.array_uploads
+    assert base_segments == len(eng.writer.segments)
+
+    # one more flush: the reopen must upload ONLY the new segment's arrays
+    for fields, dv in list(
+        synthetic_corpus(CorpusConfig(n_docs=10, vocab=300, seed=4))
+    ):
+        eng.add(fields, dv)
+    eng.reopen()
+    assert stats.segment_uploads == base_segments + 1
+    new_seg = eng.writer.segments[-1]
+    # doc_lens + live + one column per doc-values field
+    assert stats.array_uploads == base_arrays + 2 + len(new_seg.doc_values)
+
+    # searching after the reopen hits the resident buffers, no re-upload
+    arrays_before = stats.array_uploads
+    eng.search_batch([TermQuery("body", _word(1)), RangeQuery("month", 0, 6)])
+    assert stats.array_uploads == arrays_before
+
+
+def test_delete_refreshes_only_live_bitmap():
+    eng = SearchEngine("ram")
+    for fields, dv in synthetic_corpus(CorpusConfig(n_docs=100, vocab=300, seed=5)):
+        eng.add(fields, dv)
+    eng.reopen()
+    eng.search(TermQuery("body", _word(1)))
+    stats = eng.device_cache.stats
+    seg_uploads = stats.segment_uploads
+    arrays = stats.array_uploads
+    eng.delete("body", _word(2))
+    eng.reopen()
+    eng.search(TermQuery("body", _word(1)))
+    assert stats.segment_uploads == seg_uploads  # no full re-upload
+    assert stats.live_refreshes >= 1
+    assert stats.array_uploads == arrays + 1  # the new live bitmap only
+
+
+def test_merge_evicts_stale_segments():
+    eng = SearchEngine("ram")
+    cache = eng.device_cache
+    docs = list(synthetic_corpus(CorpusConfig(n_docs=240, vocab=300, seed=6)))
+    for i, (fields, dv) in enumerate(docs):
+        eng.add(fields, dv)
+        if (i + 1) % 20 == 0:
+            # reopen per flush: segments become device-resident, so the
+            # eventual tiered merge must evict the merged-away ones
+            eng.reopen()
+    live_names = {s.name for s in eng.writer.segments}
+    assert set(cache._store) == live_names
+    assert cache.stats.evictions > 0  # merged-away segments were dropped
+
+
+def test_stale_searcher_does_not_repollute_cache():
+    """A retained pre-merge Searcher must not re-insert merged-away
+    segments into the shared cache (double-residency churn)."""
+    eng = SearchEngine("ram")
+    docs = list(synthetic_corpus(CorpusConfig(n_docs=240, vocab=300, seed=6)))
+    for i, (fields, dv) in enumerate(docs[:200]):
+        eng.add(fields, dv)
+        if (i + 1) % 20 == 0:
+            eng.reopen()
+    assert len(eng.writer.segments) == 10  # at the merge_factor threshold
+    stale = eng.searcher  # pre-merge point-in-time view
+    stale.search(TermQuery("body", _word(1)))  # make its segments resident
+    for fields, dv in docs[200:]:
+        eng.add(fields, dv)
+    eng.reopen()  # 11th flush triggers the tiered merge + eviction
+    cache = eng.device_cache
+    live_names = {s.name for s in eng.writer.segments}
+    assert set(cache._store) <= live_names
+    stale.search(TermQuery("body", _word(1)))  # old view still queryable
+    assert set(cache._store) <= live_names  # ...without re-inserting
+    assert cache.stats.transient_uploads > 0
+    # the stale view memoizes its own uploads: a second query re-uploads
+    # nothing (transient count flat, searcher-local dict serves the hits)
+    transients = cache.stats.transient_uploads
+    arrays = cache.stats.array_uploads
+    stale.search(TermQuery("body", _word(2)))
+    assert cache.stats.transient_uploads == transients
+    assert cache.stats.array_uploads == arrays
+
+
+def test_searcher_generations_share_cache():
+    eng = SearchEngine("ram")
+    for fields, dv in synthetic_corpus(CorpusConfig(n_docs=50, vocab=200, seed=8)):
+        eng.add(fields, dv)
+    eng.reopen()
+    s1 = eng.searcher
+    for fields, dv in synthetic_corpus(CorpusConfig(n_docs=10, vocab=200, seed=9)):
+        eng.add(fields, dv)
+    eng.reopen()
+    s2 = eng.searcher
+    assert s1 is not s2  # point-in-time views
+    assert s1.device_cache is s2.device_cache is eng.device_cache
+
+
+def test_standalone_cache_api():
+    cache = SegmentDeviceCache()
+    assert len(cache) == 0 and "x" not in cache
+    cache.retain([])
+    assert cache.stats.evictions == 0
