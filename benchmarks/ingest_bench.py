@@ -1,0 +1,132 @@
+"""Sustained-ingest benchmark: flush + tiered merge + reopen + GC.
+
+Asadi & Lin's incremental-indexing results (and Lucene operational lore)
+say merge/lifecycle policy dominates sustained-ingest throughput — not
+scoring.  This benchmark drives each directory kind through a sustained
+flush/merge/commit/reopen cycle and reports the lifecycle metrics the
+tiered policy + file GC are supposed to bound:
+
+  * final segment count (tiered merging keeps it logarithmic in ingest),
+  * merges executed and deleted docs dropped by rewrites,
+  * storage bytes vs live index bytes (GC invariant: bounded ratio),
+  * reclaimed bytes (file GC on the FS path, heap compaction on the byte
+    path),
+  * mean/max reopen latency (must track the flush size, not index size).
+
+``--smoke`` runs a small configuration for CI: it fails loudly if the
+segment count or storage ratio regresses (a broken policy or GC shows up
+as unbounded growth long before it shows up as slow queries).
+"""
+
+from __future__ import annotations
+
+import argparse
+import shutil
+import tempfile
+import time
+from typing import Dict, List
+
+from repro.core import SearchEngine
+from repro.core.search import TermQuery
+from repro.data.corpus import CorpusConfig, synthetic_corpus
+
+KINDS = ("ram", "fs-ssd", "byte-pmem")
+
+
+def run_one(
+    kind: str,
+    n_docs: int = 4000,
+    docs_per_flush: int = 50,
+    flushes_per_commit: int = 4,
+    delete_every: int = 3,
+    merge_factor: int = 4,
+) -> Dict:
+    path = tempfile.mkdtemp(prefix=f"ingest-{kind}-")
+    try:
+        eng = SearchEngine(kind, path)
+        eng.writer.merge_factor = merge_factor
+        eng.directory.clock.reset()
+        reopen_s: List[float] = []
+        t_wall = time.perf_counter()
+        flushes = 0
+        for i, (fields, dv) in enumerate(
+            synthetic_corpus(CorpusConfig(n_docs=n_docs, vocab=2000, seed=17))
+        ):
+            eng.add(fields, dv)
+            if (i + 1) % docs_per_flush == 0:
+                flushes += 1
+                reopen_s.append(eng.reopen())  # reopen forces the flush
+                if flushes % delete_every == 0:
+                    # rolling deletes: feed the deletes-percentage trigger
+                    eng.delete("body", fields["title"].split()[0])
+                if flushes % flushes_per_commit == 0:
+                    eng.commit()
+        eng.commit()
+        eng.reopen()
+        t_wall = time.perf_counter() - t_wall
+
+        w = eng.writer
+        live_bytes = w.infos.nbytes()
+        storage = eng.directory.storage_bytes()
+        merge_stats = w.merge_scheduler.stats
+        td = eng.search(TermQuery("body", "wb"), k=10)  # sanity: index serves
+        return {
+            "dir": kind,
+            "docs": n_docs,
+            "segments": len(w.infos),
+            "merges": merge_stats.merges,
+            "docs_dropped": merge_stats.docs_dropped,
+            "reclaimed_bytes": w.gc_stats["reclaimed_bytes"],
+            "storage_bytes": storage,
+            "live_bytes": live_bytes,
+            "storage_ratio": storage / max(live_bytes, 1),
+            "reopen_mean_ms": 1e3 * sum(reopen_s) / max(len(reopen_s), 1),
+            "reopen_max_ms": 1e3 * max(reopen_s) if reopen_s else 0.0,
+            "wall_s": t_wall,
+            "hits": td.total_hits,
+        }
+    finally:
+        shutil.rmtree(path, ignore_errors=True)
+
+
+def run(smoke: bool = False) -> List[Dict]:
+    kwargs = dict(n_docs=800, docs_per_flush=25) if smoke else {}
+    return [run_one(kind, **kwargs) for kind in KINDS]
+
+
+def main(smoke: bool = False) -> List[str]:
+    rows = run(smoke=smoke)
+    out = []
+    failures = []
+    for r in rows:
+        out.append(
+            f"ingest,{r['dir']},{r['segments']},segments"
+            f";merges={r['merges']},dropped={r['docs_dropped']}"
+            f",reclaimed_kb={r['reclaimed_bytes'] / 1024:.0f}"
+            f",storage_ratio={r['storage_ratio']:.2f}"
+            f",reopen_mean_ms={r['reopen_mean_ms']:.2f}"
+            f",reopen_max_ms={r['reopen_max_ms']:.2f}"
+            f",wall_s={r['wall_s']:.1f}"
+        )
+        # loud regression gates (CI --smoke): lifecycle bugs show up as
+        # unbounded segment counts or storage growth
+        n_flushes = r["docs"] // 25 if smoke else r["docs"] // 50
+        if r["segments"] > max(8, n_flushes // 2):
+            failures.append(f"{r['dir']}: segment count unbounded ({r['segments']})")
+        if r["merges"] == 0:
+            failures.append(f"{r['dir']}: merge policy never fired")
+        if r["storage_ratio"] > 2.5:
+            failures.append(
+                f"{r['dir']}: storage {r['storage_ratio']:.2f}x live index (GC broken?)"
+            )
+    if failures:
+        raise SystemExit("ingest_bench regression: " + "; ".join(failures))
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small CI configuration")
+    args = ap.parse_args()
+    for line in main(smoke=args.smoke):
+        print(line)

@@ -26,6 +26,7 @@ import io
 import json
 import os
 import pickle
+import re
 import time
 from abc import ABC, abstractmethod
 from typing import Dict, List, Optional, Tuple
@@ -34,6 +35,8 @@ import numpy as np
 
 from repro.core.segment import Segment
 from repro.storage.device_model import DeviceModel, DRAM, PMEM, SSD
+
+_SEG_NAME_RE = re.compile(r"^_[a-z]\d{6}$")
 
 
 class SimClock:
@@ -79,6 +82,16 @@ class Directory(ABC):
     def read_segment(self, name: str, base_doc: int) -> Segment:
         ...
 
+    def open_for_write(self, name: str, base_doc: int) -> Segment:
+        """Writer-side open (recovery): may return heap-independent copies.
+
+        Readers want zero-copy (``read_segment``); the *writer's* working
+        set is long-lived and must not pin storage against reclamation —
+        the byte path overrides this to return host copies so heap
+        compaction is never blocked by the writer itself.
+        """
+        return self.read_segment(name, base_doc)
+
     @abstractmethod
     def write_live(self, name: str, live: np.ndarray) -> None:
         """Persist an updated deletion bitmap (Lucene .liv file analogue)."""
@@ -91,6 +104,25 @@ class Directory(ABC):
     @abstractmethod
     def latest_commit(self) -> Optional[Tuple[int, List[str], dict]]:
         ...
+
+    # -- storage reclamation -------------------------------------------------
+    def gc(self, live_names: List[str]) -> Dict[str, int]:
+        """Reclaim storage for segments not in ``live_names``.
+
+        Called by the writer right after every commit (so ``live_names`` is
+        exactly the set the new commit point references).  File path:
+        delete unreferenced ``.seg``/``.liv`` files and prune superseded
+        commit manifests.  Byte path: free TOC entries and compact the
+        persistent heap.  Returns ``{"reclaimed_bytes": int, "removed":
+        int}`` (plus implementation-specific counters).
+        """
+        return {"reclaimed_bytes": 0, "removed": 0}
+
+    def storage_bytes(self) -> int:
+        """Bytes of backing storage currently consumed (GC invariant/bench
+        metric: must stay proportional to the live index, not to ingest
+        history)."""
+        raise NotImplementedError
 
     # -- failure / cache simulation ------------------------------------------
     @abstractmethod
@@ -136,17 +168,36 @@ class FSDirectory(Directory):
         super().__init__(device)
         self.path = path
         os.makedirs(path, exist_ok=True)
-        self._dirty: Dict[str, int] = {}  # name -> bytes pending fsync
+        self._dirty: Dict[str, int] = {}  # seg name / liv filename -> bytes
         self._page_cache: set = set()  # names serviceable from DRAM
         self._committed: Dict[int, Tuple[List[str], dict]] = {}
+        # generational .liv state: each write_live creates {name}_{g}.liv
+        # instead of overwriting, so a crash can drop un-fsynced generations
+        # without losing the committed one underneath
+        self._live_gen: Dict[str, int] = {}   # name -> latest written gen
+        self._synced_liv: Dict[str, int] = {}  # name -> latest fsynced gen
         self._load_commits()
 
     # -- helpers -------------------------------------------------------------
     def _seg_path(self, name: str) -> str:
         return os.path.join(self.path, f"{name}.seg")
 
-    def _live_path(self, name: str) -> str:
-        return os.path.join(self.path, f"{name}.liv")
+    def _liv_file(self, name: str, gen: int) -> str:
+        return f"{name}.liv" if gen < 0 else f"{name}_{gen}.liv"
+
+    @staticmethod
+    def _parse_liv(fn: str) -> Tuple[str, int]:
+        """'{name}_{gen}.liv' -> (name, gen); legacy '{name}.liv' -> (name, -1).
+
+        Segment names are ``_s``/``_m`` + 6 digits, so a stem that splits
+        into (segment-name, int) is generational; anything else is a legacy
+        un-generational file, which sorts below every generation.
+        """
+        stem = fn[:-4]
+        base, _, g = stem.rpartition("_")
+        if g.isdigit() and _SEG_NAME_RE.match(base):
+            return base, int(g)
+        return stem, -1
 
     def _load_commits(self) -> None:
         for fn in os.listdir(self.path):
@@ -155,6 +206,11 @@ class FSDirectory(Directory):
                 with open(os.path.join(self.path, fn)) as f:
                     m = json.load(f)
                 self._committed[gen] = (m["segments"], m.get("meta", {}))
+            elif fn.endswith(".liv"):
+                # restart continuity: new live generations must sort above
+                # whatever is already on disk
+                name, g = self._parse_liv(fn)
+                self._live_gen[name] = max(self._live_gen.get(name, -1), g)
 
     # -- data plane ----------------------------------------------------------
     def write_segment(self, seg: Segment) -> None:
@@ -179,22 +235,45 @@ class FSDirectory(Directory):
 
     def write_live(self, name: str, live: np.ndarray) -> None:
         t0 = time.perf_counter()
-        with open(self._live_path(name), "wb") as f:
+        g = self._live_gen.get(name, -1) + 1
+        self._live_gen[name] = g
+        fn = self._liv_file(name, g)
+        with open(os.path.join(self.path, fn), "wb") as f:
             f.write(live.tobytes())
         self.clock.add_real("flush_write", time.perf_counter() - t0)
         self.clock.add_modeled(
             "flush_write", DRAM.file_write_time(n_ops=1, n_bytes=live.nbytes)
         )
-        self._dirty[f"{name}.liv"] = live.nbytes
+        self._dirty[fn] = live.nbytes
+
+    def _latest_liv(self, name: str) -> Optional[str]:
+        """Newest on-disk .liv generation for ``name`` (crash() removed any
+        un-fsynced ones, so post-recovery this is the committed bitmap).
+
+        O(1) via the ``_live_gen`` bookkeeping; falls back to a directory
+        scan only if that bookkeeping ever disagrees with the filesystem.
+        """
+        g = self._live_gen.get(name)
+        if g is not None:
+            fn = self._liv_file(name, g)
+            if os.path.exists(os.path.join(self.path, fn)):
+                return fn
+        best, best_gen = None, -2
+        for fn in os.listdir(self.path):
+            if fn.endswith(".liv"):
+                base, g = self._parse_liv(fn)
+                if base == name and g > best_gen:
+                    best, best_gen = fn, g
+        return best
 
     def read_segment(self, name: str, base_doc: int) -> Segment:
         t0 = time.perf_counter()
         with open(self._seg_path(name), "rb") as f:
             blob = f.read()
         arrays = _deserialize(blob)
-        lp = self._live_path(name)
-        if os.path.exists(lp):
-            with open(lp, "rb") as f:
+        lf = self._latest_liv(name)
+        if lf is not None:
+            with open(os.path.join(self.path, lf), "rb") as f:
                 arrays["live"] = np.frombuffer(f.read(), dtype=bool).copy()
         dt = time.perf_counter() - t0
         self.clock.add_real("read", dt)
@@ -215,22 +294,26 @@ class FSDirectory(Directory):
         t0 = time.perf_counter()
         dirty_bytes = 0
         n_files = 0
-        for name, nbytes in list(self._dirty.items()):
-            base = name[:-4] if name.endswith(".liv") else name
-            if base in seg_names or name in seg_names:
-                p = (
-                    self._live_path(base)
-                    if name.endswith(".liv")
-                    else self._seg_path(name)
-                )
+        for key, nbytes in list(self._dirty.items()):
+            if key.endswith(".liv"):
+                base, liv_gen = self._parse_liv(key)
+                p = os.path.join(self.path, key)
+            else:
+                base, liv_gen = key, None
+                p = self._seg_path(key)
+            if base in seg_names:
                 fd = os.open(p, os.O_RDONLY)
                 try:
                     os.fsync(fd)
                 finally:
                     os.close(fd)
+                if liv_gen is not None:
+                    self._synced_liv[base] = max(
+                        self._synced_liv.get(base, -1), liv_gen
+                    )
                 dirty_bytes += nbytes
                 n_files += 1
-                del self._dirty[name]
+                del self._dirty[key]
         gen = (max(self._committed) + 1) if self._committed else 0
         manifest = {"segments": list(seg_names), "meta": meta or {}}
         tmp = os.path.join(self.path, f"segments_{gen}.tmp")
@@ -258,17 +341,81 @@ class FSDirectory(Directory):
         names, meta = self._committed[gen]
         return gen, names, meta
 
+    # -- storage reclamation -------------------------------------------------
+    def gc(self, live_names: List[str]) -> Dict[str, int]:
+        """Delete files no commit point or live snapshot references.
+
+        Runs right after a commit: prunes superseded ``segments_N``
+        manifests (keep-only-last deletion policy), then any ``.seg`` whose
+        segment was merged away, dead segments' ``.liv`` files, and live
+        segments' ``.liv`` generations older than the latest fsynced one.
+        """
+        reclaimed = 0
+        removed = 0
+        keep = set(live_names)
+        if self._committed:
+            latest = max(self._committed)
+            keep.update(self._committed[latest][0])
+            for gen in [g for g in self._committed if g != latest]:
+                p = os.path.join(self.path, f"segments_{gen}")
+                if os.path.exists(p):
+                    reclaimed += os.path.getsize(p)
+                    os.remove(p)
+                del self._committed[gen]
+        for fn in os.listdir(self.path):
+            p = os.path.join(self.path, fn)
+            if fn.endswith(".seg"):
+                base = fn[:-4]
+                if base not in keep:
+                    reclaimed += os.path.getsize(p)
+                    os.remove(p)
+                    removed += 1
+                    self._dirty.pop(base, None)
+                    self._page_cache.discard(base)
+            elif fn.endswith(".liv"):
+                base, g = self._parse_liv(fn)
+                dead = base not in keep
+                superseded = g < self._synced_liv.get(base, -1)
+                if dead or superseded:
+                    reclaimed += os.path.getsize(p)
+                    os.remove(p)
+                    self._dirty.pop(fn, None)
+                    if dead:
+                        self._live_gen.pop(base, None)
+                        self._synced_liv.pop(base, None)
+        return {"reclaimed_bytes": reclaimed, "removed": removed}
+
+    def storage_bytes(self) -> int:
+        return sum(
+            os.path.getsize(os.path.join(self.path, fn))
+            for fn in os.listdir(self.path)
+            if fn.endswith((".seg", ".liv"))
+        )
+
     # -- failure -------------------------------------------------------------
     def crash(self) -> None:
-        """Power failure: page cache is lost; un-fsynced files are torn."""
+        """Power failure: page cache is lost; un-fsynced files are torn.
+
+        ``.liv`` generations never fsynced (still in ``_dirty``) are lost;
+        earlier committed generations survive, so recovery sees exactly the
+        deletes covered by the last commit point.
+        """
         durable: set = set()
         for names, _ in self._committed.values():
             durable.update(names)
         for fn in os.listdir(self.path):
             if fn.endswith(".seg") and fn[:-4] not in durable:
                 os.remove(os.path.join(self.path, fn))
-            if fn.endswith(".liv") and f"{fn[:-4]}.liv" in self._dirty:
+            if fn.endswith(".liv") and fn in self._dirty:
                 os.remove(os.path.join(self.path, fn))
+        # rebuild the generation map from what actually survived: after a
+        # restart ``_synced_liv`` is empty, so deriving from it would reuse
+        # a generation number and overwrite a committed bitmap in place
+        self._live_gen = {}
+        for fn in os.listdir(self.path):
+            if fn.endswith(".liv"):
+                name, g = self._parse_liv(fn)
+                self._live_gen[name] = max(self._live_gen.get(name, -1), g)
         self._dirty.clear()
         self._page_cache.clear()
 
@@ -294,21 +441,39 @@ class ByteAddressableDirectory(Directory):
       Cost no longer scales with the number of segment files — this is the
       collapse the paper predicts for a load/store redesign.
     * read_segment: zero-copy views into the heap.
+    * gc: frees TOC entries of merged-away segments and compacts the heap
+      (re-packing live allocations and rewinding the bump tail) so heap
+      usage tracks the live index, not ingest history.  Compaction moves
+      bytes, so it is deferred while any zero-copy loaned view is still
+      referenced (Lucene's refcounting deletes files only once no reader
+      holds them; here the weakref on each loaned array IS the refcount).
     """
 
     def __init__(self, path: str, device: DeviceModel = PMEM, capacity: int = 1 << 28):
         super().__init__(device)
+        import weakref
+
         from repro.storage.heap import PersistentHeap
 
         self.path = path
         os.makedirs(path, exist_ok=True)
-        self.heap = PersistentHeap(os.path.join(path, "heap.pmem"), capacity)
         self._toc: Dict[str, Dict[str, int]] = {}  # seg -> array -> offset
+        # weakrefs to arrays handed out by read_segment (zero-copy loans)
+        self._loans: List["weakref.ref"] = []
+        self.gc_info: Dict[str, int] = {
+            "compactions": 0,
+            "deferred": 0,
+            "reclaimed_bytes": 0,
+        }
         self._root = os.path.join(path, "root.json")
         self._committed_gen = -1
         self._committed_toc: Dict[str, Dict[str, int]] = {}
         self._committed_names: List[str] = []
         self._meta: dict = {}
+        # the root record names the heap file: compaction re-packs into a
+        # FRESH file and swaps the root atomically, so a crash mid-compact
+        # recovers the old (heap file, TOC) pair intact
+        self._heap_file = "heap.pmem"
         if os.path.exists(self._root):
             with open(self._root) as f:
                 rec = json.load(f)
@@ -316,7 +481,24 @@ class ByteAddressableDirectory(Directory):
             self._committed_toc = rec["toc"]
             self._committed_names = rec["segments"]
             self._meta = rec.get("meta", {})
+            self._heap_file = rec.get("heap", "heap.pmem")
             self._toc = {k: dict(v) for k, v in self._committed_toc.items()}
+        self._capacity = capacity
+        self.heap = PersistentHeap(os.path.join(path, self._heap_file), capacity)
+        # a crash between compaction's root flip and the old-file unlink
+        # leaves an orphan heap file: sweep anything the root doesn't name
+        for fn in os.listdir(path):
+            if fn.endswith(".pmem") and fn != self._heap_file:
+                os.remove(os.path.join(path, fn))
+
+    def _write_root(self, rec: dict) -> None:
+        """Atomic root-record update (tmp + fsync + rename)."""
+        tmp = self._root + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(rec, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(tmp, self._root)
 
     def write_segment(self, seg: Segment) -> None:
         t0 = time.perf_counter()
@@ -336,12 +518,33 @@ class ByteAddressableDirectory(Directory):
         self.clock.add_modeled("flush_write", self.device.byte_store_time(live.nbytes))
 
     def read_segment(self, name: str, base_doc: int) -> Segment:
+        import weakref
+
         t0 = time.perf_counter()
         offs = self._toc[name]
         arrays = {k: self.heap.load(off) for k, off in offs.items()}
         nbytes = sum(a.nbytes for a in arrays.values())
+        # the views are loaned: as long as any is referenced, gc must not
+        # move heap bytes out from under it
+        self._loans.extend(weakref.ref(a) for a in arrays.values())
         self.clock.add_real("read", time.perf_counter() - t0)
         # loads straight from the device at device read bandwidth; no VFS
+        self.clock.add_modeled("read", self.device.byte_load_time(nbytes))
+        return Segment.from_arrays(name, base_doc, arrays)
+
+    def open_for_write(self, name: str, base_doc: int) -> Segment:
+        """Recovery open for the writer: host *copies*, not loaned views.
+
+        The writer holds recovered segments until they merge away — if
+        those were zero-copy loans they would defer heap compaction for
+        the life of the index (the gc() loan check would always trip).
+        Readers keep the zero-copy path via read_segment.
+        """
+        t0 = time.perf_counter()
+        offs = self._toc[name]
+        arrays = {k: np.array(self.heap.load(off)) for k, off in offs.items()}
+        nbytes = sum(a.nbytes for a in arrays.values())
+        self.clock.add_real("read", time.perf_counter() - t0)
         self.clock.add_modeled("read", self.device.byte_load_time(nbytes))
         return Segment.from_arrays(name, base_doc, arrays)
 
@@ -354,13 +557,9 @@ class ByteAddressableDirectory(Directory):
             "segments": list(seg_names),
             "toc": {n: self._toc[n] for n in seg_names},
             "meta": meta or {},
+            "heap": self._heap_file,
         }
-        tmp = self._root + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(rec, f)
-            f.flush()
-            os.fsync(f.fileno())
-        os.rename(tmp, self._root)
+        self._write_root(rec)
         self.clock.add_real("commit", time.perf_counter() - t0)
         # modeled: barrier + 8-byte root pointer store (the root json stands in
         # for what on real pmem is an atomic root-offset update)
@@ -377,6 +576,99 @@ class ByteAddressableDirectory(Directory):
         if self._committed_gen < 0:
             return None
         return self._committed_gen, list(self._committed_names), dict(self._meta)
+
+    # -- storage reclamation -------------------------------------------------
+    def gc(self, live_names: List[str]) -> Dict[str, int]:
+        """Free TOC entries of dead segments; compact the heap when the
+        garbage (dead allocations + superseded live bitmaps) outweighs the
+        live data.  Runs right after a commit, so ``live_names`` equals the
+        committed set and the compacted state can be re-rooted in place."""
+        keep = set(live_names)
+        removed = 0
+        for name in [n for n in self._toc if n not in keep]:
+            del self._toc[name]
+            removed += 1
+        # footprint (extent rounded to alignment), NOT raw extent: padding
+        # survives compaction, so counting it as garbage would trip the
+        # threshold forever on small-segment indexes
+        live_bytes = sum(
+            self.heap.footprint(off)
+            for entry in self._toc.values()
+            for off in entry.values()
+        )
+        dead_bytes = max(0, self.heap.tail - self.heap.HEADER - live_bytes)
+        reclaimed = 0
+        if dead_bytes > max(4096, live_bytes // 2):
+            self._loans = [r for r in self._loans if r() is not None]
+            if self._loans:
+                # a zero-copy reader still holds heap views: defer until
+                # those searchers are released (checked again next gc)
+                self.gc_info["deferred"] += 1
+            else:
+                reclaimed = self._compact()
+        return {
+            "reclaimed_bytes": reclaimed,
+            "removed": removed,
+            "dead_bytes": dead_bytes,
+        }
+
+    def _compact(self) -> int:
+        """Re-pack every live allocation into a FRESH heap file and swap.
+
+        Crash-atomicity: the old heap file is never overwritten.  Live
+        arrays are copied into a new ``heap_N.pmem``, barriered, and only
+        then does one atomic root-record rename flip (heap file, TOC)
+        together — a power failure at any point recovers either the old
+        pair or the new pair, never a mix.  The old file is deleted after
+        the flip; afterwards the heap holds exactly the live index (plus
+        alignment) and freed space is reused by future stores.
+        """
+        from repro.storage.heap import PersistentHeap
+
+        t0 = time.perf_counter()
+        old_tail = self.heap.tail
+        old_file = self._heap_file
+        hosts = {
+            name: {k: np.array(self.heap.load(off)) for k, off in entry.items()}
+            for name, entry in self._toc.items()
+        }
+        new_file = f"heap_{self._committed_gen}_{self.gc_info['compactions']}.pmem"
+        nbytes = sum(
+            a.nbytes for arrays in hosts.values() for a in arrays.values()
+        )
+        # sparse file: capacity is an upper bound, not an allocation
+        new_heap = PersistentHeap(
+            os.path.join(self.path, new_file), max(1 << 20, 2 * nbytes)
+        )
+        new_toc: Dict[str, Dict[str, int]] = {}
+        for name, arrays in hosts.items():
+            new_toc[name] = {k: new_heap.store(a) for k, a in arrays.items()}
+        new_heap.barrier()
+        rec = {
+            "gen": self._committed_gen,
+            "segments": list(self._committed_names),
+            "toc": {n: dict(new_toc[n]) for n in self._committed_names if n in new_toc},
+            "meta": self._meta,
+            "heap": new_file,
+        }
+        self._write_root(rec)  # the atomic flip: root now names the new heap
+        self.heap.close()
+        os.remove(os.path.join(self.path, old_file))
+        self.heap = new_heap
+        self._heap_file = new_file
+        self._toc = new_toc
+        self._committed_toc = {n: dict(v) for n, v in new_toc.items()}
+        reclaimed = old_tail - new_heap.tail
+        self.gc_info["compactions"] += 1
+        self.gc_info["reclaimed_bytes"] += reclaimed
+        self.clock.add_real("gc", time.perf_counter() - t0)
+        self.clock.add_modeled(
+            "gc", self.device.byte_store_time(nbytes) + self.device.byte_barrier_s
+        )
+        return reclaimed
+
+    def storage_bytes(self) -> int:
+        return self.heap.tail
 
     def crash(self) -> None:
         """NVM after power loss: committed watermark survives; the rest is
@@ -412,12 +704,13 @@ class RAMDirectory(Directory):
         )
 
     def write_live(self, name: str, live: np.ndarray) -> None:
-        self._segs[name].live = live
+        # copy-on-write: swap in a clone so a Searcher holding the stored
+        # segment object keeps its point-in-time bitmap
+        self._segs[name] = self._segs[name].with_live(live)
 
     def read_segment(self, name: str, base_doc: int) -> Segment:
-        seg = self._segs[name]
-        seg.base_doc = base_doc
-        return seg
+        # snapshot-safe: rebase via a clone, never on the shared object
+        return self._segs[name].with_base(base_doc)
 
     def commit(self, seg_names: List[str], meta: Optional[dict] = None) -> int:
         self._gen += 1
@@ -430,10 +723,24 @@ class RAMDirectory(Directory):
             return None
         return self._gen, list(self._names), dict(self._meta)
 
+    def gc(self, live_names: List[str]) -> Dict[str, int]:
+        keep = set(live_names)
+        reclaimed = 0
+        removed = 0
+        for name in [n for n in self._segs if n not in keep]:
+            reclaimed += self._segs[name].nbytes()
+            del self._segs[name]
+            removed += 1
+        return {"reclaimed_bytes": reclaimed, "removed": removed}
+
+    def storage_bytes(self) -> int:
+        return sum(seg.nbytes() for seg in self._segs.values())
+
     def crash(self) -> None:
         self._segs.clear()  # DRAM: everything is gone
         self._gen = -1
         self._names = []
+        self._meta = {}
 
     def list_segments(self) -> List[str]:
         return sorted(self._segs)

@@ -59,9 +59,16 @@ class SearchEngine:
         # engine-owned device cache: segment arrays stay resident across
         # NRT reopens (only new/changed segments are uploaded)
         self.device_cache = SegmentDeviceCache()
+        self.writer.merge_listeners.append(self._on_merge)
         self.manager = SearcherManager(
             self.writer, use_pallas=use_pallas, device_cache=self.device_cache
         )
+
+    def _on_merge(self, writer) -> None:
+        """Merge listener (fires once per converged cascade): stage the
+        final merge outputs on device immediately so the next reopen pays
+        only for what the merges produced."""
+        self.device_cache.warm_merged(writer.segments)
 
     # -- indexing -------------------------------------------------------------
     def add(self, fields: Dict[str, str], doc_values: Optional[Dict] = None) -> int:
@@ -103,6 +110,7 @@ class SearchEngine:
         eng.writer = IndexWriter(self.directory, self.analyzer)
         # post-crash device state is untrusted: start from a cold cache
         eng.device_cache = SegmentDeviceCache()
+        eng.writer.merge_listeners.append(eng._on_merge)
         eng.manager = SearcherManager(
             eng.writer, use_pallas=self.use_pallas, device_cache=eng.device_cache
         )

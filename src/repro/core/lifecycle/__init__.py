@@ -1,0 +1,27 @@
+"""Segment lifecycle: point-in-time snapshots, merge policy, file GC.
+
+This package owns everything that happens to a segment *after* flush:
+
+  * ``infos``     — ``SegmentInfos``, the immutable point-in-time snapshot
+    a ``Searcher`` holds (the writer never mutates a published snapshot);
+  * ``policy``    — ``TieredMergePolicy``, size-tiered + deletes-percentage
+    merge candidate selection (replaces the hard-coded prefix merge);
+  * ``scheduler`` — ``MergeScheduler``, cascading execution of the policy's
+    candidates with per-reason accounting.
+
+File/heap reclamation of merged-away segments is the ``Directory.gc``
+contract (see ``repro.core.directory``): the writer calls it after every
+commit with the set of live segment names.
+"""
+
+from repro.core.lifecycle.infos import SegmentInfos
+from repro.core.lifecycle.policy import MergeSpec, TieredMergePolicy
+from repro.core.lifecycle.scheduler import MergeScheduler, MergeStats
+
+__all__ = [
+    "SegmentInfos",
+    "MergeSpec",
+    "TieredMergePolicy",
+    "MergeScheduler",
+    "MergeStats",
+]

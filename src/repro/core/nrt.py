@@ -16,12 +16,21 @@ from __future__ import annotations
 import time
 from typing import Optional
 
+from repro.core.lifecycle import SegmentInfos
 from repro.core.query.cache import SegmentDeviceCache
 from repro.core.search import Searcher
 from repro.core.writer import IndexWriter
 
 
 class SearcherManager:
+    """Holds the current point-in-time ``SegmentInfos`` snapshot.
+
+    The manager never looks at the writer's segments directly except to
+    take the next immutable snapshot at reopen — so a Searcher it handed
+    out keeps bit-identical results while the writer flushes, deletes, and
+    merges underneath it.
+    """
+
     def __init__(
         self,
         writer: IndexWriter,
@@ -34,7 +43,7 @@ class SearcherManager:
         self.device_cache = (
             device_cache if device_cache is not None else SegmentDeviceCache()
         )
-        self._gen = -1
+        self._infos: Optional[SegmentInfos] = None
         self._searcher: Optional[Searcher] = None
         self.reopen_times: list = []
         self.maybe_reopen(force_flush=False)
@@ -44,6 +53,12 @@ class SearcherManager:
         assert self._searcher is not None
         return self._searcher
 
+    @property
+    def infos(self) -> SegmentInfos:
+        """The snapshot the current searcher was opened on."""
+        assert self._infos is not None
+        return self._infos
+
     def maybe_reopen(self, force_flush: bool = True) -> float:
         """Reopen: flush the indexing buffer and refresh the searcher.
 
@@ -52,17 +67,19 @@ class SearcherManager:
         t0 = time.perf_counter()
         if force_flush and self.writer.buffered_docs:
             self.writer.flush()
-        if self.writer.generation != self._gen:
+        infos = self.writer.infos
+        if self._infos is None or infos.generation != self._infos.generation:
             self._searcher = Searcher(
-                self.writer.segments,
+                infos,
                 analyzer=self.writer.analyzer,
                 use_pallas=self.use_pallas,
                 device_cache=self.device_cache,
             )
             # evict merged-away segments, upload the new ones: reopen cost
             # is proportional to what changed, not to the index size
-            self.device_cache.sync(self.writer.segments)
-            self._gen = self.writer.generation
+            # (freshly merged segments were pre-warmed at merge time)
+            self.device_cache.sync(infos.segments)
+            self._infos = infos
         dt = time.perf_counter() - t0
         self.reopen_times.append(dt)
         return dt

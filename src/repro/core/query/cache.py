@@ -41,6 +41,7 @@ class CacheStats:
     hits: int = 0
     evictions: int = 0
     transient_uploads: int = 0  # stale views staged outside the store
+    merge_warmups: int = 0  # post-merge warmups (scheduler-driven)
 
     def snapshot(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -132,6 +133,14 @@ class SegmentDeviceCache:
         """retain + warm against the current segment list."""
         self.retain([s.name for s in segments])
         self.warm(segments)
+
+    def warm_merged(self, segments: Sequence[Segment]) -> None:
+        """Merge-time warmup: evict merged-away members, upload the merge
+        output now — so the post-merge reopen's ``sync`` finds everything
+        resident and its cost stays proportional to the merge output, not
+        the index size."""
+        self.stats.merge_warmups += 1
+        self.sync(segments)
 
     def clear(self) -> None:
         self.retain([])

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.analyzer import Analyzer, term_hash
+from repro.core.lifecycle.infos import SegmentInfos
 from repro.core.query.cache import SegmentDeviceCache
 from repro.core.query.exec import (
     _bool_topk,
@@ -92,14 +93,21 @@ class Searcher:
 
     def __init__(
         self,
-        segments: Sequence[Segment],
+        segments: "SegmentInfos | Sequence[Segment]",
         analyzer: Optional[Analyzer] = None,
         k1: float = K1_DEFAULT,
         b: float = B_DEFAULT,
         use_pallas: bool = False,
         device_cache: Optional[SegmentDeviceCache] = None,
     ) -> None:
-        self.segments = list(segments)
+        # a SegmentInfos IS the point-in-time contract: the writer only
+        # publishes new snapshots, never mutates one this view holds
+        if isinstance(segments, SegmentInfos):
+            self.infos: Optional[SegmentInfos] = segments
+            self.segments = list(segments.segments)
+        else:
+            self.infos = None
+            self.segments = list(segments)
         self.analyzer = analyzer or Analyzer()
         self.k1, self.b = k1, b
         self.use_pallas = use_pallas

@@ -103,6 +103,20 @@ class Segment:
             doc_values=dv,
         )
 
+    # -- copy-on-write clones (lifecycle discipline) -------------------
+    # A published Segment is immutable: deletes and merges swap in clones
+    # sharing every array except the one field that changed, so any
+    # point-in-time Searcher holding the original keeps its exact view.
+    def with_live(self, live: np.ndarray) -> "Segment":
+        """Clone with a new deletion bitmap (arrays shared, identity new)."""
+        return dataclasses.replace(self, live=live)
+
+    def with_base(self, base_doc: int) -> "Segment":
+        """Clone rebased to ``base_doc``; returns self when unchanged."""
+        if base_doc == self.base_doc:
+            return self
+        return dataclasses.replace(self, base_doc=base_doc)
+
     # ------------------------------------------------------------------
     def term_slot(self, th: int) -> int:
         """searchsorted lookup; returns -1 if absent."""

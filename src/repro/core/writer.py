@@ -6,20 +6,33 @@ Semantics (paper §2.2–2.3, Fig 2):
   flush()       -> buffer frozen into an immutable segment, written through
                    the Directory (searchable after the next reopen; durable
                    ONLY on the byte path)
-  commit()      -> flush + durability barrier + new commit point
+  commit()      -> flush + durability barrier + new commit point + file GC
   crash+recover -> reopen from the latest commit point; on the byte path the
                    committed heap state is exactly restored.
+
+Segment state is an immutable ``SegmentInfos`` snapshot (``self.infos``):
+every mutation — flush, delete, merge — publishes a *new* snapshot built
+from copy-on-write clones, never touching a Segment a Searcher may hold.
+Merging is delegated to a ``TieredMergePolicy`` + ``MergeScheduler``
+(``repro.core.lifecycle``); after each commit the writer asks the Directory
+to garbage-collect storage for segments no snapshot references.
 """
 
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.analyzer import Analyzer, term_hash
 from repro.core.directory import Directory
+from repro.core.lifecycle import (
+    MergeScheduler,
+    MergeSpec,
+    SegmentInfos,
+    TieredMergePolicy,
+)
 from repro.core.segment import Segment, build_segment, merge_segments
 
 
@@ -29,22 +42,56 @@ class IndexWriter:
         directory: Directory,
         analyzer: Optional[Analyzer] = None,
         merge_factor: int = 10,
+        merge_policy: Optional[TieredMergePolicy] = None,
+        merge_scheduler: Optional[MergeScheduler] = None,
     ) -> None:
         self.directory = directory
         self.analyzer = analyzer or Analyzer()
-        self.merge_factor = merge_factor
+        self.merge_policy = merge_policy or TieredMergePolicy(
+            segments_per_tier=merge_factor, max_merge_at_once=merge_factor
+        )
+        self.merge_scheduler = merge_scheduler or MergeScheduler(self.merge_policy)
+        # called once per converged merge cascade with the writer; the
+        # engine hooks device-cache warmup of fresh merge outputs here
+        self.merge_listeners: List[Callable[["IndexWriter"], None]] = []
+        self.gc_stats: Dict[str, int] = {"runs": 0, "reclaimed_bytes": 0, "removed": 0}
 
         # DRAM indexing buffer
         self._buf_terms: Dict[int, List] = {}
         self._buf_doc_lens: List[int] = []
         self._buf_dv: Dict[str, List] = {}
-        self._buf_deletes: List[int] = []  # term hashes deleted since flush
+        # (term hash, buffer watermark): a buffered delete applies only to
+        # docs buffered BEFORE the delete_by_term call (Lucene semantics)
+        self._buf_deletes: List[Tuple[int, int]] = []
 
-        self.segments: List[Segment] = []  # flushed (searchable) segments
+        self._infos = SegmentInfos.empty()
         self._seg_counter = 0
-        self.generation = 0  # bumped on every flush (NRT reopen watches this)
 
         self._recover()
+
+    # ------------------------------------------------------------------
+    @property
+    def infos(self) -> SegmentInfos:
+        """The current point-in-time snapshot (immutable)."""
+        return self._infos
+
+    @property
+    def segments(self) -> List[Segment]:
+        return list(self._infos.segments)
+
+    @property
+    def generation(self) -> int:
+        """Bumped on every published change (NRT reopen watches this)."""
+        return self._infos.generation
+
+    @property
+    def merge_factor(self) -> int:
+        return self.merge_policy.segments_per_tier
+
+    @merge_factor.setter
+    def merge_factor(self, value: int) -> None:
+        self.merge_policy.segments_per_tier = value
+        self.merge_policy.max_merge_at_once = value
 
     # ------------------------------------------------------------------
     def _recover(self) -> None:
@@ -53,13 +100,14 @@ class IndexWriter:
         if latest is None:
             return
         _, names, meta = latest
+        segs: List[Segment] = []
         base = 0
         for name in names:
-            seg = self.directory.read_segment(name, base)
-            self.segments.append(seg)
+            seg = self.directory.open_for_write(name, base)
+            segs.append(seg)
             base += seg.n_docs
         self._seg_counter = int(meta.get("seg_counter", len(names)))
-        self.generation += 1
+        self._infos = SegmentInfos.opened(segs)
 
     # ------------------------------------------------------------------
     @property
@@ -68,7 +116,7 @@ class IndexWriter:
 
     @property
     def next_doc(self) -> int:
-        return sum(s.n_docs for s in self.segments) + len(self._buf_doc_lens)
+        return self._infos.total_docs + len(self._buf_doc_lens)
 
     def ram_bytes_used(self) -> int:
         n = 0
@@ -100,27 +148,33 @@ class IndexWriter:
             while len(col) < local:
                 col.append(0)
             col.append(dv.get(k, 0))
-        return sum(s.n_docs for s in self.segments) + local
+        return self._infos.total_docs + local
 
     def delete_by_term(self, field: str, token: str) -> int:
         """Mark every document containing (field, token) deleted.
 
-        Applied immediately to flushed segments (liv bitmap) and remembered
-        for the in-buffer docs (applied at flush) — Lucene's buffered-deletes.
+        Flushed segments get *cloned* live bitmaps published in a new
+        snapshot — an open Searcher keeps its point-in-time view until the
+        next reopen.  For in-buffer docs the delete is remembered with the
+        current buffer watermark and applied at flush to the docs indexed
+        before this call (Lucene's buffered-deletes ordering).
         """
         th = term_hash(field, token)
         n = 0
-        for seg in self.segments:
+        replaced: Dict[str, Segment] = {}
+        for seg in self._infos.segments:
             docs, _ = seg.postings(th)
+            docs = docs[seg.live[docs]] if len(docs) else docs  # still-live only
             if len(docs):
                 live = seg.live.copy()  # new identity: searcher caches key
                 live[docs] = False      # off the array object
-                seg.live = live
-                self.directory.write_live(seg.name, seg.live)
+                replaced[seg.name] = seg.with_live(live)
+                self.directory.write_live(seg.name, live)
                 n += len(docs)
-        self._buf_deletes.append(th)
-        if n:
-            self.generation += 1  # deletions are visible at next reopen
+        self._buf_deletes.append((th, len(self._buf_doc_lens)))
+        if replaced:
+            # deletions become visible at the next reopen, not before
+            self._infos = self._infos.with_replaced(replaced)
         return n
 
     # ------------------------------------------------------------------
@@ -135,63 +189,85 @@ class IndexWriter:
             return None
         name = f"_s{self._seg_counter:06d}"
         self._seg_counter += 1
-        base = sum(s.n_docs for s in self.segments)
+        base = self._infos.total_docs
         n_docs = len(self._buf_doc_lens)
         dv = {
             k: np.asarray(v + [0] * (n_docs - len(v)), dtype=np.int32)
             for k, v in self._buf_dv.items()
         }
         live = np.ones(n_docs, dtype=bool)
-        if self._buf_deletes:
-            for th in self._buf_deletes:
-                if th in self._buf_terms:
-                    for (d, _, _) in self._buf_terms[th]:
-                        live[d] = False
+        for th, watermark in self._buf_deletes:
+            for (d, _, _) in self._buf_terms.get(th, ()):
+                if d < watermark:  # only docs buffered before the delete
+                    live[d] = False
         seg = build_segment(
             name, base, self._buf_terms, self._buf_doc_lens, dv, live
         )
         self.directory.write_segment(seg)
-        self.segments.append(seg)
+        self._infos = self._infos.with_flushed(seg)
         self._buf_terms = {}
         self._buf_doc_lens = []
         self._buf_dv = {}
         self._buf_deletes = []
-        self.generation += 1
         self._maybe_merge()
         return seg
 
-    def _maybe_merge(self) -> None:
-        """Tiered background merge: when > merge_factor small segments exist,
-        merge them into one (new immutable segment)."""
-        if len(self.segments) <= self.merge_factor:
-            return
-        small = self.segments[: self.merge_factor]
-        rest = self.segments[self.merge_factor :]
+    # ------------------------------------------------------------------
+    def _maybe_merge(self, on_commit: bool = False) -> int:
+        """Run the merge policy to fixpoint (cascading tiered merges),
+        then notify listeners once — intermediate cascade outputs are
+        already garbage and must not be staged anywhere."""
+        ran = self.merge_scheduler.maybe_merge(self, on_commit=on_commit)
+        if ran:
+            for cb in self.merge_listeners:
+                cb(self)
+        return ran
+
+    def _execute_merge(self, spec: MergeSpec) -> Optional[Segment]:
+        """Merge ``spec``'s members into one new immutable segment and
+        publish the rebased snapshot.  Old members stay untouched for any
+        Searcher that holds them; their storage is reclaimed by the next
+        commit's GC."""
+        by_name = self._infos.by_name()
+        members = [by_name[n] for n in spec.segments]
         name = f"_m{self._seg_counter:06d}"
         self._seg_counter += 1
-        merged = merge_segments(name, small[0].base_doc, small)
-        self.directory.write_segment(merged)
-        # rebase the remaining segments' doc ids
-        base = merged.base_doc + merged.n_docs
-        for s in rest:
-            s.base_doc = base
-            base += s.n_docs
-        self.segments = [merged] + rest
-        self.generation += 1
+        merged: Optional[Segment] = merge_segments(
+            name, members[0].base_doc, members
+        )
+        if merged is not None and merged.n_docs == 0:
+            merged = None  # every doc was deleted: drop the members outright
+        if merged is not None:
+            self.directory.write_segment(merged)
+        self._infos = self._infos.with_merged(spec.segments, merged)
+        return merged
 
+    # ------------------------------------------------------------------
     def commit(self, meta: Optional[dict] = None) -> int:
-        """Flush + durability barrier + new commit point (paper's 'commit')."""
+        """Flush + durability barrier + new commit point (paper's 'commit'),
+        then GC storage for segments no longer referenced."""
         self.flush()
+        # deletes-triggered rewrites (and optional merge-on-commit
+        # consolidation) run even when the buffer was empty
+        self._maybe_merge(on_commit=self.merge_policy.merge_on_commit)
         m = dict(meta or {})
         m["seg_counter"] = self._seg_counter
         m["ts"] = time.time()
-        return self.directory.commit([s.name for s in self.segments], m)
+        names = self._infos.names()
+        gen = self.directory.commit(names, m)
+        res = self.directory.gc(names)
+        self.gc_stats["runs"] += 1
+        self.gc_stats["reclaimed_bytes"] += int(res.get("reclaimed_bytes", 0))
+        self.gc_stats["removed"] += int(res.get("removed", 0))
+        return gen
 
     # ------------------------------------------------------------------
     def stats(self) -> dict:
         return {
-            "segments": len(self.segments),
+            "segments": len(self._infos),
             "docs": self.next_doc,
             "buffered": self.buffered_docs,
             "generation": self.generation,
+            "merges": self.merge_scheduler.stats.snapshot(),
+            "gc": dict(self.gc_stats),
         }

@@ -50,6 +50,8 @@ def _align(n: int) -> int:
 class PersistentHeap:
     """Bump-allocated persistent array heap with a commit watermark."""
 
+    HEADER = _HEADER  # bytes of heap metadata before the first allocation
+
     def __init__(self, path: str, capacity_bytes: int = 1 << 28):
         self.path = path
         exists = os.path.exists(path) and os.path.getsize(path) >= _HEADER
@@ -124,6 +126,20 @@ class PersistentHeap:
         dtype = _DTYPES[code]
         flat = self._mm[payload : payload + nbytes].view(dtype)
         return flat.reshape(shape)
+
+    def extent(self, off: int) -> int:
+        """Total bytes of the allocation at ``off`` (header + payload)."""
+        head = self._mm[off : off + 16].view(np.uint64)
+        ndim = int(head[0]) & 0xFFFFFFFF
+        nbytes = int(head[1])
+        return 16 + 8 * ndim + nbytes
+
+    def footprint(self, off: int) -> int:
+        """Heap bytes the allocation at ``off`` actually occupies,
+        including the alignment of the next allocation's start — the
+        right unit for garbage accounting (compaction cannot reclaim
+        alignment padding, so padding must not count as garbage)."""
+        return _align(self.extent(off))
 
     def barrier(self) -> None:
         """Durability fence: everything stored so far becomes committed.
