@@ -1,4 +1,5 @@
-"""Sustained-ingest benchmark: flush + tiered merge + reopen + GC.
+"""Sustained-ingest benchmark: flush + tiered merge + reopen + GC, plus
+raw pipeline throughput (columnar vs the pre-PR reference path).
 
 Asadi & Lin's incremental-indexing results (and Lucene operational lore)
 say merge/lifecycle policy dominates sustained-ingest throughput — not
@@ -11,11 +12,18 @@ tiered policy + file GC are supposed to bound:
   * storage bytes vs live index bytes (GC invariant: bounded ratio),
   * reclaimed bytes (file GC on the FS path, heap compaction on the byte
     path),
-  * mean/max reopen latency (must track the flush size, not index size).
+  * mean/max reopen latency (must track the flush size, not index size),
+
+and — per directory kind — the raw add→flush→merge→commit pipeline:
+docs/sec, flush/merge/commit latency, and durability-barrier counts on
+the byte path (write-combining invariant: exactly one per commit).  The
+``ingest_speedup`` row pins the columnar pipeline against the reference
+(pre-columnar) dict-buffer path on the ram directory.
 
 ``--smoke`` runs a small configuration for CI: it fails loudly if the
 segment count or storage ratio regresses (a broken policy or GC shows up
-as unbounded growth long before it shows up as slow queries).
+as unbounded growth long before it shows up as slow queries), and its
+rows seed ``BENCH_ingest.json`` (see ``benchmarks/run.py --smoke``).
 """
 
 from __future__ import annotations
@@ -24,13 +32,80 @@ import argparse
 import shutil
 import tempfile
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.core import SearchEngine
+from repro.core.engine import make_directory
 from repro.core.search import TermQuery
+from repro.core.writer import IndexWriter
 from repro.data.corpus import CorpusConfig, synthetic_corpus
 
 KINDS = ("ram", "fs-ssd", "byte-pmem")
+
+
+def measure_pipeline(
+    kind: str,
+    n_docs: int = 10_000,
+    docs_per_flush: int = 1000,
+    flushes_per_commit: int = 2,
+    reference: bool = False,
+) -> Dict:
+    """Raw ingest pipeline: docs/sec + per-stage latency for one kind.
+
+    ``reference=True`` runs the pre-PR dict-buffer/per-term-loop path
+    (the writer keeps it as the parity oracle), which is what the
+    ``ingest_speedup`` row divides against.
+    """
+    path = None if kind == "ram" else tempfile.mkdtemp(prefix=f"pipe-{kind}-")
+    try:
+        d = make_directory(kind, path)
+        w = IndexWriter(d, use_reference_ingest=reference)
+        # materialize outside the timer: this measures the ingest pipeline,
+        # not the synthetic corpus generator
+        docs = list(synthetic_corpus(CorpusConfig(n_docs=n_docs, seed=17)))
+        flush_s: List[float] = []
+        commit_s: List[float] = []
+        t_wall = time.perf_counter()
+        flushes = 0
+        for i, (fields, dv) in enumerate(docs):
+            w.add_document(fields, dv)
+            if (i + 1) % docs_per_flush == 0:
+                t0 = time.perf_counter()
+                w.flush()
+                flush_s.append(time.perf_counter() - t0)
+                flushes += 1
+                if flushes % flushes_per_commit == 0:
+                    t0 = time.perf_counter()
+                    w.commit()
+                    commit_s.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        w.commit()
+        commit_s.append(time.perf_counter() - t0)
+        t_wall = time.perf_counter() - t_wall
+        ms = w.merge_scheduler.stats
+        row = {
+            "dir": kind,
+            "path": "reference" if reference else "columnar",
+            "docs": n_docs,
+            "docs_per_sec": n_docs / t_wall,
+            "wall_s": t_wall,
+            "flush_mean_ms": 1e3 * sum(flush_s) / max(len(flush_s), 1),
+            "flush_max_ms": 1e3 * max(flush_s) if flush_s else 0.0,
+            "merge_total_ms": 1e3 * ms.merge_s,
+            "merge_max_ms": 1e3 * ms.max_merge_s,
+            "merges": ms.merges,
+            "commit_mean_ms": 1e3 * sum(commit_s) / max(len(commit_s), 1),
+            "commits": len(commit_s),
+        }
+        if hasattr(d, "heap"):
+            row["barriers"] = d.heap.stats["barriers"]
+            row["barriers_per_commit"] = d.heap.stats["barriers"] / len(commit_s)
+            row["heap_reserves"] = d.heap.stats["reserves"]
+            row["heap_stores"] = d.heap.stats["stores"]
+        return row
+    finally:
+        if path is not None:
+            shutil.rmtree(path, ignore_errors=True)
 
 
 def run_one(
@@ -94,8 +169,37 @@ def run(smoke: bool = False) -> List[Dict]:
     return [run_one(kind, **kwargs) for kind in KINDS]
 
 
-def main(smoke: bool = False) -> List[str]:
-    rows = run(smoke=smoke)
+def run_pipeline(smoke: bool = False) -> List[Dict]:
+    """Raw-pipeline rows per kind + the columnar-vs-reference ram pair."""
+    n_docs = 1500 if smoke else 10_000
+    dpf = 250 if smoke else 1000
+    rows = [
+        measure_pipeline(kind, n_docs=n_docs, docs_per_flush=dpf)
+        for kind in KINDS
+    ]
+    rows.append(
+        measure_pipeline("ram", n_docs=n_docs, docs_per_flush=dpf, reference=True)
+    )
+    return rows
+
+
+def pipeline_speedup(pipe: List[Dict]) -> float:
+    """Columnar vs reference docs/sec on the ram directory (the perf gate
+    and the BENCH_ingest.json field — computed in one place)."""
+    ref = next(r for r in pipe if r["path"] == "reference")
+    col = next(r for r in pipe if r["dir"] == "ram" and r["path"] == "columnar")
+    return col["docs_per_sec"] / ref["docs_per_sec"]
+
+
+def main(
+    smoke: bool = False,
+    rows: Optional[List[Dict]] = None,
+    pipe: Optional[List[Dict]] = None,
+) -> List[str]:
+    if rows is None:
+        rows = run(smoke=smoke)
+    if pipe is None:
+        pipe = run_pipeline(smoke=smoke)
     out = []
     failures = []
     for r in rows:
@@ -119,6 +223,36 @@ def main(smoke: bool = False) -> List[str]:
             failures.append(
                 f"{r['dir']}: storage {r['storage_ratio']:.2f}x live index (GC broken?)"
             )
+    for r in pipe:
+        line = (
+            f"ingest_pipeline,{r['dir']}/{r['path']},{r['docs_per_sec']:.0f},docs_per_sec"
+            f";flush_mean_ms={r['flush_mean_ms']:.2f}"
+            f",flush_max_ms={r['flush_max_ms']:.2f}"
+            f",merge_total_ms={r['merge_total_ms']:.1f}"
+            f",commit_mean_ms={r['commit_mean_ms']:.2f}"
+        )
+        if "barriers" in r:
+            line += (
+                f",barriers={r['barriers']}"
+                f",barriers_per_commit={r['barriers_per_commit']:.2f}"
+            )
+            # write-combining gate: one durability barrier per commit
+            # (compactions add their own, so >1.0 only with compactions)
+            if r["barriers"] > r["commits"] + 2:
+                failures.append(
+                    f"{r['dir']}: {r['barriers']} barriers for {r['commits']} commits"
+                )
+        out.append(line)
+    speedup = pipeline_speedup(pipe)
+    n_docs = next(r["docs"] for r in pipe if r["path"] == "reference")
+    out.append(
+        f"ingest_speedup,ram@{n_docs}docs,{speedup:.2f},x_vs_reference_path"
+    )
+    # perf gate: the columnar pipeline must hold its win over the pre-PR
+    # path (>=3x at 10k docs on ram; smoke uses a smaller corpus where the
+    # fixed per-flush cost weighs more, so gate a notch lower)
+    if speedup < (2.0 if smoke else 3.0):
+        failures.append(f"ram columnar ingest only {speedup:.2f}x reference")
     if failures:
         raise SystemExit("ingest_bench regression: " + "; ".join(failures))
     return out

@@ -3,30 +3,102 @@
   commit_bench  — Fig 3: commit time vs commit frequency (SSD/PMEM/byte)
   search_bench  — Fig 5: per-family search QPS, hot vs cold page cache
   nrt_bench     — Fig 4: NRT QPS + reopen time vs commit frequency
+  ingest_bench  — sustained ingest: lifecycle metrics + pipeline docs/sec
   kernel_bench  — Pallas kernel microbench + analytic TPU roofline
   embedbag_bench— EmbeddingBag substrate op scaling
 
 Prints ``name,param,us_per_call,derived`` CSV lines.
-Run: PYTHONPATH=src python -m benchmarks.run [--only commit|search|nrt|kernel|embed]
+Run: PYTHONPATH=src python -m benchmarks.run [--only commit|search|nrt|ingest|kernel|embed]
+
+``--smoke`` is the CI perf-trajectory entry point: it runs the small
+ingest configuration (with its loud lifecycle/throughput regression
+gates) and writes ``BENCH_ingest.json`` — docs/sec, flush/commit latency,
+and durability-barrier counts per directory kind — which CI uploads as an
+artifact so every PR appends a point to the perf record.
 """
 
 import argparse
+import json
 import sys
 import time
+
+BENCH_INGEST_JSON = "BENCH_ingest.json"
+
+
+def run_smoke(out_path: str = BENCH_INGEST_JSON) -> dict:
+    """Small ingest benchmark -> BENCH_ingest.json (raises on regression)."""
+    from benchmarks import ingest_bench
+
+    lifecycle = ingest_bench.run(smoke=True)
+    pipeline = ingest_bench.run_pipeline(smoke=True)
+    payload = {
+        "bench": "ingest",
+        "mode": "smoke",
+        "kinds": {
+            r["dir"]: {
+                "docs_per_sec": round(r["docs_per_sec"], 1),
+                "flush_mean_ms": round(r["flush_mean_ms"], 3),
+                "merge_total_ms": round(r["merge_total_ms"], 3),
+                "commit_mean_ms": round(r["commit_mean_ms"], 3),
+                "commits": r["commits"],
+                **(
+                    {
+                        "barriers": r["barriers"],
+                        "barriers_per_commit": round(r["barriers_per_commit"], 3),
+                    }
+                    if "barriers" in r
+                    else {}
+                ),
+            }
+            for r in pipeline
+            if r["path"] == "columnar"
+        },
+        "speedup_vs_reference_ram": round(
+            ingest_bench.pipeline_speedup(pipeline), 2
+        ),
+        "lifecycle": {
+            r["dir"]: {
+                "segments": r["segments"],
+                "merges": r["merges"],
+                "storage_ratio": round(r["storage_ratio"], 3),
+                "reopen_mean_ms": round(r["reopen_mean_ms"], 3),
+            }
+            for r in lifecycle
+        },
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    # the printable gates (raises SystemExit on regression); reuses the
+    # rows measured above rather than re-running the benchmark
+    for line in ingest_bench.main(smoke=True, rows=lifecycle, pipe=pipeline):
+        print(line, flush=True)
+    print(f"# wrote {out_path}", file=sys.stderr)
+    return payload
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="CI mode: small ingest config, writes BENCH_ingest.json",
+    )
     args = ap.parse_args()
 
-    from benchmarks import commit_bench, kernel_bench, nrt_bench, search_bench
-    from benchmarks import embedbag_bench
+    if args.smoke:
+        run_smoke()
+        return
+
+    from benchmarks import commit_bench, ingest_bench, kernel_bench
+    from benchmarks import embedbag_bench, nrt_bench, search_bench
 
     suites = {
         "commit": commit_bench.main,
         "search": search_bench.main,
         "nrt": nrt_bench.main,
+        "ingest": ingest_bench.main,
         "kernel": kernel_bench.main,
         "embed": embedbag_bench.main,
     }

@@ -10,7 +10,15 @@ load/store) per the paper's central question.
 """
 
 from repro.core.analyzer import Analyzer, term_hash
-from repro.core.segment import Segment, build_segment, merge_segments
+from repro.core.columnar import ColumnarBuffer
+from repro.core.segment import (
+    Segment,
+    build_segment,
+    build_segment_columnar,
+    build_segment_reference,
+    merge_segments,
+    merge_segments_reference,
+)
 from repro.core.directory import (
     Directory,
     FSDirectory,
@@ -30,8 +38,12 @@ __all__ = [
     "Analyzer",
     "term_hash",
     "Segment",
+    "ColumnarBuffer",
     "build_segment",
+    "build_segment_columnar",
+    "build_segment_reference",
     "merge_segments",
+    "merge_segments_reference",
     "Directory",
     "FSDirectory",
     "ByteAddressableDirectory",

@@ -12,6 +12,10 @@ from __future__ import annotations
 import re
 from typing import Dict, Iterable, List, Tuple
 
+import numpy as np
+
+from repro.core.columnar import group_sorted
+
 _FNV_OFFSET = 0xCBF29CE484222325
 _FNV_PRIME = 0x100000001B3
 _MASK63 = (1 << 63) - 1
@@ -37,9 +41,21 @@ class Analyzer:
 
     def __init__(self, stopwords: Iterable[str] = ()):  # lucene default: none
         self.stopwords = frozenset(s.lower() for s in stopwords)
+        # (field -> token -> hash) memo: FNV is pure-Python, so the columnar
+        # ingest path amortizes it to once per distinct token (Zipf corpora
+        # make this hit rate very high).  Capped per field: an open
+        # vocabulary (ids, timestamps, typos) must not grow writer memory
+        # without bound — on overflow the memo resets and the hot Zipf
+        # head repopulates within a few documents.
+        self._hash_memo: Dict[str, Dict[str, int]] = {}
+
+    _HASH_MEMO_MAX = 1 << 17  # ~128k distinct tokens per field
 
     def tokenize(self, text: str) -> List[str]:
-        return [t for t in _TOKEN_RE.findall(text.lower()) if t not in self.stopwords]
+        toks = _TOKEN_RE.findall(text.lower())
+        if not self.stopwords:
+            return toks
+        return [t for t in toks if t not in self.stopwords]
 
     def analyze(self, field: str, text: str) -> List[Tuple[int, int]]:
         """Returns [(term_hash, position)] in document order."""
@@ -59,3 +75,55 @@ class Analyzer:
             freqs[th] = freqs.get(th, 0) + 1
             positions.setdefault(th, []).append(pos)
         return freqs, positions, len(stream)
+
+    _EMPTY_FIELD = (
+        np.empty(0, np.int64),
+        np.empty(0, np.int32),
+        np.empty(0, np.int32),
+        np.empty(0, np.int32),
+        0,
+    )
+
+    def term_freqs_columnar(
+        self, field: str, text: str
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, int]:
+        """Vectorized ``term_freqs``: columnar arrays instead of dicts.
+
+        Returns ``(terms, freqs, pos_starts, positions, doc_len)`` where
+
+          terms      (k,)  int64  sorted unique term hashes of this field
+          freqs      (k,)  int32  term frequency per unique term
+          pos_starts (k,)  int32  start of each term's span in ``positions``
+                                  (== exclusive prefix sum of ``freqs``)
+          positions  (n,)  int32  token positions grouped per term in
+                                  ``terms`` order, increasing within a group
+
+        The grouping is exactly the per-term position lists of
+        ``term_freqs``, flattened in sorted-term order — the columnar buffer
+        appends these spans verbatim.
+        """
+        toks = self.tokenize(text)
+        n = len(toks)
+        if n == 0:
+            return self._EMPTY_FIELD
+        memo = self._hash_memo.setdefault(field, {})
+        try:
+            hashes = np.fromiter(map(memo.__getitem__, toks), np.int64, count=n)
+        except KeyError:
+            if len(memo) + n > self._HASH_MEMO_MAX:
+                memo.clear()
+            for tok in toks:
+                if tok not in memo:
+                    memo[tok] = term_hash(field, tok)
+            hashes = np.fromiter(map(memo.__getitem__, toks), np.int64, count=n)
+        # one stable sort does all the grouping work: tokens sort by term
+        # hash while equal hashes keep token order, so ``order`` itself is
+        # the flat per-term position column and the group boundaries give
+        # unique terms + frequencies (np.unique would sort twice)
+        order = np.argsort(hashes, kind="stable")
+        starts, terms = group_sorted(hashes[order])
+        starts32 = starts.astype(np.int32)
+        ends = np.empty(len(starts), dtype=np.int32)
+        ends[:-1] = starts32[1:]
+        ends[-1] = n
+        return terms, ends - starts32, starts32, order.astype(np.int32), n

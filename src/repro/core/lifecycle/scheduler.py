@@ -12,6 +12,7 @@ split).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict
 
 from repro.core.lifecycle.policy import TieredMergePolicy
@@ -23,6 +24,8 @@ class MergeStats:
     segments_merged_away: int = 0
     docs_written: int = 0  # live docs copied into merge outputs
     docs_dropped: int = 0  # deleted docs reclaimed by merges
+    merge_s: float = 0.0   # wall seconds spent executing merges
+    max_merge_s: float = 0.0  # slowest single merge (ingest tail latency)
     by_reason: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def snapshot(self) -> Dict:
@@ -54,7 +57,11 @@ class MergeScheduler:
             before = writer.infos.by_name()
             in_docs = sum(before[n].n_docs for n in spec.segments)
             live_docs = sum(before[n].n_live for n in spec.segments)
+            t0 = time.perf_counter()
             writer._execute_merge(spec)
+            dt = time.perf_counter() - t0
+            self.stats.merge_s += dt
+            self.stats.max_merge_s = max(self.stats.max_merge_s, dt)
             self.stats.merges += 1
             self.stats.segments_merged_away += len(spec.segments)
             self.stats.docs_written += live_docs

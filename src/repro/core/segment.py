@@ -26,6 +26,8 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.columnar import group_sorted
+
 
 @dataclasses.dataclass
 class Segment:
@@ -145,7 +147,7 @@ class Segment:
         return self.positions[int(self.pos_offsets[j]) : int(self.pos_offsets[j + 1])]
 
 
-def build_segment(
+def build_segment_reference(
     name: str,
     base_doc: int,
     buffer: Dict[int, List],  # term -> [(doc_local, freq, positions)]
@@ -153,7 +155,13 @@ def build_segment(
     doc_values: Dict[str, np.ndarray],
     live: Optional[np.ndarray] = None,
 ) -> Segment:
-    """Freeze a DRAM indexing buffer into an immutable segment (flush)."""
+    """Freeze a dict-of-postings DRAM buffer into a segment (flush).
+
+    This is the pre-columnar per-term-loop implementation, kept as the
+    bit-parity oracle for ``build_segment_columnar`` (the same role
+    ``search_single`` plays for the batched executor): the parity tests
+    require the vectorized path to reproduce its output exactly.
+    """
     n_docs = len(doc_lens)
     terms = np.fromiter(buffer.keys(), dtype=np.int64, count=len(buffer))
     order = np.argsort(terms, kind="stable")
@@ -214,8 +222,11 @@ def build_segment(
     )
 
 
-def merge_segments(name: str, base_doc: int, segments: Sequence[Segment]) -> Segment:
-    """Tiered-merge: combine segments, dropping deleted docs and remapping ids.
+def merge_segments_reference(
+    name: str, base_doc: int, segments: Sequence[Segment]
+) -> Segment:
+    """Per-posting-loop merge, kept as the bit-parity oracle for
+    ``merge_segments`` (which must reproduce its output exactly).
 
     Lucene merges small segments into bigger ones in the background; merged
     segments are new immutable segments (old ones become garbage after the
@@ -225,6 +236,13 @@ def merge_segments(name: str, base_doc: int, segments: Sequence[Segment]) -> Seg
     maps: List[np.ndarray] = []
     new_doc_lens: List[np.ndarray] = []
     new_dv: Dict[str, List[np.ndarray]] = {}
+    # dv keys may differ across members (each flush pads only the keys it
+    # saw): members missing a key contribute zeros, like flush does — NOT
+    # nothing, which would leave the merged column shorter than n_docs
+    dv_dtypes: Dict[str, np.dtype] = {}
+    for seg in segments:
+        for k, v in seg.doc_values.items():
+            dv_dtypes.setdefault(k, v.dtype)
     cursor = 0
     for seg in segments:
         keep = seg.live
@@ -234,8 +252,11 @@ def merge_segments(name: str, base_doc: int, segments: Sequence[Segment]) -> Seg
         cursor += len(kept)
         maps.append(m)
         new_doc_lens.append(seg.doc_lens[kept])
-        for k, v in seg.doc_values.items():
-            new_dv.setdefault(k, []).append(v[kept])
+        for k, dt in dv_dtypes.items():
+            v = seg.doc_values.get(k)
+            new_dv.setdefault(k, []).append(
+                v[kept] if v is not None else np.zeros(len(kept), dtype=dt)
+            )
 
     buffer: Dict[int, List] = {}
     for seg, m in zip(segments, maps):
@@ -261,4 +282,184 @@ def merge_segments(name: str, base_doc: int, segments: Sequence[Segment]) -> Seg
     dv = {k: np.concatenate(v) for k, v in new_dv.items()}
     # postings in each term arrive ordered by (segment, local doc) which maps
     # to increasing new ids -> already sorted.
-    return build_segment(name, base_doc, buffer, doc_lens, dv)
+    return build_segment_reference(name, base_doc, buffer, doc_lens, dv)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized (columnar) flush and merge — the production path
+# ---------------------------------------------------------------------------
+
+
+def build_segment_columnar(
+    name: str,
+    base_doc: int,
+    term_col: np.ndarray,       # (n,) int64 term hash per posting
+    doc_col: np.ndarray,        # (n,) int32 buffer-local doc id
+    freq_col: np.ndarray,       # (n,) int32 term frequency
+    pos_off_col: np.ndarray,    # (n,) int64 span start into positions_col
+    positions_col: np.ndarray,  # (m,) int32 flat positions (span len == freq)
+    doc_lens: Sequence[int],
+    doc_values: Dict[str, np.ndarray],
+    live: Optional[np.ndarray] = None,
+) -> Segment:
+    """Freeze columnar posting columns into a segment: one lexsort + CSR.
+
+    Bit-identical to ``build_segment_reference`` fed the same postings (the
+    parity tests pin this): one ``np.lexsort`` over (term, doc) replaces the
+    per-term Python loop, ``np.unique`` yields term_ids/df/row pointers, and
+    the variable-length position spans are gathered with one fancy index.
+    """
+    n_docs = len(doc_lens)
+    n = len(term_col)
+
+    # primary key term, secondary key doc (lexsort: last key is primary)
+    order = np.lexsort((doc_col, term_col))
+    terms_sorted = term_col[order]
+    starts, term_ids = group_sorted(terms_sorted)
+    df = np.diff(np.append(starts, n))
+    offsets = np.zeros(len(term_ids) + 1, dtype=np.int32)
+    if len(df):
+        offsets[1:] = np.cumsum(df)
+
+    postings_docs = doc_col[order].astype(np.int32, copy=False)
+    postings_freqs = freq_col[order].astype(np.int32, copy=False)
+
+    # gather the per-posting position spans in the new order
+    lens = postings_freqs.astype(np.int64)
+    pos_offsets = np.zeros(n + 1, dtype=np.int32)
+    if n:
+        pos_offsets[1:] = np.cumsum(lens)
+    total = int(pos_offsets[-1])
+    if total:
+        src_start = pos_off_col[order]
+        row = np.repeat(np.arange(n, dtype=np.int64), lens)
+        idx = src_start[row] + (
+            np.arange(total, dtype=np.int64) - pos_offsets[:-1].astype(np.int64)[row]
+        )
+        positions = positions_col[idx]
+    else:
+        positions = np.zeros(0, dtype=np.int32)
+
+    return Segment(
+        name=name,
+        base_doc=base_doc,
+        term_ids=term_ids.astype(np.int64, copy=False),
+        term_df=df.astype(np.int32),
+        postings_offsets=offsets,
+        postings_docs=postings_docs,
+        postings_freqs=postings_freqs,
+        pos_offsets=pos_offsets,
+        positions=positions.astype(np.int32, copy=False),
+        doc_lens=np.asarray(doc_lens, dtype=np.int32),
+        live=(live if live is not None else np.ones(n_docs, dtype=bool)),
+        doc_values={k: np.asarray(v) for k, v in doc_values.items()},
+    )
+
+
+def _columns_from_buffer(buffer: Dict[int, List]):
+    """Expand a dict-of-postings buffer into flat posting columns (compat
+    shim for callers still holding the dict shape; not a hot path)."""
+    terms: List[int] = []
+    docs: List[int] = []
+    freqs: List[int] = []
+    pos_chunks: List[np.ndarray] = []
+    for th, plist in buffer.items():
+        for (d, f, pos) in plist:
+            terms.append(th)
+            docs.append(d)
+            freqs.append(f)
+            pos_chunks.append(np.asarray(pos, dtype=np.int32))
+    freq_col = np.asarray(freqs, dtype=np.int32)
+    pos_off = np.zeros(len(freqs), dtype=np.int64)
+    if len(freqs) > 1:
+        pos_off[1:] = np.cumsum([len(p) for p in pos_chunks[:-1]], dtype=np.int64)
+    positions = (
+        np.concatenate(pos_chunks) if pos_chunks else np.zeros(0, np.int32)
+    )
+    return (
+        np.asarray(terms, dtype=np.int64),
+        np.asarray(docs, dtype=np.int32),
+        freq_col,
+        pos_off,
+        positions.astype(np.int32, copy=False),
+    )
+
+
+def build_segment(
+    name: str,
+    base_doc: int,
+    buffer: Dict[int, List],  # term -> [(doc_local, freq, positions)]
+    doc_lens: Sequence[int],
+    doc_values: Dict[str, np.ndarray],
+    live: Optional[np.ndarray] = None,
+) -> Segment:
+    """Dict-buffer entry point, now routed through the vectorized CSR build
+    (``build_segment_columnar``).  The writer's hot path feeds columns
+    directly; this wrapper serves dict-shaped callers (tests, tools)."""
+    cols = _columns_from_buffer(buffer)
+    return build_segment_columnar(
+        name, base_doc, *cols, doc_lens=doc_lens, doc_values=doc_values, live=live
+    )
+
+
+def merge_segments(name: str, base_doc: int, segments: Sequence[Segment]) -> Segment:
+    """Vectorized tiered-merge: concatenate member posting columns, remap
+    doc ids with one prefix sum over the concatenated live masks, drop dead
+    postings with a boolean mask, then a single columnar CSR build.
+
+    Bit-identical to ``merge_segments_reference`` (pinned by the parity
+    tests), with no per-posting Python loop.
+    """
+    n_segs = len(segments)
+    doc_base = np.zeros(n_segs + 1, dtype=np.int64)
+    doc_base[1:] = np.cumsum([s.n_docs for s in segments])
+    pos_base = np.zeros(n_segs + 1, dtype=np.int64)
+    pos_base[1:] = np.cumsum([len(s.positions) for s in segments])
+
+    live_all = np.concatenate([s.live for s in segments])
+    # vectorized prefix-sum docid remap: live docs get dense new ids
+    new_id = np.cumsum(live_all, dtype=np.int64) - 1
+
+    term_all = np.concatenate(
+        [np.repeat(s.term_ids, np.diff(s.postings_offsets)) for s in segments]
+    )
+    doc_global = np.concatenate(
+        [s.postings_docs.astype(np.int64) + doc_base[i] for i, s in enumerate(segments)]
+    )
+    freq_all = np.concatenate([s.postings_freqs for s in segments])
+    pos_off_all = np.concatenate(
+        [s.pos_offsets[:-1].astype(np.int64) + pos_base[i] for i, s in enumerate(segments)]
+    )
+    positions_all = np.concatenate([s.positions for s in segments])
+
+    keep = live_all[doc_global]
+    doc_col = new_id[doc_global[keep]].astype(np.int32)
+
+    doc_lens = np.concatenate([s.doc_lens for s in segments])[live_all]
+    # dv keys may differ across members (each flush pads only the keys it
+    # saw): members missing a key contribute zeros, keeping every merged
+    # column exactly n_docs long (same rule as the reference merge)
+    dv_dtypes: Dict[str, np.dtype] = {}
+    for s in segments:
+        for k, v in s.doc_values.items():
+            dv_dtypes.setdefault(k, v.dtype)
+    new_dv: Dict[str, List[np.ndarray]] = {}
+    for s in segments:
+        for k, dt in dv_dtypes.items():
+            v = s.doc_values.get(k)
+            new_dv.setdefault(k, []).append(
+                v[s.live] if v is not None else np.zeros(int(s.live.sum()), dtype=dt)
+            )
+    dv = {k: np.concatenate(v) for k, v in new_dv.items()}
+
+    return build_segment_columnar(
+        name,
+        base_doc,
+        term_all[keep],
+        doc_col,
+        freq_all[keep],
+        pos_off_all[keep],
+        positions_all,
+        doc_lens=doc_lens,
+        doc_values=dv,
+    )

@@ -26,6 +26,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.analyzer import Analyzer, term_hash
+from repro.core.columnar import ColumnarBuffer
 from repro.core.directory import Directory
 from repro.core.lifecycle import (
     MergeScheduler,
@@ -33,7 +34,13 @@ from repro.core.lifecycle import (
     SegmentInfos,
     TieredMergePolicy,
 )
-from repro.core.segment import Segment, build_segment, merge_segments
+from repro.core.segment import (
+    Segment,
+    build_segment_columnar,
+    build_segment_reference,
+    merge_segments,
+    merge_segments_reference,
+)
 
 
 class IndexWriter:
@@ -44,6 +51,8 @@ class IndexWriter:
         merge_factor: int = 10,
         merge_policy: Optional[TieredMergePolicy] = None,
         merge_scheduler: Optional[MergeScheduler] = None,
+        flush_ram_mb: Optional[float] = None,
+        use_reference_ingest: bool = False,
     ) -> None:
         self.directory = directory
         self.analyzer = analyzer or Analyzer()
@@ -56,13 +65,24 @@ class IndexWriter:
         self.merge_listeners: List[Callable[["IndexWriter"], None]] = []
         self.gc_stats: Dict[str, int] = {"runs": 0, "reclaimed_bytes": 0, "removed": 0}
 
-        # DRAM indexing buffer
+        # auto-flush threshold (Lucene's ramBufferSizeMB); None = off
+        self.flush_ram_mb = flush_ram_mb
+        # the pre-columnar dict-buffer ingest path, kept as the bit-parity
+        # oracle and the pre-PR baseline in benchmarks (mirrors
+        # search_single vs search_batch)
+        self.use_reference_ingest = use_reference_ingest
+
+        # DRAM indexing buffer: columnar flat arrays (production path) or
+        # the reference term -> [(doc, freq, positions)] dict (oracle path)
+        self._buf = ColumnarBuffer()
         self._buf_terms: Dict[int, List] = {}
         self._buf_doc_lens: List[int] = []
         self._buf_dv: Dict[str, List] = {}
         # (term hash, buffer watermark): a buffered delete applies only to
         # docs buffered BEFORE the delete_by_term call (Lucene semantics)
         self._buf_deletes: List[Tuple[int, int]] = []
+        # maintained incrementally by add_document (O(1) ram_bytes_used)
+        self._ram_bytes = 0
 
         self._infos = SegmentInfos.empty()
         self._seg_counter = 0
@@ -119,10 +139,9 @@ class IndexWriter:
         return self._infos.total_docs + len(self._buf_doc_lens)
 
     def ram_bytes_used(self) -> int:
-        n = 0
-        for plist in self._buf_terms.values():
-            n += 24 * len(plist)
-        return n + 8 * len(self._buf_doc_lens)
+        """Buffered-postings footprint, maintained incrementally — O(1), so
+        it can be polled per document by the ``flush_ram_mb`` trigger."""
+        return self._ram_bytes
 
     # ------------------------------------------------------------------
     def add_document(
@@ -133,22 +152,44 @@ class IndexWriter:
         """Index one document into the DRAM buffer.  Returns global doc id."""
         local = len(self._buf_doc_lens)
         doc_len = 0
-        for fname, text in fields.items():
-            freqs, positions, flen = self.analyzer.term_freqs(fname, text)
-            doc_len += flen
-            for th, f in freqs.items():
-                self._buf_terms.setdefault(th, []).append(
-                    (local, f, positions[th])
+        if self.use_reference_ingest:
+            for fname, text in fields.items():
+                freqs, positions, flen = self.analyzer.term_freqs(fname, text)
+                doc_len += flen
+                for th, f in freqs.items():
+                    self._buf_terms.setdefault(th, []).append(
+                        (local, f, positions[th])
+                    )
+                self._ram_bytes += 24 * len(freqs)
+        else:
+            for fname, text in fields.items():
+                terms, freqs, starts, positions, flen = (
+                    self.analyzer.term_freqs_columnar(fname, text)
+                )
+                doc_len += flen
+                self._ram_bytes += self._buf.append_field(
+                    local, terms, freqs, starts, positions
                 )
         self._buf_doc_lens.append(doc_len)
-        dv = doc_values or {}
-        for k in set(self._buf_dv) | set(dv):
-            self._buf_dv.setdefault(k, [0] * local)
-            col = self._buf_dv[k]
-            while len(col) < local:
-                col.append(0)
-            col.append(dv.get(k, 0))
-        return self._infos.total_docs + local
+        self._ram_bytes += 8
+        # doc values: pad lazily with one extend when a key reappears (cols
+        # never seen again are padded once at flush) — the old per-doc
+        # backfill over every known key was O(n^2) per buffer
+        if doc_values:
+            for k, val in doc_values.items():
+                col = self._buf_dv.setdefault(k, [])
+                gap = local - len(col)
+                if gap > 0:
+                    col.extend([0] * gap)
+                col.append(val)
+                self._ram_bytes += 4 * (gap + 1)
+        gid = self._infos.total_docs + local
+        if (
+            self.flush_ram_mb is not None
+            and self._ram_bytes >= self.flush_ram_mb * (1 << 20)
+        ):
+            self.flush()
+        return gid
 
     def delete_by_term(self, field: str, token: str) -> int:
         """Mark every document containing (field, token) deleted.
@@ -195,22 +236,57 @@ class IndexWriter:
             k: np.asarray(v + [0] * (n_docs - len(v)), dtype=np.int32)
             for k, v in self._buf_dv.items()
         }
-        live = np.ones(n_docs, dtype=bool)
-        for th, watermark in self._buf_deletes:
-            for (d, _, _) in self._buf_terms.get(th, ()):
-                if d < watermark:  # only docs buffered before the delete
-                    live[d] = False
-        seg = build_segment(
-            name, base, self._buf_terms, self._buf_doc_lens, dv, live
-        )
+        if self.use_reference_ingest:
+            live = np.ones(n_docs, dtype=bool)
+            for th, watermark in self._buf_deletes:
+                for (d, _, _) in self._buf_terms.get(th, ()):
+                    if d < watermark:  # only docs buffered before the delete
+                        live[d] = False
+            seg = build_segment_reference(
+                name, base, self._buf_terms, self._buf_doc_lens, dv, live
+            )
+        else:
+            cols = self._buf.columns()
+            live = self._apply_buffered_deletes(cols[0], cols[1], n_docs)
+            seg = build_segment_columnar(
+                name, base, *cols, doc_lens=self._buf_doc_lens,
+                doc_values=dv, live=live,
+            )
         self.directory.write_segment(seg)
         self._infos = self._infos.with_flushed(seg)
+        self._buf = ColumnarBuffer()
         self._buf_terms = {}
         self._buf_doc_lens = []
         self._buf_dv = {}
         self._buf_deletes = []
+        self._ram_bytes = 0
         self._maybe_merge()
         return seg
+
+    def _apply_buffered_deletes(
+        self, term_col: np.ndarray, doc_col: np.ndarray, n_docs: int
+    ) -> np.ndarray:
+        """Vectorized buffered-deletes watermark: a buffered doc dies iff
+        some delete (term, watermark) matches one of its postings with
+        ``doc < watermark``.  Only the max watermark per term matters, so
+        one searchsorted over the sorted delete terms resolves every
+        posting at once (no nested Python loop over the buffer)."""
+        live = np.ones(n_docs, dtype=bool)
+        if not self._buf_deletes or not len(term_col):
+            return live
+        max_wm: Dict[int, int] = {}
+        for th, wm in self._buf_deletes:
+            if wm > max_wm.get(th, -1):
+                max_wm[th] = wm
+        dts = np.fromiter(max_wm.keys(), dtype=np.int64, count=len(max_wm))
+        dws = np.fromiter(max_wm.values(), dtype=np.int64, count=len(max_wm))
+        o = np.argsort(dts)
+        dts, dws = dts[o], dws[o]
+        idx = np.searchsorted(dts, term_col)
+        idx = np.minimum(idx, len(dts) - 1)
+        hit = (dts[idx] == term_col) & (doc_col < dws[idx])
+        live[doc_col[hit]] = False
+        return live
 
     # ------------------------------------------------------------------
     def _maybe_merge(self, on_commit: bool = False) -> int:
@@ -232,9 +308,10 @@ class IndexWriter:
         members = [by_name[n] for n in spec.segments]
         name = f"_m{self._seg_counter:06d}"
         self._seg_counter += 1
-        merged: Optional[Segment] = merge_segments(
-            name, members[0].base_doc, members
+        merge_fn = (
+            merge_segments_reference if self.use_reference_ingest else merge_segments
         )
+        merged: Optional[Segment] = merge_fn(name, members[0].base_doc, members)
         if merged is not None and merged.n_docs == 0:
             merged = None  # every doc was deleted: drop the members outright
         if merged is not None:
@@ -267,6 +344,7 @@ class IndexWriter:
             "segments": len(self._infos),
             "docs": self.next_doc,
             "buffered": self.buffered_docs,
+            "ram_bytes": self._ram_bytes,
             "generation": self.generation,
             "merges": self.merge_scheduler.stats.snapshot(),
             "gc": dict(self.gc_stats),

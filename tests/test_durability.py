@@ -72,6 +72,31 @@ def test_byte_path_commit_is_cheap(tmp_path):
     assert by_commit < fs_commit / 50, (fs_commit, by_commit)
 
 
+def test_byte_commit_issues_exactly_one_barrier(tmp_path):
+    """Write-combining invariant: however many segments and arrays a commit
+    covers, the byte path issues EXACTLY one durability barrier (the
+    collapse the paper predicts for a load/store redesign) — and segment
+    writes themselves issue none, only stores into reserved extents."""
+    eng = SearchEngine("byte-pmem", str(tmp_path / "b"))
+    heap = eng.directory.heap
+    _fill(eng, 20)
+    eng.flush()
+    _fill(eng, 20, prefix="beta")
+    eng.flush()
+    _fill(eng, 20, prefix="gamma")  # still buffered: commit must flush it
+    assert heap.stats["barriers"] == 0  # NRT flushes bought no durability
+    assert heap.stats["stores"] > 0 and heap.stats["reserves"] > 0
+    # write-combined: one extent reservation per segment write, not per array
+    assert heap.stats["reserves"] < heap.stats["stores"]
+    before = heap.stats["barriers"]
+    eng.commit()
+    heap = eng.directory.heap  # gc compaction may swap in a fresh heap
+    assert heap.stats["barriers"] == before + 1
+    before = heap.stats["barriers"]
+    eng.commit()  # empty commit: still exactly one barrier
+    assert eng.directory.heap.stats["barriers"] == before + 1
+
+
 def test_reopened_engine_continues_indexing(tmp_path):
     path = str(tmp_path / "c")
     eng = SearchEngine("byte-pmem", path)

@@ -1,0 +1,238 @@
+"""Columnar ingest parity: the vectorized flush/merge pipeline must be
+BIT-IDENTICAL to the reference (pre-columnar) implementations.
+
+``build_segment_reference``/``merge_segments_reference`` are the oracles
+(the per-term/per-posting Python loops the columnar path replaced); every
+segment array — term ids, CSR pointers, postings, positions, doc values,
+live bitmaps — must match exactly, across all three directory kinds and
+through each kind's serialization round-trip.
+
+Seeded tests always run; the hypothesis round-trip property runs when
+hypothesis is installed (same optional-dependency policy as
+test_properties.py, but the seeded coverage here never skips).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import make_directory
+from repro.core.segment import (
+    build_segment,
+    build_segment_reference,
+    merge_segments,
+    merge_segments_reference,
+)
+from repro.core.writer import IndexWriter
+
+KINDS = ("ram", "fs-ssd", "byte-pmem")
+TOKENS = [f"tok{i}" for i in range(40)]
+
+
+def assert_segments_identical(a, b, ctx=""):
+    assert a.name == b.name and a.base_doc == b.base_doc, ctx
+    aa, ba = a.arrays(), b.arrays()
+    assert set(aa) == set(ba), (ctx, set(aa) ^ set(ba))
+    for k, va in aa.items():
+        vb = ba[k]
+        assert va.dtype == vb.dtype, (ctx, k, va.dtype, vb.dtype)
+        assert va.shape == vb.shape, (ctx, k, va.shape, vb.shape)
+        np.testing.assert_array_equal(va, vb, err_msg=f"{ctx}:{k}")
+
+
+def random_docs(rng, n_docs):
+    """Random (fields, doc_values) batches exercising the buffer's edge
+    cases: empty fields, repeated tokens, sparse/late doc-value keys."""
+    docs = []
+    for i in range(n_docs):
+        n_body = int(rng.integers(0, 25))
+        body = " ".join(rng.choice(TOKENS, size=n_body)) if n_body else ""
+        title = " ".join(rng.choice(TOKENS, size=int(rng.integers(0, 4))))
+        dv = {}
+        if rng.random() < 0.6:
+            dv["month"] = int(rng.integers(0, 12))
+        if rng.random() < 0.3:
+            dv["late_key"] = int(rng.integers(0, 99))  # appears on some docs only
+        docs.append(({"title": title, "body": body}, dv))
+    return docs
+
+
+def ingest(kind, path, docs, reference, deletes=(), flush_every=7):
+    """Drive a writer end to end; returns (writer, directory)."""
+    d = make_directory(kind, path)
+    w = IndexWriter(d, merge_factor=3, use_reference_ingest=reference)
+    dmap = dict(deletes)
+    for i, (fields, dv) in enumerate(docs):
+        w.add_document(fields, dv)
+        if i in dmap:
+            w.delete_by_term("body", dmap[i])
+        if (i + 1) % flush_every == 0:
+            w.flush()
+    w.flush()
+    return w, d
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_pipeline_parity_flush_merge_roundtrip(kind, tmp_path):
+    """Full add -> buffered-delete -> flush -> tiered-merge pipeline parity,
+    read back through each directory's serialization."""
+    rng = np.random.default_rng(7)
+    docs = random_docs(rng, 60)
+    deletes = [(11, "tok3"), (25, "tok0"), (40, "tok7")]
+    wc, dc = ingest(kind, str(tmp_path / "col"), docs, False, deletes)
+    wr, dr = ingest(kind, str(tmp_path / "ref"), docs, True, deletes)
+
+    assert [s.name for s in wc.segments] == [s.name for s in wr.segments]
+    assert len(wc.segments) >= 1
+    merged_names = [s.name for s in wc.segments if s.name.startswith("_m")]
+    assert merged_names, "scenario must exercise the merge path"
+    base = 0
+    for sc, sr in zip(wc.segments, wr.segments):
+        # in-memory parity (what the searcher sees pre-serialization)
+        assert_segments_identical(sc, sr, f"{kind}:mem:{sc.name}")
+        # storage round-trip parity (packed FS codec / heap extents)
+        rc = dc.read_segment(sc.name, base)
+        rr = dr.read_segment(sr.name, base)
+        assert_segments_identical(rc, rr, f"{kind}:disk:{sc.name}")
+        base += sc.n_docs
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_merge_parity_direct(kind, tmp_path):
+    """merge_segments == merge_segments_reference on segments read back
+    from each directory kind (deleted docs dropped, ids remapped)."""
+    rng = np.random.default_rng(21)
+    docs = random_docs(rng, 40)
+    w, d = ingest(kind, str(tmp_path / "x"), docs, False, flush_every=9)
+    w.delete_by_term("body", "tok1")
+    segs = [d.read_segment(s.name, s.base_doc) for s in w.segments]
+    # give read-back segments the writer's live bitmaps (deletes applied)
+    segs = [r.with_live(s.live) for r, s in zip(segs, w.segments)]
+    assert sum(s.n_docs - s.n_live for s in segs) > 0
+    m_col = merge_segments("_m9", 0, segs)
+    m_ref = merge_segments_reference("_m9", 0, segs)
+    assert_segments_identical(m_col, m_ref, f"{kind}:merge")
+
+
+def test_build_segment_dict_wrapper_parity():
+    """The dict-buffer compat entry point routes through the columnar build
+    and still matches the reference exactly (incl. unsorted doc lists)."""
+    rng = np.random.default_rng(3)
+    for trial in range(20):
+        n_docs = int(rng.integers(1, 12))
+        buffer = {}
+        for th in rng.integers(1, 1 << 40, size=rng.integers(0, 8)):
+            docs = sorted(set(rng.integers(0, n_docs, size=rng.integers(1, 6)).tolist()))
+            plist = []
+            for dl in docs:
+                f = int(rng.integers(1, 5))
+                plist.append((dl, f, rng.integers(0, 50, size=f).astype(np.int32)))
+            buffer[int(th)] = plist
+        doc_lens = rng.integers(0, 30, size=n_docs).tolist()
+        dv = {"k": np.arange(n_docs, dtype=np.int32)}
+        live = rng.random(n_docs) < 0.8
+        a = build_segment("_s0", 0, buffer, doc_lens, dv, live.copy())
+        b = build_segment_reference("_s0", 0, buffer, doc_lens, dv, live.copy())
+        assert_segments_identical(a, b, f"trial{trial}")
+
+
+def test_buffered_delete_watermark_parity():
+    """Vectorized watermark application == reference nested loop: only docs
+    buffered BEFORE each delete die, later docs with the term survive."""
+    for kind_docs in (30, 55):
+        rng = np.random.default_rng(kind_docs)
+        docs = random_docs(rng, kind_docs)
+        deletes = [(5, "tok2"), (6, "tok2"), (20, "tok4"), (21, "tok2")]
+        wc, _ = ingest("ram", None, docs, False, deletes, flush_every=1000)
+        wr, _ = ingest("ram", None, docs, True, deletes, flush_every=1000)
+        for sc, sr in zip(wc.segments, wr.segments):
+            assert_segments_identical(sc, sr, "watermark")
+
+
+def test_ram_bytes_incremental_and_flush_trigger():
+    """ram_bytes_used is maintained incrementally (O(1) read) and drives
+    the flush_ram_mb auto-flush when enabled (default stays off)."""
+    w = IndexWriter(make_directory("ram"))
+    assert w.ram_bytes_used() == 0
+    w.add_document({"body": "a b c a"}, {"month": 3})
+    n1 = w.ram_bytes_used()
+    assert n1 > 0
+    w.add_document({"body": "d e"})
+    assert w.ram_bytes_used() > n1
+    w.flush()
+    assert w.ram_bytes_used() == 0  # buffer reset
+    # default off: large docs never auto-flush
+    for _ in range(50):
+        w.add_document({"body": "x " * 50})
+    assert w.buffered_docs == 50
+
+    wt = IndexWriter(make_directory("ram"), flush_ram_mb=0.001)  # ~1 KiB
+    for _ in range(50):
+        wt.add_document({"body": "y z " * 30})
+    assert wt.buffered_docs < 50, "auto-flush never fired"
+    assert wt.infos.total_docs + wt.buffered_docs == 50  # no docs lost
+    wt.flush()
+    assert wt.infos.total_docs == 50
+
+
+def test_fs_packed_layout_and_legacy_npz_fallback(tmp_path):
+    """New .seg files use the packed single-blob codec; pre-PR npz blobs
+    still load (read-path backward compatibility)."""
+    import io
+
+    from repro.core.directory import _PACK_MAGIC, FSDirectory
+
+    d = FSDirectory(str(tmp_path))
+    w = IndexWriter(d)
+    w.add_document({"body": "alpha beta alpha"}, {"month": 1})
+    seg = w.flush()
+    with open(tmp_path / f"{seg.name}.seg", "rb") as f:
+        assert f.read(8) == _PACK_MAGIC
+    rt = d.read_segment(seg.name, 0)
+    assert_segments_identical(seg, rt, "packed-roundtrip")
+
+    # legacy blob: what the pre-packing serializer produced
+    buf = io.BytesIO()
+    np.savez(buf, **seg.arrays())
+    with open(tmp_path / "_s000099.seg", "wb") as f:
+        f.write(buf.getvalue())
+    legacy = d.read_segment("_s000099", 0)
+    for k, v in seg.arrays().items():
+        np.testing.assert_array_equal(legacy.arrays()[k], v)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis round-trip property (optional dependency, seeded tests above
+# always run)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    def doc_batches():
+        doc = st.lists(st.sampled_from(TOKENS[:12]), min_size=0, max_size=15)
+        return st.lists(doc, min_size=1, max_size=25)
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        batch=doc_batches(),
+        flush_every=st.integers(1, 9),
+        delete_at=st.integers(0, 24),
+    )
+    def test_hypothesis_columnar_roundtrip_parity(batch, flush_every, delete_at):
+        """Random doc batches through the columnar pipeline produce segments
+        bit-identical to the reference pipeline (arrays, postings,
+        positions, live bitmaps), including mid-buffer deletes."""
+        docs = [({"body": " ".join(toks)}, {"m": i % 5}) for i, toks in enumerate(batch)]
+        deletes = [(min(delete_at, len(docs) - 1), TOKENS[0])]
+        wc, _ = ingest("ram", None, docs, False, deletes, flush_every)
+        wr, _ = ingest("ram", None, docs, True, deletes, flush_every)
+        assert [s.name for s in wc.segments] == [s.name for s in wr.segments]
+        for sc, sr in zip(wc.segments, wr.segments):
+            assert_segments_identical(sc, sr, "hyp")
