@@ -24,6 +24,16 @@ the byte path (write-combining invariant: exactly one per commit).  The
 segment count or storage ratio regresses (a broken policy or GC shows up
 as unbounded growth long before it shows up as slow queries), and its
 rows seed ``BENCH_ingest.json`` (see ``benchmarks/run.py --smoke``).
+
+``--shards N`` adds DWPT-style sharded-ingest rows (``ShardedEngine``):
+per directory kind, shards=1 vs shards=N through route → flush →
+cross-shard commit.  Each row reports the real single-process wall
+(shards run serially under the GIL) *and* the N-writer critical-path
+model — router/manifest overhead + the slowest shard's busy time, read
+off the writer's per-shard busy ledger — which is the same real-vs-modeled
+convention as ``SimClock``.  The ``ingest_sharded_speedup`` gate pins the
+modeled scaling (docs/sec at N shards >= 2x one shard on ram at 10k docs
+for N=4).
 """
 
 from __future__ import annotations
@@ -34,7 +44,7 @@ import tempfile
 import time
 from typing import Dict, List, Optional
 
-from repro.core import SearchEngine
+from repro.core import SearchEngine, ShardedEngine
 from repro.core.engine import make_directory
 from repro.core.search import TermQuery
 from repro.core.writer import IndexWriter
@@ -106,6 +116,82 @@ def measure_pipeline(
     finally:
         if path is not None:
             shutil.rmtree(path, ignore_errors=True)
+
+
+def measure_sharded_pipeline(
+    kind: str,
+    n_shards: int,
+    n_docs: int = 10_000,
+    docs_per_batch: int = 1000,
+    batches_per_commit: int = 2,
+) -> Dict:
+    """Sharded ingest pipeline: route → per-shard flush → cross-shard commit.
+
+    Shards run serially (``parallel=False``) so the per-shard busy ledger
+    is uncontended wall time; the row reports both the real serial wall and
+    the N-writer critical-path model (overhead + slowest shard).
+    """
+    path = None if kind == "ram" else tempfile.mkdtemp(prefix=f"shard-{kind}-")
+    eng = None
+    try:
+        eng = ShardedEngine(kind, path, n_shards=n_shards, parallel=False)
+        docs = list(synthetic_corpus(CorpusConfig(n_docs=n_docs, seed=17)))
+        t_wall = time.perf_counter()
+        batches = 0
+        for j in range(0, n_docs, docs_per_batch):
+            eng.add_documents(docs[j : j + docs_per_batch])
+            eng.flush()
+            batches += 1
+            if batches % batches_per_commit == 0:
+                eng.commit()
+        eng.commit()
+        wall = time.perf_counter() - t_wall
+        busy = list(eng.writer.shard_busy_s)
+        # critical-path model: serial wall = overhead + sum(busy); with N
+        # concurrent writers the wall collapses to overhead + max(busy)
+        overhead = max(wall - sum(busy), 0.0)
+        wall_model = overhead + max(busy)
+        return {
+            "dir": kind,
+            "shards": n_shards,
+            "docs": n_docs,
+            "docs_per_sec": n_docs / wall,
+            "docs_per_sec_model": n_docs / wall_model,
+            "wall_s": wall,
+            "wall_model_s": wall_model,
+            "busy_max_s": max(busy),
+            "busy_sum_s": sum(busy),
+            "balance": max(busy) / max(sum(busy) / n_shards, 1e-12),
+            "segments": sum(len(w.infos) for w in eng.writer.writers),
+        }
+    finally:
+        if eng is not None:
+            eng.close()
+        if path is not None:
+            shutil.rmtree(path, ignore_errors=True)
+
+
+def run_sharded(smoke: bool = False, n_shards: int = 4) -> List[Dict]:
+    """shards=1 vs shards=N rows per directory kind."""
+    n_docs = 1500 if smoke else 10_000
+    dpb = 250 if smoke else 1000
+    rows = []
+    for kind in KINDS:
+        for s in sorted({1, n_shards}):
+            rows.append(
+                measure_sharded_pipeline(
+                    kind, s, n_docs=n_docs, docs_per_batch=dpb
+                )
+            )
+    return rows
+
+
+def sharded_speedup(rows: List[Dict], kind: str = "ram") -> float:
+    """Modeled N-writer docs/sec over the 1-shard baseline (the gate and
+    the BENCH_ingest.json field — computed in one place)."""
+    base = next(r for r in rows if r["dir"] == kind and r["shards"] == 1)
+    best = next(r for r in rows if r["dir"] == kind and r["shards"] > 1)
+    return best["docs_per_sec_model"] / base["docs_per_sec_model"]
 
 
 def run_one(
@@ -258,9 +344,89 @@ def main(
     return out
 
 
+def main_sharded(rows: List[Dict], smoke: bool = False) -> List[str]:
+    """Printable sharded rows + the writer-parallelism scaling gate."""
+    out = []
+    for r in rows:
+        out.append(
+            f"ingest_sharded,{r['dir']}/s{r['shards']},"
+            f"{r['docs_per_sec_model']:.0f},docs_per_sec_model"
+            f";real={r['docs_per_sec']:.0f}"
+            f",busy_max_s={r['busy_max_s']:.2f}"
+            f",busy_sum_s={r['busy_sum_s']:.2f}"
+            f",balance={r['balance']:.2f}"
+            f",segments={r['segments']}"
+        )
+    failures = []
+    n_shards = max(r["shards"] for r in rows)
+    if n_shards < 2:
+        return out  # --shards 1: baseline rows only, nothing to gate
+    for kind in sorted({r["dir"] for r in rows}):
+        sp = sharded_speedup(rows, kind)
+        n_docs = next(r["docs"] for r in rows if r["dir"] == kind)
+        out.append(
+            f"ingest_sharded_speedup,{kind}@{n_docs}docs,{sp:.2f},"
+            f"x_vs_1_shard_model"
+        )
+        # scaling gate: N balanced writers must cut the modeled wall ~N x;
+        # anything under half of the 4-shard ideal (or well under the
+        # 2-shard ideal in smoke) means routing or coordination is eating
+        # the DWPT win
+        floor = 1.3 if smoke or n_shards < 4 else 2.0
+        if kind == "ram" and sp < floor:
+            failures.append(
+                f"ram sharded ingest only {sp:.2f}x at {n_shards} shards"
+            )
+    if failures:
+        raise SystemExit("ingest_bench regression: " + "; ".join(failures))
+    return out
+
+
+def append_sharded_json(rows: List[Dict], out_path: str) -> None:
+    """Upsert the sharded rows into ``BENCH_ingest.json`` (the CI perf
+    artifact ``benchmarks/run.py --smoke`` seeds): real serial wall + the
+    N-writer critical-path model per (kind, shard count)."""
+    import json
+    import os
+
+    payload = {"bench": "ingest"}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            payload = json.load(f)
+    payload["sharded"] = {
+        f"{r['dir']}/s{r['shards']}": {
+            "docs_per_sec": round(r["docs_per_sec"], 1),
+            "docs_per_sec_model": round(r["docs_per_sec_model"], 1),
+            "balance": round(r["balance"], 3),
+        }
+        for r in rows
+    }
+    if any(r["shards"] > 1 for r in rows):
+        payload["sharded_speedup_ram_model"] = round(sharded_speedup(rows), 2)
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="small CI configuration")
+    ap.add_argument(
+        "--shards",
+        type=int,
+        default=None,
+        metavar="N",
+        help="sharded-ingest rows: shards=1 vs shards=N per directory kind",
+    )
     args = ap.parse_args()
-    for line in main(smoke=args.smoke):
-        print(line)
+    if args.shards is not None:
+        rows = run_sharded(smoke=args.smoke, n_shards=args.shards)
+        if args.smoke:
+            # append before gating so the CI artifact records the point
+            # even when the scaling gate trips
+            append_sharded_json(rows, "BENCH_ingest.json")
+        for line in main_sharded(rows, smoke=args.smoke):
+            print(line)
+    else:
+        for line in main(smoke=args.smoke):
+            print(line)

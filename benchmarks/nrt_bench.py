@@ -14,16 +14,22 @@ between commits) but keep the mechanism identical:
     frequent-commit configs stop paying the fsync tax.
 
 Times combine measured compute with modeled storage (device constants).
+
+``--shards N`` adds sharded NRT rows (``ShardedEngine``, shards=1 vs N):
+flushes are 1/N the size per shard and per-shard reopens are independent,
+so reopen latency (the Fig 4b metric) tracks the slowest *shard's* flush
+— the row reports that critical-path reopen alongside QPS.
 """
 
 from __future__ import annotations
 
+import argparse
 import shutil
 import tempfile
 import time
 from typing import Dict, List
 
-from repro.core import SearchEngine
+from repro.core import SearchEngine, ShardedEngine
 from repro.core.search import TermQuery
 from repro.data.corpus import CorpusConfig, synthetic_corpus, _word
 
@@ -87,6 +93,58 @@ def run_one(kind: str, docs_per_commit: int) -> Dict:
         shutil.rmtree(path, ignore_errors=True)
 
 
+def run_one_sharded(kind: str, docs_per_commit: int, n_shards: int) -> Dict:
+    """The same protocol behind the sharded engine: route, reopen every
+    shard at the reopen tick, cross-shard commit at the commit tick.
+    ``eng.reopen()`` already returns the slowest shard's reopen latency
+    (the N-writer critical path)."""
+    path = None if kind == "ram" else tempfile.mkdtemp(prefix="nrt-sh-")
+    eng = None
+    try:
+        eng = ShardedEngine(kind, path, n_shards=n_shards, parallel=False)
+        n_q = 0
+        q_compute = 0.0
+        reopen_real: List[float] = []
+        docs = list(synthetic_corpus(CorpusConfig(n_docs=N_DOCS, seed=31)))
+        for d in eng.shards.dirs:
+            d.clock.reset()
+        for i, (fields, dv) in enumerate(docs):
+            eng.add(fields, dv)
+            if (i + 1) % REOPEN_EVERY == REOPEN_OFFSET:
+                reopen_real.append(eng.reopen())
+                for q in QUERIES:  # warm pass: JIT outside the timer
+                    eng.search(q)
+                t0 = time.perf_counter()
+                for q in QUERIES:
+                    eng.search(q)
+                    n_q += 1
+                q_compute += time.perf_counter() - t0
+            if (i + 1) % docs_per_commit == 0:
+                eng.commit()
+        # flush/merge CPU work steals cycles from the search thread (same
+        # argument as run_one); with N concurrent writers the steal is the
+        # slowest shard's share, not the sum
+        flush_max = max(
+            d.clock.modeled.get("flush_write", 0.0) for d in eng.shards.dirs
+        )
+        commit_modeled = sum(
+            d.clock.modeled.get("commit", 0.0) for d in eng.shards.dirs
+        )
+        return {
+            "dir": kind,
+            "shards": n_shards,
+            "docs_per_commit": docs_per_commit,
+            "qps": n_q / (q_compute + flush_max),
+            "reopen_ms": 1e3 * sum(reopen_real) / len(reopen_real),
+            "commit_s_modeled": commit_modeled,
+        }
+    finally:
+        if eng is not None:
+            eng.close()
+        if path is not None:
+            shutil.rmtree(path, ignore_errors=True)
+
+
 def run() -> List[Dict]:
     rows = []
     for freq in COMMIT_FREQS:
@@ -95,9 +153,27 @@ def run() -> List[Dict]:
     return rows
 
 
-def main():
-    rows = run()
+def run_sharded(n_shards: int) -> List[Dict]:
+    """shards=1 vs shards=N at the paper's middle commit frequency."""
+    rows = []
+    for kind in ("ram", "fs-ssd", "byte-pmem"):
+        for s in sorted({1, n_shards}):
+            rows.append(run_one_sharded(kind, 300, s))
+    return rows
+
+
+def main(shards=None):
     out = []
+    if shards is not None:
+        for r in run_sharded(shards):
+            out.append(
+                f"nrt_sharded,{r['dir']}@{r['docs_per_commit']}dpc/s{r['shards']},"
+                f"{1e6 / r['qps']:.0f},us_per_query"
+                f";qps={r['qps']:.2f},reopen_ms={r['reopen_ms']:.2f}"
+                f",commit_modeled_s={r['commit_s_modeled']:.4f}"
+            )
+        return out
+    rows = run()
     for r in rows:
         out.append(
             f"nrt_fig4,{r['dir']}@{r['docs_per_commit']}dpc,"
@@ -109,5 +185,14 @@ def main():
 
 
 if __name__ == "__main__":
-    for line in main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--shards",
+        type=int,
+        default=None,
+        metavar="N",
+        help="sharded NRT rows: shards=1 vs shards=N per directory kind",
+    )
+    args = ap.parse_args()
+    for line in main(shards=args.shards):
         print(line)

@@ -65,6 +65,9 @@ def run_smoke(out_path: str = BENCH_INGEST_JSON) -> dict:
             }
             for r in lifecycle
         },
+        # the DWPT writer-parallelism rows land in the same file via the
+        # CI job's `ingest_bench --shards 2 --smoke` step (one measurement,
+        # one writer: ingest_bench.append_sharded_json)
     }
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)

@@ -31,6 +31,20 @@ from repro.core.query.cache import CacheStats, SegmentDeviceCache
 from repro.core.search import Searcher, TopDocs
 from repro.core.nrt import SearcherManager
 from repro.core.engine import SearchEngine
+from repro.core.shard import (
+    HashFieldRouter,
+    HashIdRouter,
+    Router,
+    ShardSet,
+)
+from repro.core.sharded import (
+    EXT_ID_FIELD,
+    ShardedEngine,
+    ShardedSearcher,
+    ShardedSearcherManager,
+    ShardedWriter,
+    ShardSearcher,
+)
 
 __all__ = [
     "CacheStats",
@@ -54,4 +68,14 @@ __all__ = [
     "TopDocs",
     "SearcherManager",
     "SearchEngine",
+    "Router",
+    "HashIdRouter",
+    "HashFieldRouter",
+    "ShardSet",
+    "EXT_ID_FIELD",
+    "ShardedWriter",
+    "ShardSearcher",
+    "ShardedSearcher",
+    "ShardedSearcherManager",
+    "ShardedEngine",
 ]

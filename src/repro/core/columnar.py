@@ -1,11 +1,15 @@
 """Columnar DRAM indexing buffer: flat append-only arrays, no per-posting
 Python objects.
 
-Asadi & Lin's incremental-indexing result (and Lucene's own flush design)
-is that ingest throughput is bounded by per-record software overhead, not
-by the storage medium — a dict of per-term Python tuple lists pays that
-overhead on every posting.  This buffer instead keeps one growable column
-per posting attribute:
+This is the volatile half of the paper's indexing pipeline (§2.2, Fig 2a:
+``addDocument`` lands in a DRAM buffer that is neither searchable nor
+durable until ``flush``); the buffer's freeze is exactly the flush whose
+cost the paper's NRT reopen measurement pays (§2.3, Fig 4b).  Asadi &
+Lin's incremental-indexing result (and Lucene's own flush design) is that
+ingest throughput is bounded by per-record software overhead, not by the
+storage medium — a dict of per-term Python tuple lists pays that overhead
+on every posting.  This buffer instead keeps one growable column per
+posting attribute:
 
   term_hash  (n,) int64  term of the posting
   doc_local  (n,) int32  buffer-local doc id

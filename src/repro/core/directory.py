@@ -105,6 +105,24 @@ class Directory(ABC):
     def latest_commit(self) -> Optional[Tuple[int, List[str], dict]]:
         ...
 
+    def rollback_to(self, gen: int) -> bool:
+        """Reinstate commit point ``gen`` as the latest (``-1`` = no commit).
+
+        Cross-shard recovery support: when a crash tears a commit *wave*
+        (some shards committed generation g+1, the cross-shard manifest
+        still names g), the shards that ran ahead are rolled back so every
+        shard reopens at the same point in time.  Directories retain ONE
+        superseded commit point for exactly this window — the sharded
+        writer defers ``gc`` until the manifest is durable, then prunes.
+        Returns False when ``gen`` is no longer available (e.g. volatile
+        RAM after a crash), in which case the caller opens whatever the
+        latest surviving commit is.
+        """
+        latest = self.latest_commit()
+        if latest is None:
+            return gen == -1
+        return latest[0] == gen
+
     # -- storage reclamation -------------------------------------------------
     def gc(self, live_names: List[str]) -> Dict[str, int]:
         """Reclaim storage for segments not in ``live_names``.
@@ -212,6 +230,10 @@ class FSDirectory(Directory):
         self._dirty: Dict[str, int] = {}  # seg name / liv filename -> bytes
         self._page_cache: set = set()  # names serviceable from DRAM
         self._committed: Dict[int, Tuple[List[str], dict]] = {}
+        # per-commit durable .liv watermarks (name -> generation), recorded
+        # in each segments_N manifest: what rollback_to prunes against so a
+        # rolled-back wave's deletes don't leak into the older commit point
+        self._committed_liv: Dict[int, Dict[str, int]] = {}
         # generational .liv state: each write_live creates {name}_{g}.liv
         # instead of overwriting, so a crash can drop un-fsynced generations
         # without losing the committed one underneath
@@ -247,6 +269,10 @@ class FSDirectory(Directory):
                 with open(os.path.join(self.path, fn)) as f:
                     m = json.load(f)
                 self._committed[gen] = (m["segments"], m.get("meta", {}))
+                if "liv" in m:
+                    self._committed_liv[gen] = {
+                        k: int(v) for k, v in m["liv"].items()
+                    }
             elif fn.endswith(".liv"):
                 # restart continuity: new live generations must sort above
                 # whatever is already on disk
@@ -361,7 +387,14 @@ class FSDirectory(Directory):
                 n_files += 1
                 del self._dirty[key]
         gen = (max(self._committed) + 1) if self._committed else 0
-        manifest = {"segments": list(seg_names), "meta": meta or {}}
+        # the dirty .liv files for seg_names were just fsynced (and any
+        # older generation was durable already), so each segment's latest
+        # written generation is now its durable watermark — record it so
+        # rollback_to can prune .liv generations a discarded wave added
+        liv = {
+            n: self._live_gen[n] for n in seg_names if n in self._live_gen
+        }
+        manifest = {"segments": list(seg_names), "meta": meta or {}, "liv": liv}
         tmp = os.path.join(self.path, f"segments_{gen}.tmp")
         dst = os.path.join(self.path, f"segments_{gen}")
         with open(tmp, "w") as f:
@@ -369,6 +402,7 @@ class FSDirectory(Directory):
             f.flush()
             os.fsync(f.fileno())
         os.rename(tmp, dst)  # atomic commit point
+        self._committed_liv[gen] = dict(liv)
         self.clock.add_real("commit", time.perf_counter() - t0)
         # modeled: fsync of the dirty bytes on the target device + manifest
         self.clock.add_modeled(
@@ -386,6 +420,54 @@ class FSDirectory(Directory):
         gen = max(self._committed)
         names, meta = self._committed[gen]
         return gen, names, meta
+
+    def rollback_to(self, gen: int) -> bool:
+        """Drop ``segments_N`` manifests newer than ``gen`` AND the files
+        only the discarded wave wrote.
+
+        Pruning the files matters for correctness, not just space: the
+        reinstated commit's ``seg_counter`` means a recovered writer will
+        *reuse* the discarded wave's segment names, and a fsynced ``.liv``
+        generation the wave added would otherwise leak its (never
+        cross-shard-committed) deletes into the reinstated point in time —
+        each manifest records its durable ``.liv`` watermarks exactly so
+        this prune knows where the wave's deletes start.  Available
+        whenever ``segments_{gen}`` still exists — the sharded writer's
+        deferred-gc commit keeps it around until the cross-shard manifest
+        is durable.  Runs at recovery, before any writer/reader opens.
+        """
+        if gen != -1 and gen not in self._committed:
+            return False
+        keep = set(self._committed[gen][0]) if gen != -1 else set()
+        liv_map = self._committed_liv.get(gen) if gen != -1 else {}
+        for g in [g for g in self._committed if g > gen]:
+            p = os.path.join(self.path, f"segments_{g}")
+            if os.path.exists(p):
+                os.remove(p)
+            del self._committed[g]
+            self._committed_liv.pop(g, None)
+        for fn in os.listdir(self.path):
+            p = os.path.join(self.path, fn)
+            if fn.endswith(".seg"):
+                if fn[:-4] not in keep:
+                    os.remove(p)
+                    self._dirty.pop(fn[:-4], None)
+                    self._page_cache.discard(fn[:-4])
+            elif fn.endswith(".liv"):
+                name, g = self._parse_liv(fn)
+                # liv_map None = pre-watermark manifest: keep conservatively
+                stale = liv_map is not None and g > liv_map.get(name, -1)
+                if name not in keep or stale:
+                    os.remove(p)
+                    self._dirty.pop(fn, None)
+        # rebuild the generation map from what survived
+        self._live_gen = {}
+        self._synced_liv = {}
+        for fn in os.listdir(self.path):
+            if fn.endswith(".liv"):
+                name, g = self._parse_liv(fn)
+                self._live_gen[name] = max(self._live_gen.get(name, -1), g)
+        return True
 
     # -- storage reclamation -------------------------------------------------
     def gc(self, live_names: List[str]) -> Dict[str, int]:
@@ -408,6 +490,7 @@ class FSDirectory(Directory):
                     reclaimed += os.path.getsize(p)
                     os.remove(p)
                 del self._committed[gen]
+                self._committed_liv.pop(gen, None)
         for fn in os.listdir(self.path):
             p = os.path.join(self.path, fn)
             if fn.endswith(".seg"):
@@ -516,6 +599,12 @@ class ByteAddressableDirectory(Directory):
         self._committed_toc: Dict[str, Dict[str, int]] = {}
         self._committed_names: List[str] = []
         self._meta: dict = {}
+        # one superseded commit point kept inside the root record (gen,
+        # segments, toc): its heap offsets stay valid until compaction, so
+        # a cross-shard recovery can roll this shard back one commit (see
+        # Directory.rollback_to).  Compaction invalidates the offsets and
+        # drops it — by then the cross-shard manifest is already durable.
+        self._prev: Optional[dict] = None
         # the root record names the heap file: compaction re-packs into a
         # FRESH file and swaps the root atomically, so a crash mid-compact
         # recovers the old (heap file, TOC) pair intact
@@ -528,6 +617,7 @@ class ByteAddressableDirectory(Directory):
             self._committed_names = rec["segments"]
             self._meta = rec.get("meta", {})
             self._heap_file = rec.get("heap", "heap.pmem")
+            self._prev = rec.get("prev")
             self._toc = {k: dict(v) for k, v in self._committed_toc.items()}
         self._capacity = capacity
         self.heap = PersistentHeap(os.path.join(path, self._heap_file), capacity)
@@ -608,12 +698,22 @@ class ByteAddressableDirectory(Directory):
         t0 = time.perf_counter()
         self.heap.barrier()  # ONE barrier, independent of segment count
         gen = self._committed_gen + 1
+        if self._committed_gen >= 0:
+            # retain the superseded commit for rollback_to: same heap file,
+            # offsets valid until the next compaction
+            self._prev = {
+                "gen": self._committed_gen,
+                "segments": list(self._committed_names),
+                "toc": {n: dict(v) for n, v in self._committed_toc.items()},
+                "meta": dict(self._meta),
+            }
         rec = {
             "gen": gen,
             "segments": list(seg_names),
             "toc": {n: self._toc[n] for n in seg_names},
             "meta": meta or {},
             "heap": self._heap_file,
+            **({"prev": self._prev} if self._prev else {}),
         }
         self._write_root(rec)
         self.clock.add_real("commit", time.perf_counter() - t0)
@@ -632,6 +732,45 @@ class ByteAddressableDirectory(Directory):
         if self._committed_gen < 0:
             return None
         return self._committed_gen, list(self._committed_names), dict(self._meta)
+
+    def rollback_to(self, gen: int) -> bool:
+        """Reinstate the retained previous commit (or the no-commit state).
+
+        The rolled-back root record is written atomically; the newer
+        commit's heap allocations become garbage for the next compaction.
+        """
+        if gen == self._committed_gen:
+            # drop post-commit TOC writes (e.g. a never-committed delete's
+            # live-bitmap offset) — same reset a crash performs
+            self._toc = {k: dict(v) for k, v in self._committed_toc.items()}
+            return True
+        if gen == -1:
+            if os.path.exists(self._root):
+                os.remove(self._root)
+            self._committed_gen = -1
+            self._committed_toc = {}
+            self._committed_names = []
+            self._meta = {}
+            self._prev = None
+            self._toc = {}
+            return True
+        if self._prev is not None and self._prev["gen"] == gen:
+            rec = {
+                "gen": gen,
+                "segments": list(self._prev["segments"]),
+                "toc": {n: dict(v) for n, v in self._prev["toc"].items()},
+                "meta": dict(self._prev.get("meta", {})),
+                "heap": self._heap_file,
+            }
+            self._write_root(rec)
+            self._committed_gen = gen
+            self._committed_toc = {n: dict(v) for n, v in rec["toc"].items()}
+            self._committed_names = list(rec["segments"])
+            self._meta = dict(rec["meta"])
+            self._toc = {n: dict(v) for n, v in rec["toc"].items()}
+            self._prev = None
+            return True
+        return False
 
     # -- storage reclamation -------------------------------------------------
     def gc(self, live_names: List[str]) -> Dict[str, int]:
@@ -712,6 +851,7 @@ class ByteAddressableDirectory(Directory):
             "heap": new_file,
         }
         self._write_root(rec)  # the atomic flip: root now names the new heap
+        self._prev = None  # its TOC named old-heap offsets; rollback window over
         self.heap.close()
         os.remove(os.path.join(self.path, old_file))
         self.heap = new_heap
@@ -754,6 +894,13 @@ class RAMDirectory(Directory):
         self._gen = -1
         self._names: List[str] = []
         self._meta: dict = {}
+        # one superseded commit point for rollback_to (volatile, like
+        # everything here: a crash loses it along with the data).  Each
+        # commit also snapshots the committed live bitmaps so rollback can
+        # undo never-committed deletes (write_live swaps clones in _segs;
+        # the FS path's .liv-watermark prune, in-memory form).
+        self._prev: Optional[Tuple[int, List[str], dict, Dict]] = None
+        self._live_at_commit: Dict[str, np.ndarray] = {}
 
     def write_segment(self, seg: Segment) -> None:
         t0 = time.perf_counter()
@@ -773,15 +920,46 @@ class RAMDirectory(Directory):
         return self._segs[name].with_base(base_doc)
 
     def commit(self, seg_names: List[str], meta: Optional[dict] = None) -> int:
+        if self._gen >= 0:
+            self._prev = (
+                self._gen, list(self._names), dict(self._meta),
+                dict(self._live_at_commit),
+            )
         self._gen += 1
         self._names = list(seg_names)
         self._meta = meta or {}
+        self._live_at_commit = {
+            n: self._segs[n].live for n in seg_names if n in self._segs
+        }
         return self._gen
 
     def latest_commit(self) -> Optional[Tuple[int, List[str], dict]]:
         if self._gen < 0:
             return None
         return self._gen, list(self._names), dict(self._meta)
+
+    def _restore_live(self, live_map: Dict[str, np.ndarray]) -> None:
+        """Reinstate the bitmaps a commit point captured (undoes deletes
+        applied after it — write_live only ever swapped in clones)."""
+        for n, live in live_map.items():
+            if n in self._segs and self._segs[n].live is not live:
+                self._segs[n] = self._segs[n].with_live(live)
+
+    def rollback_to(self, gen: int) -> bool:
+        if gen == self._gen:
+            self._restore_live(self._live_at_commit)
+            return True
+        if gen == -1:
+            self._gen, self._names, self._meta = -1, [], {}
+            self._prev = None
+            self._live_at_commit = {}
+            return True  # segments stay until the next gc prunes them
+        if self._prev is not None and self._prev[0] == gen:
+            self._gen, self._names, self._meta, self._live_at_commit = self._prev
+            self._restore_live(self._live_at_commit)
+            self._prev = None
+            return True
+        return False
 
     def gc(self, live_names: List[str]) -> Dict[str, int]:
         keep = set(live_names)
@@ -801,6 +979,8 @@ class RAMDirectory(Directory):
         self._gen = -1
         self._names = []
         self._meta = {}
+        self._prev = None
+        self._live_at_commit = {}
 
     def list_segments(self) -> List[str]:
         return sorted(self._segs)

@@ -1,5 +1,9 @@
 """Per-family batched executors + device-side cross-segment top-k merge.
 
+The data plane under the paper's Fig 5 query families (§2.1: search is a
+lock-free scan over immutable segments, merged across segments — and, in
+the sharded layer, across shards via the same ``merge_topk``).
+
 Layering (see ARCHITECTURE.md):
 
   plan.py   groups/pads a batch of queries      (host, numpy)

@@ -1,5 +1,10 @@
 """Batch query planner.
 
+The paper's search measurements (§2.1 segments; Fig 5's luceneutil query
+buckets) drive one query at a time through one searcher; serving heavy
+traffic means amortizing dispatch across a *batch*.  This module is the
+host-side half of that amortization.
+
 ``plan_batch`` groups a heterogeneous batch of queries into *family groups*
 that a single jitted/vmapped executor dispatch can score together (see
 ``repro.core.query.exec``).  Two queries land in the same group when they

@@ -320,9 +320,15 @@ class IndexWriter:
         return merged
 
     # ------------------------------------------------------------------
-    def commit(self, meta: Optional[dict] = None) -> int:
+    def commit(self, meta: Optional[dict] = None, gc: bool = True) -> int:
         """Flush + durability barrier + new commit point (paper's 'commit'),
-        then GC storage for segments no longer referenced."""
+        then GC storage for segments no longer referenced.
+
+        ``gc=False`` defers the reclamation to an explicit :meth:`run_gc`:
+        the previous commit point (and its files/heap extents) survives
+        until then, which is what lets a *cross-shard* commit roll a shard
+        back when a crash tears the commit wave (``Directory.rollback_to``).
+        """
         self.flush()
         # deletes-triggered rewrites (and optional merge-on-commit
         # consolidation) run even when the buffer was empty
@@ -332,11 +338,19 @@ class IndexWriter:
         m["ts"] = time.time()
         names = self._infos.names()
         gen = self.directory.commit(names, m)
-        res = self.directory.gc(names)
+        if gc:
+            self.run_gc()
+        return gen
+
+    def run_gc(self) -> Dict[str, int]:
+        """Reclaim storage no snapshot references (the deferred half of a
+        ``commit(gc=False)``; also ends any superseded commit's rollback
+        window)."""
+        res = self.directory.gc(self._infos.names())
         self.gc_stats["runs"] += 1
         self.gc_stats["reclaimed_bytes"] += int(res.get("reclaimed_bytes", 0))
         self.gc_stats["removed"] += int(res.get("removed", 0))
-        return gen
+        return res
 
     # ------------------------------------------------------------------
     def stats(self) -> dict:

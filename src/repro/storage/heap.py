@@ -17,7 +17,26 @@ Layout (all little-endian):
 
 Durability barrier: on real pmem this is CLWB+SFENCE; on a file-backed memmap
 we ``flush()`` the mapping.  Crucially the cost is *one barrier per commit*,
-not per file: commit latency stops scaling with segment count.
+not per file: commit latency stops scaling with segment count (the collapse
+the paper predicts in §4 for a load/store redesign — its Fig 3 commit cost
+is fsync-per-file through the filesystem).
+
+The write-combining contract (``reserve`` / ``store_into`` / ``barrier``):
+
+  1. ``base = reserve(sum(alloc_size(a) for a in arrays))`` — ONE capacity
+     check and tail bump claims a contiguous extent for a whole segment;
+  2. ``off += store_into(off, a)`` back-to-back — plain CPU stores at
+     caller-chosen offsets inside the reservation; each array's offset is
+     stable for the life of the heap file and is what the directory's TOC
+     records;
+  3. ``barrier()`` — the ONLY durability point.  Everything stored before
+     it (any number of reservations/segments) becomes committed at once;
+     nothing stored after it survives a crash (``truncate_to_committed``).
+
+``store`` is the one-array convenience (reserve + store_into); ``load`` is
+a zero-copy view of any offset a TOC remembers.  ``stats`` counts barriers,
+reserves, stores, and stored bytes — tests pin "exactly one barrier per
+commit" and the benchmarks report barriers per ingest cycle.
 """
 
 from __future__ import annotations

@@ -1,0 +1,64 @@
+"""Docs gate (CI): core modules must stay documented.
+
+Fails when README.md or ARCHITECTURE.md is missing, or when any module
+under ``src/repro/core`` is mentioned in neither — the module map in
+ARCHITECTURE.md is where new layers land with a documented home, and this
+check is what keeps it from rotting (PRs 1-3 were discoverable only
+through commit messages; that stops here).
+
+A module "appears" when its name is present in either doc: the basename
+for top-level core modules (``writer.py``), the package-qualified form for
+nested ones (``query/plan.py``).
+
+Run: ``python tools/check_docs.py`` (exit 1 on failure).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CORE = os.path.join(REPO, "src", "repro", "core")
+DOCS = ("README.md", "ARCHITECTURE.md")
+
+
+def core_modules() -> list:
+    """Module mentions required: ``writer.py`` / ``query/plan.py`` style."""
+    out = []
+    for dirpath, _, filenames in os.walk(CORE):
+        for fn in sorted(filenames):
+            if not fn.endswith(".py") or fn == "__init__.py":
+                continue
+            rel = os.path.relpath(os.path.join(dirpath, fn), CORE)
+            out.append(rel.replace(os.sep, "/"))
+    return sorted(out)
+
+
+def main() -> int:
+    failures = []
+    text = ""
+    for doc in DOCS:
+        p = os.path.join(REPO, doc)
+        if not os.path.exists(p):
+            failures.append(f"{doc} is missing")
+            continue
+        with open(p) as f:
+            text += f.read()
+    for mod in core_modules():
+        if mod not in text:
+            failures.append(
+                f"src/repro/core/{mod} appears in neither "
+                f"{' nor '.join(DOCS)} — add it to the module map"
+            )
+    if failures:
+        print("docs check FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print(f"docs check OK ({len(core_modules())} core modules documented)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
