@@ -15,6 +15,14 @@ Reported per configuration:
 
 The paper's claim to reproduce: PMEM improves commit time 20-30%, more at
 high commit frequency (small writes are latency-bound).
+
+``--wal`` adds the durable-ingest-buffer rows (``use_wal=True``, byte path
+only): documents arrive in acked batches — each ack is ONE write-ahead
+record + ONE barrier (``wal_ack_us``) — and commit stops flushing, so its
+latency (``commit_us``) collapses to merge-on-commit + barrier + root
+flip.  The ``commit_wal_gain`` derived row pins the WAL commit against the
+non-WAL byte path at the same commit frequency; the smoke gate requires
+>= 1.5x (``benchmarks/run.py --smoke`` -> BENCH_ingest.json "wal" block).
 """
 
 from __future__ import annotations
@@ -29,29 +37,53 @@ from repro.data.corpus import CorpusConfig, synthetic_corpus
 
 N_DOCS = 3000
 FREQS = [100, 1000, 3000]  # docs per commit (3000 = single commit)
+ACK_BATCH = 100  # docs per acked WAL batch in the --wal rows
 
 
-def run_one(kind: str, docs_per_commit: int, n_docs: int = N_DOCS) -> Dict:
+def run_one(
+    kind: str,
+    docs_per_commit: int,
+    n_docs: int = N_DOCS,
+    use_wal: bool = False,
+) -> Dict:
     path = tempfile.mkdtemp(prefix="commit-bench-")
     try:
-        eng = SearchEngine(kind, path)
+        eng = SearchEngine(kind, path, use_wal=use_wal)
         # materialize outside the timer: docs/sec measures the engine,
         # not the synthetic corpus generator
         corpus = list(synthetic_corpus(CorpusConfig(n_docs=n_docs, seed=11)))
         n_commits = 0
+        ack_s: List[float] = []
+        commit_s: List[float] = []
         t_wall = time.perf_counter()
-        for i, (fields, dv) in enumerate(corpus):
-            eng.add(fields, dv)
-            if (i + 1) % docs_per_commit == 0:
-                eng.commit()
-                n_commits += 1
+        if use_wal:
+            # WAL ingest arrives in acked batches (ack = durable); commits
+            # land at the same docs_per_commit cadence as the non-WAL rows
+            step = min(ACK_BATCH, docs_per_commit)
+            for j in range(0, n_docs, step):
+                t0 = time.perf_counter()
+                eng.add_documents(corpus[j : j + step])
+                ack_s.append(time.perf_counter() - t0)
+                if (j + step) % docs_per_commit == 0:
+                    t0 = time.perf_counter()
+                    eng.commit()
+                    commit_s.append(time.perf_counter() - t0)
+                    n_commits += 1
+        else:
+            for i, (fields, dv) in enumerate(corpus):
+                eng.add(fields, dv)
+                if (i + 1) % docs_per_commit == 0:
+                    t0 = time.perf_counter()
+                    eng.commit()
+                    commit_s.append(time.perf_counter() - t0)
+                    n_commits += 1
         if n_docs % docs_per_commit:
             eng.commit()
             n_commits += 1
         t_wall = time.perf_counter() - t_wall
         clk = eng.directory.clock
         row = {
-            "dir": kind,
+            "dir": kind + ("+wal" if use_wal else ""),
             "docs_per_commit": docs_per_commit,
             "n_commits": n_commits,
             "docs_per_sec": n_docs / t_wall,
@@ -60,14 +92,40 @@ def run_one(kind: str, docs_per_commit: int, n_docs: int = N_DOCS) -> Dict:
             "modeled_flush_s": clk.modeled.get("flush_write", 0.0),
             "real_commit_s": clk.real.get("commit", 0.0),
             "real_flush_s": clk.real.get("flush_write", 0.0),
+            # timed at the call site: the non-WAL commit's flush cost lives
+            # in the commit() call but is booked under flush_write by the
+            # SimClock, so the cross-path comparison uses this number
+            "commit_us": 1e6 * sum(commit_s) / max(len(commit_s), 1),
         }
+        if use_wal:
+            row["wal_ack_us"] = 1e6 * sum(ack_s) / max(len(ack_s), 1)
+            row["wal_batches"] = len(ack_s)
         if hasattr(eng.directory, "heap"):
             # write-combining invariant: barriers track commits (plus any
-            # heap compactions), never the number of segments or arrays
+            # heap compactions and, with the WAL, one per acked batch),
+            # never the number of segments or arrays
             row["barriers"] = eng.directory.heap.stats["barriers"]
         return row
     finally:
         shutil.rmtree(path, ignore_errors=True)
+
+
+def run_wal(
+    docs_per_commit: int = 500, n_docs: int = N_DOCS, kind: str = "byte-pmem"
+) -> Dict:
+    """The WAL-vs-non-WAL byte-path pair + derived gains (one measurement,
+    shared by ``--wal`` rows and the smoke gate)."""
+    base = run_one(kind, docs_per_commit, n_docs=n_docs)
+    wal = run_one(kind, docs_per_commit, n_docs=n_docs, use_wal=True)
+    return {
+        "base": base,
+        "wal": wal,
+        "commit_speedup": base["commit_us"] / max(wal["commit_us"], 1e-9),
+        "barriers_per_batch": (
+            # ack barriers only: subtract the per-commit barrier
+            (wal["barriers"] - wal["n_commits"]) / max(wal["wal_batches"], 1)
+        ),
+    }
 
 
 def run() -> List[Dict]:
@@ -98,7 +156,7 @@ def run() -> List[Dict]:
     return rows
 
 
-def main(csv=True):
+def main(csv=True, wal: bool = False):
     rows = run()
     out = []
     for r in rows:
@@ -122,9 +180,38 @@ def main(csv=True):
             if "barriers" in r:
                 line += f",barriers={r['barriers']}"
             out.append(line)
+    if wal:
+        out.extend(main_wal())
+    return out
+
+
+def main_wal() -> List[str]:
+    """The Fig-3 gap re-measured with the durable ingest buffer: ack
+    latency per batch and the commit = publish collapse, per frequency."""
+    out = []
+    for freq in FREQS:
+        w = run_wal(docs_per_commit=freq)
+        out.append(
+            f"commit_wal,byte-pmem@{freq}dpc,"
+            f"{w['wal']['commit_us']:.0f},us_per_commit"
+            f";nonwal_us_per_commit={w['base']['commit_us']:.0f}"
+            f",commit_speedup={w['commit_speedup']:.2f}"
+            f",wal_ack_us={w['wal']['wal_ack_us']:.0f}"
+            f",barriers_per_batch={w['barriers_per_batch']:.2f}"
+            f",docs_per_sec={w['wal']['docs_per_sec']:.0f}"
+        )
     return out
 
 
 if __name__ == "__main__":
-    for line in main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--wal",
+        action="store_true",
+        help="add durable-ingest-buffer rows (ack latency, commit=publish)",
+    )
+    args = ap.parse_args()
+    for line in main(wal=args.wal):
         print(line)

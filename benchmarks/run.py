@@ -27,10 +27,11 @@ BENCH_INGEST_JSON = "BENCH_ingest.json"
 
 def run_smoke(out_path: str = BENCH_INGEST_JSON) -> dict:
     """Small ingest benchmark -> BENCH_ingest.json (raises on regression)."""
-    from benchmarks import ingest_bench
+    from benchmarks import commit_bench, ingest_bench
 
     lifecycle = ingest_bench.run(smoke=True)
     pipeline = ingest_bench.run_pipeline(smoke=True)
+    wal = commit_bench.run_wal(docs_per_commit=500, n_docs=1500)
     payload = {
         "bench": "ingest",
         "mode": "smoke",
@@ -65,6 +66,15 @@ def run_smoke(out_path: str = BENCH_INGEST_JSON) -> dict:
             }
             for r in lifecycle
         },
+        # the durable ingest buffer (ack = durable, commit = publish):
+        # ack latency per batch + the WAL-vs-non-WAL byte-path commit gap
+        "wal": {
+            "wal_ack_us": round(wal["wal"]["wal_ack_us"], 1),
+            "commit_us": round(wal["wal"]["commit_us"], 1),
+            "commit_us_nonwal": round(wal["base"]["commit_us"], 1),
+            "commit_speedup": round(wal["commit_speedup"], 2),
+            "barriers_per_batch": round(wal["barriers_per_batch"], 3),
+        },
         # the DWPT writer-parallelism rows land in the same file via the
         # CI job's `ingest_bench --shards 2 --smoke` step (one measurement,
         # one writer: ingest_bench.append_sharded_json)
@@ -76,6 +86,27 @@ def run_smoke(out_path: str = BENCH_INGEST_JSON) -> dict:
     # rows measured above rather than re-running the benchmark
     for line in ingest_bench.main(smoke=True, rows=lifecycle, pipe=pipeline):
         print(line, flush=True)
+    w = payload["wal"]
+    print(
+        f"commit_wal_smoke,byte-pmem,{w['commit_us']:.0f},us_per_commit"
+        f";nonwal={w['commit_us_nonwal']:.0f}"
+        f",speedup={w['commit_speedup']:.2f}"
+        f",wal_ack_us={w['wal_ack_us']:.0f}"
+        f",barriers_per_batch={w['barriers_per_batch']:.2f}",
+        flush=True,
+    )
+    # WAL gates: commit = publish must beat the non-WAL byte path >=1.5x,
+    # and an ack must cost exactly one durability barrier
+    if w["commit_speedup"] < 1.5:
+        raise SystemExit(
+            f"commit_bench regression: WAL commit only "
+            f"{w['commit_speedup']:.2f}x the non-WAL byte path (need >=1.5)"
+        )
+    if not 0.99 <= w["barriers_per_batch"] <= 1.01:
+        raise SystemExit(
+            f"commit_bench regression: {w['barriers_per_batch']:.2f} "
+            f"barriers per acked batch (need exactly 1)"
+        )
     print(f"# wrote {out_path}", file=sys.stderr)
     return payload
 

@@ -125,6 +125,28 @@ class ColumnarBuffer:
         self.positions.extend(positions)
         return k * (8 + 4 + 4 + 8) + len(positions) * 4
 
+    def extend_raw(
+        self,
+        term_hash: np.ndarray,
+        doc_local: np.ndarray,
+        freq: np.ndarray,
+        pos_offset: np.ndarray,
+        positions: np.ndarray,
+    ) -> int:
+        """Append previously-captured column slices verbatim (WAL replay).
+
+        The slices are exactly what a batch of ``append_field`` calls
+        produced, so ``pos_offset`` values are already absolute — replaying
+        records in log order reconstructs every column bit-identically.
+        Returns the bytes appended (same accounting as ``append_field``).
+        """
+        self.term_hash.extend(term_hash)
+        self.doc_local.extend(doc_local)
+        self.freq.extend(freq)
+        self.pos_offset.extend(pos_offset)
+        self.positions.extend(positions)
+        return len(term_hash) * (8 + 4 + 4 + 8) + len(positions) * 4
+
     def columns(
         self,
     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:

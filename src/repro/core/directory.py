@@ -123,6 +123,38 @@ class Directory(ABC):
             return gen == -1
         return latest[0] == gen
 
+    # -- write-ahead ingest log ----------------------------------------------
+    def supports_wal(self) -> bool:
+        """Whether this directory can make an ingest batch durable at ack
+        time (a write-ahead log on the persistence medium).  Only the byte
+        path can: one barrier per batch costs microseconds there, while a
+        file-path WAL would pay an fsync per batch — exactly the cost the
+        paper's redesign argument deletes.  The writer degrades gracefully
+        when this is False (``use_wal`` becomes a no-op)."""
+        return False
+
+    def wal_append(self, meta: dict, arrays: Dict[str, np.ndarray]) -> int:
+        """Durably append one ingest record (ack = durable); returns seq."""
+        raise NotImplementedError(f"{type(self).__name__} has no WAL")
+
+    def wal_replay(self) -> List[Tuple[dict, Dict[str, np.ndarray]]]:
+        """Unretired records past the last commit, oldest first."""
+        return []
+
+    def wal_set_retire(self, seq: int) -> None:
+        """Stage a retire watermark for the NEXT commit: records with
+        ``seq`` at or below it are fully contained in the segments that
+        commit publishes, so the commit-point flip retires them atomically
+        (and a rollback to the previous commit un-retires them)."""
+
+    def wal_retired(self) -> int:
+        """Highest seq retired by the latest commit point (0 = none)."""
+        return 0
+
+    def wal_last_seq(self) -> int:
+        """Seq of the newest durable record (0 = empty log)."""
+        return 0
+
     # -- storage reclamation -------------------------------------------------
     def gc(self, live_names: List[str]) -> Dict[str, int]:
         """Reclaim storage for segments not in ``live_names``.
@@ -583,6 +615,7 @@ class ByteAddressableDirectory(Directory):
         import weakref
 
         from repro.storage.heap import PersistentHeap
+        from repro.storage.wal import HeapWAL
 
         self.path = path
         os.makedirs(path, exist_ok=True)
@@ -609,6 +642,10 @@ class ByteAddressableDirectory(Directory):
         # FRESH file and swaps the root atomically, so a crash mid-compact
         # recovers the old (heap file, TOC) pair intact
         self._heap_file = "heap.pmem"
+        # highest WAL seq the latest commit point retired (0 = none); the
+        # staged value a writer sets for its NEXT commit lives separately
+        self._wal_retired = 0
+        self._wal_pending_retire: Optional[int] = None
         if os.path.exists(self._root):
             with open(self._root) as f:
                 rec = json.load(f)
@@ -618,9 +655,11 @@ class ByteAddressableDirectory(Directory):
             self._meta = rec.get("meta", {})
             self._heap_file = rec.get("heap", "heap.pmem")
             self._prev = rec.get("prev")
+            self._wal_retired = int(rec.get("wal_retired", 0))
             self._toc = {k: dict(v) for k, v in self._committed_toc.items()}
         self._capacity = capacity
         self.heap = PersistentHeap(os.path.join(path, self._heap_file), capacity)
+        self._wal = HeapWAL(self.heap)
         # a crash between compaction's root flip and the old-file unlink
         # leaves an orphan heap file: sweep anything the root doesn't name
         for fn in os.listdir(path):
@@ -700,19 +739,26 @@ class ByteAddressableDirectory(Directory):
         gen = self._committed_gen + 1
         if self._committed_gen >= 0:
             # retain the superseded commit for rollback_to: same heap file,
-            # offsets valid until the next compaction
+            # offsets valid until the next compaction.  Its WAL watermark
+            # rides along so a rollback *un-retires* the newer wave's
+            # records — they replay instead of vanishing.
             self._prev = {
                 "gen": self._committed_gen,
                 "segments": list(self._committed_names),
                 "toc": {n: dict(v) for n, v in self._committed_toc.items()},
                 "meta": dict(self._meta),
+                "wal_retired": self._wal_retired,
             }
+        if self._wal_pending_retire is not None:
+            self._wal_retired = max(self._wal_retired, self._wal_pending_retire)
+            self._wal_pending_retire = None
         rec = {
             "gen": gen,
             "segments": list(seg_names),
             "toc": {n: self._toc[n] for n in seg_names},
             "meta": meta or {},
             "heap": self._heap_file,
+            "wal_retired": self._wal_retired,
             **({"prev": self._prev} if self._prev else {}),
         }
         self._write_root(rec)
@@ -753,6 +799,10 @@ class ByteAddressableDirectory(Directory):
             self._meta = {}
             self._prev = None
             self._toc = {}
+            # un-retire everything: a torn FIRST commit wave's acked
+            # batches are still in the heap's WAL chain and must replay
+            self._wal_retired = 0
+            self._wal_pending_retire = None
             return True
         if self._prev is not None and self._prev["gen"] == gen:
             rec = {
@@ -761,6 +811,7 @@ class ByteAddressableDirectory(Directory):
                 "toc": {n: dict(v) for n, v in self._prev["toc"].items()},
                 "meta": dict(self._prev.get("meta", {})),
                 "heap": self._heap_file,
+                "wal_retired": int(self._prev.get("wal_retired", 0)),
             }
             self._write_root(rec)
             self._committed_gen = gen
@@ -768,16 +819,50 @@ class ByteAddressableDirectory(Directory):
             self._committed_names = list(rec["segments"])
             self._meta = dict(rec["meta"])
             self._toc = {n: dict(v) for n, v in rec["toc"].items()}
+            self._wal_retired = rec["wal_retired"]
+            self._wal_pending_retire = None
             self._prev = None
             return True
         return False
 
+    # -- write-ahead ingest log ----------------------------------------------
+    def supports_wal(self) -> bool:
+        return True
+
+    def wal_append(self, meta: dict, arrays: Dict[str, np.ndarray]) -> int:
+        """Durable ack: one record store + ONE barrier (which also flips
+        the chain head).  This is the paper-§4 mechanism applied to the
+        ingest buffer itself — durability at CPU-store cost, no file, no
+        fsync, no commit."""
+        t0 = time.perf_counter()
+        seq = self._wal.append(meta, arrays)
+        nbytes = sum(a.nbytes for a in arrays.values())
+        self.clock.add_real("wal_append", time.perf_counter() - t0)
+        self.clock.add_modeled(
+            "wal_append",
+            self.device.byte_store_time(nbytes) + self.device.byte_barrier_s,
+        )
+        return seq
+
+    def wal_replay(self) -> List[Tuple[dict, Dict[str, np.ndarray]]]:
+        return self._wal.records(after_seq=self._wal_retired)
+
+    def wal_set_retire(self, seq: int) -> None:
+        self._wal_pending_retire = seq
+
+    def wal_retired(self) -> int:
+        return self._wal_retired
+
+    def wal_last_seq(self) -> int:
+        return self._wal.last_seq
+
     # -- storage reclamation -------------------------------------------------
     def gc(self, live_names: List[str]) -> Dict[str, int]:
         """Free TOC entries of dead segments; compact the heap when the
-        garbage (dead allocations + superseded live bitmaps) outweighs the
-        live data.  Runs right after a commit, so ``live_names`` equals the
-        committed set and the compacted state can be re-rooted in place."""
+        garbage (dead allocations + superseded live bitmaps + retired WAL
+        records) outweighs the live data.  Runs right after a commit, so
+        ``live_names`` equals the committed set and the compacted state can
+        be re-rooted in place."""
         keep = set(live_names)
         removed = 0
         for name in [n for n in self._toc if n not in keep]:
@@ -791,6 +876,9 @@ class ByteAddressableDirectory(Directory):
             for entry in self._toc.values()
             for off in entry.values()
         )
+        # the unretired WAL tail is replayable state, not garbage: it gets
+        # carried into any compacted heap (retired records do not)
+        live_bytes += self._wal.live_bytes(after_seq=self._wal_retired)
         dead_bytes = max(0, self.heap.tail - self.heap.HEADER - live_bytes)
         reclaimed = 0
         if dead_bytes > max(4096, live_bytes // 2):
@@ -838,7 +926,11 @@ class ByteAddressableDirectory(Directory):
         new_toc: Dict[str, Dict[str, int]] = {}
         for name, arrays in hosts.items():
             new_toc[name] = {k: new_heap.store(a) for k, a in arrays.items()}
-        new_heap.barrier()
+        # the unretired WAL tail moves with the live data (retired records
+        # are exactly the garbage this compaction exists to drop); its new
+        # head rides the same barrier as the re-packed segments
+        wal_head = self._wal.carry_to(new_heap, after_seq=self._wal_retired)
+        new_heap.barrier(wal_head=wal_head)
         # observability counters survive the heap swap (cumulative per
         # directory, incl. this compaction's own stores + barrier)
         for k, v in self.heap.stats.items():
@@ -849,12 +941,21 @@ class ByteAddressableDirectory(Directory):
             "toc": {n: dict(new_toc[n]) for n in self._committed_names if n in new_toc},
             "meta": self._meta,
             "heap": new_file,
+            "wal_retired": self._wal_retired,
         }
         self._write_root(rec)  # the atomic flip: root now names the new heap
         self._prev = None  # its TOC named old-heap offsets; rollback window over
         self.heap.close()
         os.remove(os.path.join(self.path, old_file))
         self.heap = new_heap
+        from repro.storage.wal import HeapWAL
+
+        old_last_seq = self._wal.last_seq
+        self._wal = HeapWAL(new_heap)  # rebind the chain to the new file
+        # seq numbering is monotone across heap swaps: when the carried
+        # chain is empty the fresh heap knows no history, and a reused seq
+        # would hide new records behind the retired watermark
+        self._wal.last_seq = max(self._wal.last_seq, old_last_seq)
         self._heap_file = new_file
         self._toc = new_toc
         self._committed_toc = {n: dict(v) for n, v in new_toc.items()}
@@ -872,9 +973,13 @@ class ByteAddressableDirectory(Directory):
 
     def crash(self) -> None:
         """NVM after power loss: committed watermark survives; the rest is
-        gone.  Reload the TOC from the root record."""
+        gone.  Reload the TOC from the root record and resync the WAL to
+        its durable chain head (acked records all sit below the watermark;
+        an in-flight un-acked record is exactly what gets torn off)."""
         self.heap.truncate_to_committed()
         self._toc = {k: dict(v) for k, v in self._committed_toc.items()}
+        self._wal_pending_retire = None
+        self._wal._resync()
 
     def list_segments(self) -> List[str]:
         return sorted(self._toc)

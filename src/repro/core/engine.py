@@ -49,13 +49,19 @@ class SearchEngine:
         path: Optional[str] = None,
         analyzer: Optional[Analyzer] = None,
         use_pallas: bool = False,
+        use_wal: bool = False,
     ) -> None:
         if isinstance(directory, str):
             directory = make_directory(directory, path)
         self.directory = directory
         self.analyzer = analyzer or Analyzer()
         self.use_pallas = use_pallas
-        self.writer = IndexWriter(directory, self.analyzer)
+        # durable write-ahead ingest buffer (byte path): every add_documents
+        # batch is durable at ack time; commit becomes publish.  Degrades to
+        # a no-op on directories that cannot buy per-batch durability with
+        # one barrier (ram / fs-*): check ``wal_enabled`` for the outcome.
+        self.use_wal = use_wal
+        self.writer = IndexWriter(directory, self.analyzer, use_wal=use_wal)
         # engine-owned device cache: segment arrays stay resident across
         # NRT reopens (only new/changed segments are uploaded)
         self.device_cache = SegmentDeviceCache()
@@ -71,8 +77,18 @@ class SearchEngine:
         self.device_cache.warm_merged(writer.segments)
 
     # -- indexing -------------------------------------------------------------
+    @property
+    def wal_enabled(self) -> bool:
+        """True when ingest acks are durable (``use_wal`` on the byte path)."""
+        return self.writer.wal_enabled
+
     def add(self, fields: Dict[str, str], doc_values: Optional[Dict] = None) -> int:
         return self.writer.add_document(fields, doc_values)
+
+    def add_documents(self, docs) -> List[int]:
+        """Batch ingest; with ``use_wal`` the return is a durable ack (the
+        whole batch survives any later crash, commit or not)."""
+        return self.writer.add_documents(docs)
 
     def delete(self, field: str, token: str) -> int:
         return self.writer.delete_by_term(field, token)
@@ -101,15 +117,22 @@ class SearchEngine:
 
     # -- failure simulation -----------------------------------------------------
     def crash_and_recover(self) -> "SearchEngine":
-        """Simulate power failure and reopen from the last commit point."""
+        """Simulate power failure and reopen from the last commit point —
+        then, with the WAL on, replay the log tail back to the last ack."""
+        import dataclasses
+
         self.directory.crash()
         eng = object.__new__(SearchEngine)
         eng.directory = self.directory
         eng.analyzer = self.analyzer
         eng.use_pallas = self.use_pallas
-        eng.writer = IndexWriter(self.directory, self.analyzer)
-        # post-crash device state is untrusted: start from a cold cache
+        eng.use_wal = self.use_wal
+        eng.writer = IndexWriter(self.directory, self.analyzer, use_wal=self.use_wal)
+        # post-crash device state is untrusted: start from a cold cache —
+        # but the engine-level lifetime counters (merge_warmups, upload
+        # totals, ...) survive recovery like every other stats ledger
         eng.device_cache = SegmentDeviceCache()
+        eng.device_cache.stats = dataclasses.replace(self.device_cache.stats)
         eng.writer.merge_listeners.append(eng._on_merge)
         eng.manager = SearcherManager(
             eng.writer, use_pallas=self.use_pallas, device_cache=eng.device_cache
@@ -119,4 +142,5 @@ class SearchEngine:
     def stats(self) -> dict:
         s = self.writer.stats()
         s["clock"] = self.directory.clock.snapshot()
+        s["cache"] = self.device_cache.stats.snapshot()
         return s

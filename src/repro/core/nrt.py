@@ -9,6 +9,12 @@ The manager owns a ``SegmentDeviceCache`` shared by every Searcher
 generation it creates: a reopen uploads ONLY the new/changed segments'
 arrays to device (unchanged segments keep their resident buffers), so
 reopen latency scales with the flush size, not the index size.
+
+Reopen after WAL replay: recovery with a durable ingest buffer
+(``IndexWriter(use_wal=True)``) rebuilds acked-but-uncommitted documents
+into the DRAM buffer, exactly like documents added moments ago — the first
+``maybe_reopen(force_flush=True)`` flushes the replayed buffer and makes
+them searchable again, with no special recovery path in this layer.
 """
 
 from __future__ import annotations

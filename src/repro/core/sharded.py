@@ -57,12 +57,13 @@ from repro.core.query.plan import FamilyGroup, plan_batch
 from repro.core.query.types import Query, TopDocs
 from repro.core.search import Searcher
 from repro.core.shard import Router, HashIdRouter, ShardSet, router_from_spec
-from repro.core.writer import IndexWriter
+from repro.core.writer import EXT_ID_FIELD, IndexWriter
 
-# reserved doc-values column carrying each document's external id (its
-# assignment order across the whole sharded corpus).  int32 like every
-# doc-values column: external ids stay below 2^31.
-EXT_ID_FIELD = "_extid"
+# EXT_ID_FIELD (re-exported from repro.core.writer): the reserved
+# doc-values column carrying each document's external id — its assignment
+# order across the whole sharded corpus.  int32 like every doc-values
+# column: external ids stay below 2^31.  It lives in writer.py because the
+# WAL replay watches it to rebuild the id watermark (see below).
 
 
 # ---------------------------------------------------------------------------
@@ -135,6 +136,13 @@ class ShardedWriter:
             IndexWriter(d, Analyzer(base_an.stopwords), **writer_kwargs)
             for d in shards.dirs
         ]
+        # per-shard WAL replay (use_wal=True in writer_kwargs) can recover
+        # batches acked AFTER the manifest was published: their external
+        # ids sit past the manifest's watermark, so advance it — otherwise
+        # new documents would reuse ids that live in replayed buffers
+        replayed = max((w.replay_max_ext for w in self.writers), default=-1)
+        if replayed + 1 > self._next_ext:
+            self._next_ext = replayed + 1
         self.parallel = parallel and n > 1
         self._pool: Optional[ThreadPoolExecutor] = None
         self.shard_busy_s: List[float] = [0.0] * n
@@ -208,7 +216,12 @@ class ShardedWriter:
         self, docs: Sequence[Tuple[Dict[str, str], Optional[dict]]]
     ) -> List[int]:
         """Fan a batch out: route every document, then ingest each shard's
-        slice as one batch (on worker threads when ``parallel``)."""
+        slice as one batch (on worker threads when ``parallel``).
+
+        With per-shard WALs (``use_wal``) each slice is one log record and
+        one barrier per shard — the return is then a durable ack for the
+        whole batch, and the barriers run concurrently when ``parallel``.
+        """
         routed: List[List[Tuple[Dict[str, str], Optional[dict], int]]] = [
             [] for _ in range(self.n_shards)
         ]
@@ -222,8 +235,12 @@ class ShardedWriter:
         def ingest(sid: int) -> None:
             w = self.writers[sid]
             t0 = time.perf_counter()
-            for fields, dv, ext in routed[sid]:
-                w.add_document(fields, {**(dv or {}), EXT_ID_FIELD: ext})
+            w.add_documents(
+                [
+                    (fields, {**(dv or {}), EXT_ID_FIELD: ext})
+                    for fields, dv, ext in routed[sid]
+                ]
+            )
             self.shard_busy_s[sid] += time.perf_counter() - t0
 
         self._run(ingest, [i for i in range(self.n_shards) if routed[i]])
@@ -578,12 +595,15 @@ class ShardedEngine:
         use_pallas: bool = False,
         parallel: bool = True,
         shards: Optional[ShardSet] = None,
+        use_wal: bool = False,
     ) -> None:
         self.shards = shards or ShardSet(directory, path, n_shards)
         self.analyzer = analyzer
         self.use_pallas = use_pallas
+        self.use_wal = use_wal
         self.writer = ShardedWriter(
-            self.shards, router=router, analyzer=analyzer, parallel=parallel
+            self.shards, router=router, analyzer=analyzer, parallel=parallel,
+            use_wal=use_wal,
         )
         self.device_caches = [SegmentDeviceCache() for _ in self.writer.writers]
         for w, cache in zip(self.writer.writers, self.device_caches):
@@ -634,7 +654,9 @@ class ShardedEngine:
     def crash_and_recover(self) -> "ShardedEngine":
         """Power failure across every shard, then recovery from the
         cross-shard manifest: shards that committed ahead of it roll back,
-        so the recovered engine reopens ONE consistent point in time."""
+        so the recovered engine reopens ONE consistent point in time —
+        after which each shard's WAL tail replays its acked batches (the
+        rollback un-retired any span only the torn wave had retired)."""
         self.writer.close()
         self.shards.crash()
         return ShardedEngine(
@@ -645,6 +667,7 @@ class ShardedEngine:
             use_pallas=self.use_pallas,
             parallel=self.writer.parallel,
             shards=self.shards,
+            use_wal=self.use_wal,
         )
 
     def close(self) -> None:

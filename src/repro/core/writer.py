@@ -16,12 +16,29 @@ from copy-on-write clones, never touching a Segment a Searcher may hold.
 Merging is delegated to a ``TieredMergePolicy`` + ``MergeScheduler``
 (``repro.core.lifecycle``); after each commit the writer asks the Directory
 to garbage-collect storage for segments no snapshot references.
+
+**Durable ingest buffer (``use_wal=True``, byte path only).**  The paper's
+§4 redesign argument applied to the buffer itself: every ``add_documents``
+batch (and every delete) appends ONE write-ahead record — the batch's
+columnar arrays, verbatim — into the ``PersistentHeap`` with a single
+durability barrier, so the *ack* is the durability point:
+
+  add_documents -> buffer append + 1 WAL record + 1 barrier  (ack = durable)
+  flush()       -> unchanged (marks the covered WAL span as flushed)
+  commit()      -> PUBLISH: no flush — merge-on-commit, one barrier, root
+                   flip that also retires the flushed WAL span.  The buffer
+                   tail stays durable via the log.
+  crash+recover -> open the commit point, then REPLAY the unretired log
+                   tail in seq order, rebuilding the DRAM buffer (and any
+                   pre-crash flush boundaries) bit-identically.
+
+See ``repro.storage.wal`` for the record format and torn-write rules.
 """
 
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -42,6 +59,12 @@ from repro.core.segment import (
     merge_segments_reference,
 )
 
+# reserved doc-values column carrying a document's external id when the
+# sharded layer routes it (``repro.core.sharded`` re-exports this); the WAL
+# replay watches it so a recovered ``ShardedWriter`` can re-derive its
+# external-id watermark from replayed batches
+EXT_ID_FIELD = "_extid"
+
 
 class IndexWriter:
     def __init__(
@@ -53,6 +76,7 @@ class IndexWriter:
         merge_scheduler: Optional[MergeScheduler] = None,
         flush_ram_mb: Optional[float] = None,
         use_reference_ingest: bool = False,
+        use_wal: bool = False,
     ) -> None:
         self.directory = directory
         self.analyzer = analyzer or Analyzer()
@@ -71,6 +95,24 @@ class IndexWriter:
         # oracle and the pre-PR baseline in benchmarks (mirrors
         # search_single vs search_batch)
         self.use_reference_ingest = use_reference_ingest
+
+        # durable ingest buffer: WAL-log every buffer mutation when the
+        # directory can buy per-batch durability with a single barrier
+        # (byte path); on other kinds ``use_wal`` degrades to a no-op
+        if use_wal and use_reference_ingest:
+            raise ValueError(
+                "use_wal logs the columnar buffer; it cannot cover the "
+                "reference dict-buffer ingest path"
+            )
+        self.use_wal = use_wal
+        self._wal_on = use_wal and directory.supports_wal()
+        self._wal_last_seq = 0     # newest record appended or replayed
+        self._wal_flushed_seq = 0  # newest record fully baked into segments
+        self.wal_stats: Dict[str, int] = {"appends": 0, "replayed": 0}
+        # highest external id seen in replayed batches (-1 = none): how a
+        # recovered ShardedWriter advances its id watermark past batches
+        # acked after the last cross-shard manifest
+        self.replay_max_ext = -1
 
         # DRAM indexing buffer: columnar flat arrays (production path) or
         # the reference term -> [(doc, freq, positions)] dict (oracle path)
@@ -115,19 +157,68 @@ class IndexWriter:
 
     # ------------------------------------------------------------------
     def _recover(self) -> None:
-        """Open from the latest commit point (crash-safe restart)."""
+        """Open from the latest commit point, then replay the WAL tail
+        (crash-safe restart; with the WAL, recovery reaches the last *ack*,
+        not just the last commit)."""
         latest = self.directory.latest_commit()
-        if latest is None:
-            return
-        _, names, meta = latest
-        segs: List[Segment] = []
-        base = 0
-        for name in names:
-            seg = self.directory.open_for_write(name, base)
-            segs.append(seg)
-            base += seg.n_docs
-        self._seg_counter = int(meta.get("seg_counter", len(names)))
-        self._infos = SegmentInfos.opened(segs)
+        if latest is not None:
+            _, names, meta = latest
+            segs: List[Segment] = []
+            base = 0
+            for name in names:
+                seg = self.directory.open_for_write(name, base)
+                segs.append(seg)
+                base += seg.n_docs
+            self._seg_counter = int(meta.get("seg_counter", len(names)))
+            self._infos = SegmentInfos.opened(segs)
+        if self._wal_on:
+            self._replay_wal()
+
+    def _replay_wal(self) -> None:
+        """Rebuild the DRAM buffer from the unretired log tail.
+
+        Records replay in seq order; each batch record's ``base`` (the
+        buffer length it was appended at) both validates the reconstruction
+        and recreates pre-crash flush boundaries — when the base rewinds,
+        the pre-crash writer flushed there, so the replay flushes too and
+        the rebuilt segments (same names via the recovered ``seg_counter``,
+        same deterministic columnar build) come out bit-identical.
+        """
+        retired = self.directory.wal_retired()
+        self._wal_last_seq = self._wal_flushed_seq = retired
+        for meta, arrays in self.directory.wal_replay():
+            base = int(meta["base"])
+            if base != len(self._buf_doc_lens):
+                self.flush()
+                if base != len(self._buf_doc_lens):
+                    raise RuntimeError(
+                        f"WAL replay: record {meta['seq']} expects buffer "
+                        f"base {base}, have {len(self._buf_doc_lens)}"
+                    )
+            if meta["kind"] == "delete":
+                self._apply_delete(int(meta["th"]))
+            else:
+                self._ram_bytes += self._buf.extend_raw(
+                    arrays["term_hash"],
+                    arrays["doc_local"],
+                    arrays["freq"],
+                    arrays["pos_offset"],
+                    arrays["positions"],
+                )
+                self._buf_doc_lens.extend(int(x) for x in arrays["doc_lens"])
+                self._ram_bytes += 8 * len(arrays["doc_lens"])
+                keys = meta.get("dv_keys", [])
+                for ki, dloc, val in zip(
+                    arrays["dv_key"], arrays["dv_doc"], arrays["dv_val"]
+                ):
+                    key = keys[int(ki)]
+                    self._append_dv(int(dloc), key, float(val))
+                    if key == EXT_ID_FIELD:
+                        self.replay_max_ext = max(self.replay_max_ext, int(val))
+            self._wal_last_seq = int(meta["seq"])
+            self.wal_stats["replayed"] += 1
+        # seq numbering continues above anything the durable chain holds
+        self._wal_last_seq = max(self._wal_last_seq, self.directory.wal_last_seq())
 
     # ------------------------------------------------------------------
     @property
@@ -149,7 +240,55 @@ class IndexWriter:
         fields: Dict[str, str],
         doc_values: Optional[Dict[str, float]] = None,
     ) -> int:
-        """Index one document into the DRAM buffer.  Returns global doc id."""
+        """Index one document into the DRAM buffer.  Returns global doc id.
+
+        With the WAL on this is a batch of one: one record, one barrier —
+        batching through :meth:`add_documents` is what amortizes the ack.
+        """
+        if self._wal_on:
+            return self.add_documents([(fields, doc_values)])[0]
+        gid = self._append_document(fields, doc_values)
+        self._maybe_autoflush()
+        return gid
+
+    def add_documents(
+        self, docs: Sequence[Tuple[Dict[str, str], Optional[dict]]]
+    ) -> List[int]:
+        """Index a batch of ``(fields, doc_values)`` documents.
+
+        With ``use_wal`` the return is an *ack*: the whole batch has been
+        appended to the persistent write-ahead log under ONE durability
+        barrier, so a crash at any later point replays it — durability no
+        longer waits for ``commit``.  Without the WAL this is just the
+        batched convenience API (volatile buffer, as ever).
+        """
+        if not docs:
+            return []
+        if not self._wal_on:
+            gids = [self._append_document(f, dv) for f, dv in docs]
+            self._maybe_autoflush()
+            return gids
+        d0 = len(self._buf_doc_lens)
+        n0, p0 = len(self._buf), self._buf.n_positions
+        dv_log: List[Tuple[str, int, float]] = []
+        gids: List[int] = []
+        for fields, dv in docs:
+            local = len(self._buf_doc_lens)
+            gids.append(self._append_document(fields, dv))
+            if dv:
+                for k, v in dv.items():
+                    dv_log.append((k, local, v))
+        self._wal_append_batch(d0, n0, p0, dv_log)
+        # the autoflush check runs per batch, after the ack: a WAL record
+        # must describe one contiguous run of the buffer it was logged into
+        self._maybe_autoflush()
+        return gids
+
+    def _append_document(
+        self,
+        fields: Dict[str, str],
+        doc_values: Optional[Dict[str, float]],
+    ) -> int:
         local = len(self._buf_doc_lens)
         doc_len = 0
         if self.use_reference_ingest:
@@ -172,24 +311,66 @@ class IndexWriter:
                 )
         self._buf_doc_lens.append(doc_len)
         self._ram_bytes += 8
-        # doc values: pad lazily with one extend when a key reappears (cols
-        # never seen again are padded once at flush) — the old per-doc
-        # backfill over every known key was O(n^2) per buffer
         if doc_values:
             for k, val in doc_values.items():
-                col = self._buf_dv.setdefault(k, [])
-                gap = local - len(col)
-                if gap > 0:
-                    col.extend([0] * gap)
-                col.append(val)
-                self._ram_bytes += 4 * (gap + 1)
-        gid = self._infos.total_docs + local
+                self._append_dv(local, k, val)
+        return self._infos.total_docs + local
+
+    def _append_dv(self, local: int, key: str, val) -> None:
+        """Doc values pad lazily with one extend when a key reappears (cols
+        never seen again are padded once at flush) — the old per-doc
+        backfill over every known key was O(n^2) per buffer."""
+        col = self._buf_dv.setdefault(key, [])
+        gap = local - len(col)
+        if gap > 0:
+            col.extend([0] * gap)
+        col.append(val)
+        self._ram_bytes += 4 * (gap + 1)
+
+    def _maybe_autoflush(self) -> None:
         if (
             self.flush_ram_mb is not None
             and self._ram_bytes >= self.flush_ram_mb * (1 << 20)
         ):
             self.flush()
-        return gid
+
+    def _wal_append_batch(
+        self, d0: int, n0: int, p0: int, dv_log: List[Tuple[str, int, float]]
+    ) -> None:
+        """Log the batch's buffer delta (the ack's durability point).
+
+        The record carries the exact column slices the batch appended —
+        ``pos_offset`` values are absolute, so replaying records in order
+        into an empty buffer reconstructs every column bit-identically.
+        """
+        th, dl, fr, po, ps = self._buf.columns()
+        keys: List[str] = []
+        key_of: Dict[str, int] = {}
+        dv_key = np.empty(len(dv_log), dtype=np.int32)
+        dv_doc = np.empty(len(dv_log), dtype=np.int32)
+        dv_val = np.empty(len(dv_log), dtype=np.float64)
+        for i, (k, local, v) in enumerate(dv_log):
+            if k not in key_of:
+                key_of[k] = len(keys)
+                keys.append(k)
+            dv_key[i] = key_of[k]
+            dv_doc[i] = local
+            dv_val[i] = v
+        self._wal_last_seq = self.directory.wal_append(
+            {"kind": "batch", "base": d0, "dv_keys": keys},
+            {
+                "term_hash": th[n0:],
+                "doc_local": dl[n0:],
+                "freq": fr[n0:],
+                "pos_offset": po[n0:],
+                "positions": ps[p0:],
+                "doc_lens": np.asarray(self._buf_doc_lens[d0:], dtype=np.int64),
+                "dv_key": dv_key,
+                "dv_doc": dv_doc,
+                "dv_val": dv_val,
+            },
+        )
+        self.wal_stats["appends"] += 1
 
     def delete_by_term(self, field: str, token: str) -> int:
         """Mark every document containing (field, token) deleted.
@@ -199,8 +380,21 @@ class IndexWriter:
         next reopen.  For in-buffer docs the delete is remembered with the
         current buffer watermark and applied at flush to the docs indexed
         before this call (Lucene's buffered-deletes ordering).
+
+        With the WAL on, the delete is logged (and acked durable) before it
+        is applied: replay re-derives both the segment tombstones and the
+        buffered watermark at exactly this point in the ingest order.
         """
         th = term_hash(field, token)
+        if self._wal_on:
+            self._wal_last_seq = self.directory.wal_append(
+                {"kind": "delete", "base": len(self._buf_doc_lens), "th": th},
+                {},
+            )
+            self.wal_stats["appends"] += 1
+        return self._apply_delete(th)
+
+    def _apply_delete(self, th: int) -> int:
         n = 0
         replaced: Dict[str, Segment] = {}
         for seg in self._infos.segments:
@@ -225,8 +419,13 @@ class IndexWriter:
         This is what ``reopen`` forces: after this returns, a new Searcher
         can see the documents.  Durability is NOT implied (file path: page
         cache only; byte path: durable at next barrier).
+
+        With the WAL on, a flush advances the *flushed* watermark: every
+        record logged so far is now fully contained in segments, so the
+        next commit's root flip can retire that span of the log.
         """
         if not self._buf_doc_lens:
+            self._wal_flushed_seq = self._wal_last_seq
             return None
         name = f"_s{self._seg_counter:06d}"
         self._seg_counter += 1
@@ -260,6 +459,7 @@ class IndexWriter:
         self._buf_dv = {}
         self._buf_deletes = []
         self._ram_bytes = 0
+        self._wal_flushed_seq = self._wal_last_seq
         self._maybe_merge()
         return seg
 
@@ -324,12 +524,23 @@ class IndexWriter:
         """Flush + durability barrier + new commit point (paper's 'commit'),
         then GC storage for segments no longer referenced.
 
+        With the WAL on, commit becomes mostly *publish*: the flush is
+        skipped — buffered documents were made durable at ack time and the
+        unretired log tail replays them after a crash — so what remains is
+        merge-on-commit, ONE barrier, and the root-record flip, which
+        atomically retires the log span already baked into segments.  This
+        is what collapses the paper's Fig 3 commit latency on the byte
+        path a second time (``commit_bench --wal``).
+
         ``gc=False`` defers the reclamation to an explicit :meth:`run_gc`:
         the previous commit point (and its files/heap extents) survives
         until then, which is what lets a *cross-shard* commit roll a shard
-        back when a crash tears the commit wave (``Directory.rollback_to``).
+        back when a crash tears the commit wave (``Directory.rollback_to``
+        restores the older root, whose WAL watermark *un-retires* the newer
+        wave's records so they replay instead of vanishing).
         """
-        self.flush()
+        if not self._wal_on:
+            self.flush()
         # deletes-triggered rewrites (and optional merge-on-commit
         # consolidation) run even when the buffer was empty
         self._maybe_merge(on_commit=self.merge_policy.merge_on_commit)
@@ -337,6 +548,8 @@ class IndexWriter:
         m["seg_counter"] = self._seg_counter
         m["ts"] = time.time()
         names = self._infos.names()
+        if self._wal_on:
+            self.directory.wal_set_retire(self._wal_flushed_seq)
         gen = self.directory.commit(names, m)
         if gc:
             self.run_gc()
@@ -353,8 +566,14 @@ class IndexWriter:
         return res
 
     # ------------------------------------------------------------------
+    @property
+    def wal_enabled(self) -> bool:
+        """True when acks are durable (``use_wal`` on a WAL-capable
+        directory)."""
+        return self._wal_on
+
     def stats(self) -> dict:
-        return {
+        s = {
             "segments": len(self._infos),
             "docs": self.next_doc,
             "buffered": self.buffered_docs,
@@ -363,3 +582,11 @@ class IndexWriter:
             "merges": self.merge_scheduler.stats.snapshot(),
             "gc": dict(self.gc_stats),
         }
+        if self._wal_on:
+            s["wal"] = {
+                **self.wal_stats,
+                "last_seq": self._wal_last_seq,
+                "flushed_seq": self._wal_flushed_seq,
+                "retired_seq": self.directory.wal_retired(),
+            }
+        return s

@@ -8,11 +8,15 @@ need to exploit NVM ("read/written directly into NVM using loads/stores").
 
 Layout (all little-endian):
 
-    [0:8)    magic  b"RPRHEAP1"
+    [0:8)    magic  b"RPRHEAP2"  (v2: 64-byte header with the WAL head;
+             v1's 24-byte-header files are rejected, not reinterpreted)
     [8:16)   committed watermark (uint64) -- bytes before this offset are
              durable as of the last barrier; this is the "commit point".
     [16:24)  bump-allocator tail (uint64)
-    [24:...) allocations, each 64-byte aligned:
+    [24:32)  WAL head (uint64) -- heap offset of the newest durable
+             write-ahead-log record (0 = none); see ``repro.storage.wal``
+    [32:64)  reserved
+    [64:...) allocations, each 64-byte aligned:
              [dtype code u32][ndim u32][shape u64 x ndim][payload]
 
 Durability barrier: on real pmem this is CLWB+SFENCE; on a file-backed memmap
@@ -42,12 +46,12 @@ commit" and the benchmarks report barriers per ingest cycle.
 from __future__ import annotations
 
 import os
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-_MAGIC = b"RPRHEAP1"
-_HEADER = 24
+_MAGIC = b"RPRHEAP2"  # v2 layout: header grew 24 -> 64 bytes for the WAL
+_HEADER = 64
 _ALIGN = 64
 
 # stable wire codes for dtypes we store
@@ -95,6 +99,10 @@ class PersistentHeap:
             self._mm = np.memmap(path, dtype=np.uint8, mode="r+")
             if bytes(self._mm[0:8]) != _MAGIC:
                 raise ValueError(f"{path}: not a repro heap")
+            # opening an existing heap file IS recovery: anything past the
+            # committed watermark was never covered by a barrier (a crash may
+            # have torn it), so the bump tail rewinds to the durable point
+            self._set_u64(16, self.committed)
 
     # -- header accessors ---------------------------------------------------
     def _get_u64(self, off: int) -> int:
@@ -114,6 +122,13 @@ class PersistentHeap:
     @property
     def capacity(self) -> int:
         return self._mm.shape[0]
+
+    @property
+    def wal_head(self) -> int:
+        """Offset of the newest *durable* WAL record (0 = none).  Updated
+        only inside :meth:`barrier` after the record's bytes are flushed,
+        so a crash can never expose a head pointing at a torn record."""
+        return self._get_u64(24)
 
     # -- store / load -------------------------------------------------------
     @staticmethod
@@ -197,14 +212,22 @@ class PersistentHeap:
         alignment padding, so padding must not count as garbage)."""
         return _align(self.extent(off))
 
-    def barrier(self) -> None:
+    def barrier(self, wal_head: Optional[int] = None) -> None:
         """Durability fence: everything stored so far becomes committed.
 
         One barrier per commit -- this is what collapses Lucene's
         fsync-per-file commit cost on the byte path.
+
+        ``wal_head`` (when given) is published *between* the two flushes:
+        the record's bytes are durable before the 8-byte head pointer that
+        names them (store -> CLWB/SFENCE -> pointer store -> SFENCE on real
+        pmem), so recovery either sees the old head or a fully-stored new
+        record -- never a head pointing into torn bytes.
         """
         tail = self.tail
         self._mm.flush()
+        if wal_head is not None:
+            self._set_u64(24, wal_head)
         self._set_u64(8, tail)
         self._mm.flush()
         self.stats["barriers"] += 1

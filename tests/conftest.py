@@ -6,6 +6,27 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import numpy as np
 import pytest
 
+# every directory kind a test may parameterize over; the REPRO_KINDS env
+# filter (the CI directory-kind matrix) deselects parameterizations whose
+# kind is not listed, e.g. REPRO_KINDS=byte-pmem runs only the byte path
+_DIR_KINDS = {"ram", "fs-ssd", "fs-pmem", "byte-pmem", "byte-dram"}
+
+
+def pytest_collection_modifyitems(config, items):
+    spec = os.environ.get("REPRO_KINDS")
+    if not spec:
+        return
+    allowed = {k.strip() for k in spec.split(",") if k.strip()}
+    keep, drop = [], []
+    for item in items:
+        cs = getattr(item, "callspec", None)
+        params = cs.params.values() if cs is not None else ()
+        kinds = {v for v in params if isinstance(v, str) and v in _DIR_KINDS}
+        (keep if not kinds or kinds <= allowed else drop).append(item)
+    if drop:
+        config.hook.pytest_deselected(items=drop)
+        items[:] = keep
+
 
 @pytest.fixture
 def rng():

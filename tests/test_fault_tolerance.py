@@ -1,5 +1,6 @@
 """Fault tolerance: tiered checkpointing, crash/restart bit-exactness,
-elastic re-shard, straggler mitigation, gradient compression."""
+elastic re-shard, straggler mitigation, gradient compression — plus the
+search engine's stats-continuity contract across crash recovery."""
 
 import numpy as np
 import jax
@@ -121,6 +122,37 @@ def test_prefetcher_straggler_mitigation():
     got = [pf.get() for _ in range(6)]
     assert pf.skipped >= 1
     assert any(isinstance(g, int) for g in got)
+
+
+def test_engine_stats_survive_crash_recovery(tmp_path):
+    """``SearchEngine.crash_and_recover`` must carry the engine-level
+    lifetime counters (merge warmups, device uploads) into the recovered
+    engine: they are a per-index observability ledger like the gc/merge
+    stats, and recovery used to silently zero them with the fresh cache."""
+    from repro.core import SearchEngine
+    from repro.core.search import TermQuery
+
+    eng = SearchEngine("byte-pmem", str(tmp_path / "d"))
+    eng.writer.merge_factor = 2  # force merges -> merge_warmups > 0
+    for i in range(60):
+        eng.add({"body": f"tok{i % 7} common"}, {"month": i % 12})
+        if (i + 1) % 10 == 0:
+            eng.reopen()
+    eng.commit()
+    eng.search(TermQuery("body", "common"))
+    before = eng.stats()["cache"]
+    assert before["merge_warmups"] > 0
+    assert before["segment_uploads"] > 0
+
+    rec = eng.crash_and_recover()
+    after = rec.stats()["cache"]
+    for key in ("merge_warmups", "segment_uploads", "array_uploads",
+                "bytes_uploaded"):
+        assert after[key] >= before[key], (key, before, after)
+    # and the ledger keeps counting from there, not from zero
+    rec.reopen()
+    rec.search(TermQuery("body", "common"))
+    assert rec.stats()["cache"]["segment_uploads"] > before["segment_uploads"]
 
 
 def test_gradient_compression_error_feedback():

@@ -1,0 +1,371 @@
+"""Durable write-ahead ingest buffer (``use_wal``): ack = durable,
+commit = publish.
+
+The contracts pinned here:
+
+  * **Ack = durable** — a crash after N acked ``add_documents`` batches
+    with NO commit recovers all N batches on the byte path; post-replay
+    search results are bit-identical to a never-crashed writer across all
+    six query families, unsharded and 2-shard sharded.
+  * **One barrier per ack** — however many docs/fields/arrays a batch
+    carries, the ack issues EXACTLY one durability barrier.
+  * **Commit = publish** — with the WAL on, commit does not flush: the
+    buffer tail stays log-covered, the root flip retires exactly the
+    flushed span, and replay returns only the unretired tail.
+  * **Bit-identical buffer replay** — the rebuilt ``ColumnarBuffer``
+    columns, doc lens, doc values, and buffered deletes equal the
+    pre-crash writer's, column for column.
+  * **Rollback un-retires** — the sharded two-phase commit's rollback
+    window restores the older WAL watermark, so a torn wave's acked
+    batches replay instead of vanishing.
+  * **Torn writes lose only the un-acked suffix** — a crash that tears the
+    in-flight record (heap file truncated mid-batch) recovers exactly the
+    fully-acked prefix (deterministic twin of the hypothesis test in
+    ``test_wal_torn.py``).
+  * **Graceful degradation** — ``use_wal`` on ram/fs directories is a
+    no-op (``wal_enabled`` False), with classic commit semantics intact.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import EXT_ID_FIELD, SearchEngine, ShardedEngine
+from repro.core.search import (
+    BooleanQuery,
+    FacetQuery,
+    PhraseQuery,
+    RangeQuery,
+    SortQuery,
+    TermQuery,
+)
+from repro.data.corpus import CorpusConfig, synthetic_corpus
+
+KINDS = ["ram", "fs-ssd", "byte-pmem"]
+N_DOCS = 120
+BATCH = 30
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return list(synthetic_corpus(CorpusConfig(n_docs=N_DOCS, vocab=300, seed=7)))
+
+
+def batches(corpus, size=BATCH):
+    return [corpus[j : j + size] for j in range(0, len(corpus), size)]
+
+
+def family_queries(corpus):
+    """One query per family (term, boolean, phrase, range, sort, facet)."""
+    from collections import Counter
+
+    from repro.core import Analyzer
+
+    an = Analyzer()
+    c = Counter()
+    for fields, _ in corpus:
+        c.update(set(an.tokenize(fields["body"])))
+    toks = [t for t, _ in c.most_common(4)]
+    bigram = tuple(an.tokenize(corpus[0][0]["body"])[:2])
+    return [
+        TermQuery("body", toks[0]),
+        BooleanQuery((TermQuery("body", toks[0]), TermQuery("body", toks[1])), "and"),
+        BooleanQuery((TermQuery("body", toks[2]), TermQuery("body", toks[3])), "or"),
+        PhraseQuery("body", bigram),
+        RangeQuery("month", 3, 7),
+        SortQuery(TermQuery("body", toks[0]), "timestamp"),
+        FacetQuery(None, "month", 12),
+    ]
+
+
+def assert_same_results(queries, a, b, k=40):
+    for q in queries:
+        ta, tb = a.search(q, k=k), b.search(q, k=k)
+        ctx = repr(q)
+        assert ta.total_hits == tb.total_hits, ctx
+        np.testing.assert_array_equal(ta.doc_ids, tb.doc_ids, err_msg=ctx)
+        np.testing.assert_array_equal(ta.scores, tb.scores, err_msg=ctx)
+        if isinstance(q, FacetQuery):
+            np.testing.assert_array_equal(ta.facets, tb.facets, err_msg=ctx)
+
+
+# ---------------------------------------------------------------------------
+# capability / degradation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_wal_capability_per_kind(tmp_path, kind, corpus):
+    """Only the byte path can buy per-batch durability with one barrier;
+    elsewhere ``use_wal`` degrades to a no-op and commit still flushes."""
+    eng = SearchEngine(kind, str(tmp_path / "d"), use_wal=True)
+    assert eng.wal_enabled == (kind == "byte-pmem")
+    for b in batches(corpus):
+        eng.add_documents(b)
+    eng.commit()
+    if not eng.wal_enabled:
+        # classic commit: the buffer was flushed into durable segments
+        assert eng.writer.buffered_docs == 0
+    eng.reopen()
+    assert eng.search(TermQuery("body", "wb"), k=5).total_hits >= 0  # serves
+
+
+# ---------------------------------------------------------------------------
+# ack = durable (the acceptance crash test), unsharded + sharded
+# ---------------------------------------------------------------------------
+
+
+def test_crash_after_acked_batches_no_commit(tmp_path, corpus):
+    """N acked batches, zero commits, crash: all N replay, results match a
+    never-crashed writer bit for bit across the six query families."""
+    eng = SearchEngine("byte-pmem", str(tmp_path / "a"), use_wal=True)
+    for b in batches(corpus):
+        eng.add_documents(b)
+    assert eng.writer.buffered_docs == N_DOCS
+    rec = eng.crash_and_recover()
+    assert rec.writer.buffered_docs == N_DOCS
+    assert rec.writer.wal_stats["replayed"] == len(batches(corpus))
+
+    ref = SearchEngine("byte-pmem", str(tmp_path / "ref"), use_wal=True)
+    for b in batches(corpus):
+        ref.add_documents(b)
+    rec.reopen()
+    ref.reopen()
+    assert_same_results(family_queries(corpus), ref, rec)
+
+
+def test_replayed_buffer_is_bit_identical(tmp_path, corpus):
+    eng = SearchEngine("byte-pmem", str(tmp_path / "b"), use_wal=True)
+    for b in batches(corpus):
+        eng.add_documents(b)
+    eng.delete("body", "wb")  # buffered-delete record rides the log too
+    w = eng.writer
+    before_cols = [c.copy() for c in w._buf.columns()]
+    before_lens = list(w._buf_doc_lens)
+    before_dv = {k: list(v) for k, v in w._buf_dv.items()}
+    before_dels = list(w._buf_deletes)
+    before_ram = w._ram_bytes
+
+    rw = eng.crash_and_recover().writer
+    for a, b_ in zip(before_cols, rw._buf.columns()):
+        np.testing.assert_array_equal(a, b_)
+    assert rw._buf_doc_lens == before_lens
+    assert set(rw._buf_dv) == set(before_dv)
+    for k in before_dv:
+        np.testing.assert_array_equal(
+            np.asarray(rw._buf_dv[k]), np.asarray(before_dv[k])
+        )
+    assert rw._buf_deletes == before_dels
+    assert rw._ram_bytes == before_ram
+
+
+def test_crash_with_commit_flush_and_tail(tmp_path, corpus):
+    """Mixed timeline: batches → flush → commit (publish) → more batches →
+    flush (no commit) → more batches → crash.  Recovery = committed
+    segments + full log replay; results match the never-crashed engine."""
+    def drive(eng):
+        bs = batches(corpus)
+        eng.add_documents(bs[0])
+        eng.flush()
+        eng.commit()
+        eng.add_documents(bs[1])
+        eng.flush()          # uncommitted segment (lost in the crash)
+        eng.add_documents(bs[2])
+        eng.add_documents(bs[3])
+        return eng
+
+    eng = drive(SearchEngine("byte-pmem", str(tmp_path / "c"), use_wal=True))
+    ref = drive(SearchEngine("byte-pmem", str(tmp_path / "ref"), use_wal=True))
+    rec = eng.crash_and_recover()
+    rec.reopen()
+    ref.reopen()
+    assert_same_results(family_queries(corpus), ref, rec)
+
+
+@pytest.mark.parametrize("kind", ["byte-pmem"])
+def test_sharded_crash_after_acked_batches(tmp_path, kind, corpus):
+    """The sharded acceptance half: per-shard WALs recover every acked
+    batch past the manifest; fan-out results match a never-crashed sharded
+    engine AND the unsharded reference, all families."""
+    def drive(eng):
+        bs = batches(corpus)
+        eng.add_documents(bs[0])
+        eng.add_documents(bs[1])
+        eng.commit()  # manifest at 60 docs
+        eng.add_documents(bs[2])
+        eng.add_documents(bs[3])  # acked past the manifest
+        return eng
+
+    eng = drive(ShardedEngine(kind, str(tmp_path / "s"), n_shards=2,
+                              use_wal=True, parallel=False))
+    ref = drive(ShardedEngine(kind, str(tmp_path / "r"), n_shards=2,
+                              use_wal=True, parallel=False))
+    rec = eng.crash_and_recover()
+    assert rec.writer.next_ext == N_DOCS
+    rec.reopen()
+    ref.reopen()
+    assert_same_results(family_queries(corpus), ref, rec)
+
+    # cross-check against the unsharded engine in external-id space
+    uns = SearchEngine(kind, str(tmp_path / "u"), use_wal=True)
+    for i, (fields, dv) in enumerate(corpus):
+        uns.add({**fields}, {**dv, EXT_ID_FIELD: i})
+    uns.reopen()
+    ext = np.concatenate(
+        [np.asarray(s.doc_values[EXT_ID_FIELD]) for s in uns.manager.infos.segments]
+    )
+    for q in family_queries(corpus):
+        ta, tb = uns.search(q, k=40), rec.search(q, k=40)
+        assert ta.total_hits == tb.total_hits, repr(q)
+        ids = ta.doc_ids if isinstance(q, FacetQuery) else ext[ta.doc_ids]
+        np.testing.assert_array_equal(ids, tb.doc_ids, err_msg=repr(q))
+        np.testing.assert_array_equal(ta.scores, tb.scores, err_msg=repr(q))
+
+
+# ---------------------------------------------------------------------------
+# barrier accounting + commit = publish
+# ---------------------------------------------------------------------------
+
+
+def test_ack_is_exactly_one_barrier_per_batch(tmp_path, corpus):
+    eng = SearchEngine("byte-pmem", str(tmp_path / "d"), use_wal=True)
+    heap = eng.directory.heap
+    bs = batches(corpus)
+    for i, b in enumerate(bs):
+        before = heap.stats["barriers"]
+        eng.add_documents(b)
+        assert heap.stats["barriers"] == before + 1
+    # a batch is ONE log record: one reserve + one store per ack
+    assert eng.writer.wal_stats["appends"] == len(bs)
+    before = heap.stats["barriers"]
+    eng.commit()  # publish: one more barrier, no flush
+    assert eng.directory.heap.stats["barriers"] == before + 1
+    assert eng.writer.buffered_docs == N_DOCS
+
+
+def test_commit_publishes_and_retires_flushed_span(tmp_path, corpus):
+    eng = SearchEngine("byte-pmem", str(tmp_path / "e"), use_wal=True)
+    bs = batches(corpus)
+    eng.add_documents(bs[0])
+    eng.add_documents(bs[1])
+    eng.flush()
+    eng.add_documents(bs[2])
+    eng.commit()
+    d = eng.directory
+    # records 1-2 are inside the committed segment: retired; record 3 is
+    # the live tail that must replay
+    assert d.wal_retired() == 2
+    replay = d.wal_replay()
+    assert [m["seq"] for m, _ in replay] == [3]
+    # after flush+commit the whole log is retired
+    eng.flush()
+    eng.commit()
+    assert eng.directory.wal_replay() == []
+    assert eng.writer.buffered_docs == 0
+
+
+def test_rollback_unretires_wal_span(tmp_path, corpus):
+    """The sharded two-phase window: a shard that committed (and retired)
+    ahead of the manifest rolls back — the older root's watermark must
+    bring the retired records back into replay."""
+    eng = SearchEngine("byte-pmem", str(tmp_path / "f"), use_wal=True)
+    bs = batches(corpus)
+    eng.add_documents(bs[0])
+    eng.flush()
+    gen0 = eng.writer.commit(gc=False)   # retires record 1
+    eng.add_documents(bs[1])
+    eng.flush()
+    eng.writer.commit(gc=False)          # retires record 2 (the torn wave)
+    d = eng.directory
+    assert d.wal_retired() == 2 and d.wal_replay() == []
+    assert d.rollback_to(gen0)
+    assert d.wal_retired() == 1
+    assert [m["seq"] for m, _ in d.wal_replay()] == [2]
+    # a writer opened on the rolled-back root replays batch 2 into the buffer
+    rec = eng.crash_and_recover()
+    assert rec.writer.buffered_docs == BATCH
+    rec.reopen()
+    assert rec.search(TermQuery("body", "wb"), k=N_DOCS).total_hits >= 0
+    assert (
+        rec.search(FacetQuery(None, "month", 12), k=12).total_hits == 2 * BATCH
+    )
+
+
+def test_compaction_carries_unretired_tail(tmp_path, corpus):
+    """Heap compaction re-packs live segments into a fresh file — the
+    unretired WAL tail must move with them (and keep replaying), while
+    retired records are dropped as garbage."""
+    eng = SearchEngine("byte-pmem", str(tmp_path / "g"), use_wal=True)
+    eng.writer.merge_factor = 3
+    bs = batches(corpus)
+    for b in bs[:3]:
+        eng.add_documents(b)
+        eng.flush()
+        eng.commit()
+    eng.add_documents(bs[3])             # acked, never flushed
+    # churn flush+commit cycles until gc compacts (merged-away segments
+    # and retired records pile up as garbage)
+    for i in range(12):
+        eng.add_documents([corpus[0]])
+        eng.flush()
+        eng.commit()
+    assert eng.directory.gc_info["compactions"] > 0
+    rec = eng.crash_and_recover()
+    rec.reopen()
+    td = rec.search(FacetQuery(None, "month", 12), k=12)
+    assert td.total_hits == N_DOCS + 12
+
+
+# ---------------------------------------------------------------------------
+# torn writes (deterministic twin of the hypothesis test)
+# ---------------------------------------------------------------------------
+
+
+def torn_crash(directory, frac=0.5):
+    """Simulate power loss tearing the in-flight (un-acked) stores: the
+    heap file keeps an arbitrary prefix of them — truncate at ``frac``
+    between the committed watermark and the tail, zero-fill back."""
+    heap = directory.heap
+    lo, hi = heap.committed, max(heap.tail, heap.committed)
+    cut = int(lo + frac * (hi - lo))
+    cap = heap.capacity
+    heap.close()
+    with open(heap.path, "r+b") as f:
+        f.truncate(cut)
+        f.truncate(cap)
+
+
+def test_torn_batch_recovers_acked_prefix(tmp_path, corpus):
+    eng = SearchEngine("byte-pmem", str(tmp_path / "h"), use_wal=True)
+    bs = batches(corpus)
+    for b in bs[:3]:
+        eng.add_documents(b)          # acked
+    # an in-flight batch: stores issued, barrier never reached
+    w = eng.writer
+    d0, n0, p0 = len(w._buf_doc_lens), len(w._buf), w._buf.n_positions
+    for fields, dv in bs[3]:
+        w._append_document(fields, dv)
+    th, dl, fr, po, ps = w._buf.columns()
+    eng.directory._wal.append(
+        {"kind": "batch", "base": d0, "dv_keys": []},
+        {
+            "term_hash": th[n0:], "doc_local": dl[n0:], "freq": fr[n0:],
+            "pos_offset": po[n0:], "positions": ps[p0:],
+            "doc_lens": np.asarray(w._buf_doc_lens[d0:], dtype=np.int64),
+            "dv_key": np.empty(0, np.int32), "dv_doc": np.empty(0, np.int32),
+            "dv_val": np.empty(0, np.float64),
+        },
+        durable=False,
+    )
+    path = eng.directory.path
+    torn_crash(eng.directory, frac=0.6)
+    # machine restart: everything reloads from disk
+    rec = SearchEngine("byte-pmem", path, use_wal=True)
+    assert rec.writer.buffered_docs == 3 * BATCH  # acked prefix, exactly
+    rec.reopen()
+    ref = SearchEngine("byte-pmem", str(tmp_path / "ref"), use_wal=True)
+    for b in bs[:3]:
+        ref.add_documents(b)
+    ref.reopen()
+    assert_same_results(family_queries(corpus), ref, rec)

@@ -1,0 +1,136 @@
+"""Perf-trajectory regression gate (CI): fresh smoke vs committed baseline.
+
+``benchmarks/run.py --smoke`` (plus ``ingest_bench --shards 2 --smoke``)
+rewrites ``BENCH_ingest.json`` on every CI run.  This tool compares that
+fresh measurement against the baseline committed in the repo and fails on a
+>25% regression of any gated row, so a PR cannot silently walk back the
+perf wins the trajectory records:
+
+  * ``speedup_vs_reference_ram``   — columnar ingest vs the reference path
+  * ``sharded_speedup_ram_model``  — DWPT writer-parallelism scaling
+  * ``kinds.*.barriers_per_commit``— write-combining invariant (exact-ish)
+  * ``wal.wal_ack_us``             — durable-ack latency per batch
+  * ``wal.commit_us``              — commit = publish latency
+  * ``wal.commit_speedup``         — WAL vs non-WAL byte-path commit
+  * ``wal.barriers_per_batch``     — one barrier per acked batch
+
+Ratio rows ("higher is better") regress when fresh < 0.75 * baseline;
+latency rows ("lower is better") when fresh > 1.25 * baseline.  A key
+missing from the *baseline* is skipped (bootstrap: the first PR that adds
+a row commits its own baseline); a key missing from the *fresh* run fails.
+
+CI wiring (ci.yml): the committed file is copied aside BEFORE the smoke
+steps overwrite it, then::
+
+    python tools/check_bench.py --baseline /tmp/bench_baseline.json
+
+Run locally the same way; ``--fresh`` defaults to ``BENCH_ingest.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Optional, Tuple
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TOLERANCE = 0.25
+
+# (dotted json path, direction): "higher" = bigger is better (speedups),
+# "lower" = smaller is better (latencies, barrier counts).  The absolute
+# microsecond rows (wal_ack_us, commit_us) are noisier across machines
+# than the ratio rows — if runner hardware drifts, recommit the baseline
+# from a CI artifact rather than loosening TOLERANCE.
+GATES = [
+    ("speedup_vs_reference_ram", "higher"),
+    ("sharded_speedup_ram_model", "higher"),
+    ("kinds.byte-pmem.barriers_per_commit", "lower"),
+    ("wal.wal_ack_us", "lower"),
+    ("wal.commit_us", "lower"),
+    ("wal.commit_speedup", "higher"),
+    ("wal.barriers_per_batch", "lower"),
+]
+
+
+def lookup(payload: dict, dotted: str) -> Optional[float]:
+    node = payload
+    for part in dotted.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return float(node)  # type: ignore[arg-type]
+
+
+def check(baseline: dict, fresh: dict) -> Tuple[list, list]:
+    failures, notes = [], []
+    for key, direction in GATES:
+        base = lookup(baseline, key)
+        new = lookup(fresh, key)
+        if new is None:
+            failures.append(f"{key}: missing from the fresh smoke run")
+            continue
+        if base is None:
+            notes.append(f"{key}: no baseline yet (bootstrap), fresh={new:g}")
+            continue
+        if direction == "higher":
+            ok = new >= base * (1 - TOLERANCE)
+            verdict = f"fresh {new:g} vs baseline {base:g} (floor {base * (1 - TOLERANCE):g})"
+        else:
+            ok = new <= base * (1 + TOLERANCE)
+            verdict = f"fresh {new:g} vs baseline {base:g} (ceiling {base * (1 + TOLERANCE):g})"
+        if ok:
+            notes.append(f"{key}: OK — {verdict}")
+        else:
+            failures.append(f"{key}: REGRESSED — {verdict}")
+    return failures, notes
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--baseline",
+        default=os.path.join(REPO, "BENCH_ingest.json"),
+        help="committed baseline JSON (copy it aside before smoke overwrites)",
+    )
+    ap.add_argument(
+        "--fresh",
+        default=os.path.join(REPO, "BENCH_ingest.json"),
+        help="freshly measured smoke JSON",
+    )
+    args = ap.parse_args()
+    if not os.path.exists(args.fresh):
+        print(f"check_bench FAILED: fresh file {args.fresh} missing", file=sys.stderr)
+        return 1
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    if not os.path.exists(args.baseline):
+        print(
+            f"check_bench: baseline {args.baseline} missing — bootstrap run, "
+            f"nothing to gate against",
+        )
+        return 0
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    if os.path.samefile(args.baseline, args.fresh):
+        print(
+            "check_bench: baseline and fresh are the same file — comparing a "
+            "measurement with itself proves nothing; pass --baseline the "
+            "pre-smoke copy",
+            file=sys.stderr,
+        )
+    failures, notes = check(baseline, fresh)
+    for n in notes:
+        print(f"  {n}")
+    if failures:
+        print("check_bench FAILED (>25% regression):", file=sys.stderr)
+        for f_ in failures:
+            print(f"  - {f_}", file=sys.stderr)
+        return 1
+    print(f"check_bench OK ({len(GATES)} gated rows)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,14 +1,15 @@
-"""Docs gate (CI): core modules must stay documented.
+"""Docs gate (CI): core + storage modules must stay documented.
 
 Fails when README.md or ARCHITECTURE.md is missing, or when any module
-under ``src/repro/core`` is mentioned in neither — the module map in
-ARCHITECTURE.md is where new layers land with a documented home, and this
-check is what keeps it from rotting (PRs 1-3 were discoverable only
-through commit messages; that stops here).
+under ``src/repro/core`` or ``src/repro/storage`` is mentioned in neither
+— the module map in ARCHITECTURE.md is where new layers land with a
+documented home, and this check is what keeps it from rotting (PRs 1-3
+were discoverable only through commit messages; that stops here; the
+storage package joined the walk when ``storage/wal.py`` landed).
 
 A module "appears" when its name is present in either doc: the basename
-for top-level core modules (``writer.py``), the package-qualified form for
-nested ones (``query/plan.py``).
+for top-level modules (``writer.py``, ``heap.py``), the package-qualified
+form for nested ones (``query/plan.py``).
 
 Run: ``python tools/check_docs.py`` (exit 1 on failure).
 """
@@ -19,19 +20,23 @@ import os
 import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-CORE = os.path.join(REPO, "src", "repro", "core")
+ROOTS = (
+    os.path.join(REPO, "src", "repro", "core"),
+    os.path.join(REPO, "src", "repro", "storage"),
+)
 DOCS = ("README.md", "ARCHITECTURE.md")
 
 
 def core_modules() -> list:
     """Module mentions required: ``writer.py`` / ``query/plan.py`` style."""
     out = []
-    for dirpath, _, filenames in os.walk(CORE):
-        for fn in sorted(filenames):
-            if not fn.endswith(".py") or fn == "__init__.py":
-                continue
-            rel = os.path.relpath(os.path.join(dirpath, fn), CORE)
-            out.append(rel.replace(os.sep, "/"))
+    for root in ROOTS:
+        for dirpath, _, filenames in os.walk(root):
+            for fn in sorted(filenames):
+                if not fn.endswith(".py") or fn == "__init__.py":
+                    continue
+                rel = os.path.relpath(os.path.join(dirpath, fn), root)
+                out.append(rel.replace(os.sep, "/"))
     return sorted(out)
 
 
@@ -48,7 +53,7 @@ def main() -> int:
     for mod in core_modules():
         if mod not in text:
             failures.append(
-                f"src/repro/core/{mod} appears in neither "
+                f"module {mod} appears in neither "
                 f"{' nor '.join(DOCS)} — add it to the module map"
             )
     if failures:
