@@ -15,7 +15,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import fused_exec as fk
 from repro.kernels import ops, ref
+from repro.kernels.runtime import has_compiled_backend
 
 PEAK = 197e12
 BW = 819e9
@@ -29,18 +31,23 @@ def _time(fn, *args, reps=5):
     return (time.perf_counter() - t0) / reps
 
 
-def main() -> List[str]:
+def main(smoke: bool = False) -> List[str]:
+    """``smoke`` drops to the small shape per kernel and 2 reps — the CI
+    row exists to prove the kernels still run end-to-end and keep their
+    roofline columns populated, not to produce stable CPU timings."""
+    reps = 2 if smoke else 5
     rng = np.random.default_rng(0)
     out = []
 
     # bm25_topk: P postings
-    for p in (1 << 14, 1 << 17):
+    for p in (1 << 14,) if smoke else (1 << 14, 1 << 17):
         docs = jnp.asarray(np.sort(rng.choice(p * 4, p, replace=False)).astype(np.int32))
         freqs = jnp.asarray(rng.integers(1, 30, p).astype(np.int32))
         dl = jnp.asarray(rng.integers(10, 500, p * 4).astype(np.int32))
         live = jnp.asarray(np.ones(p * 4, bool))
         t = _time(
-            lambda: ops.bm25_topk(docs, freqs, dl, live, 2.0, 120.0, 0.9, 0.4, 10)
+            lambda: ops.bm25_topk(docs, freqs, dl, live, 2.0, 120.0, 0.9, 0.4, 10),
+            reps=reps,
         )
         bytes_touched = p * (4 + 4 + 4 + 1)  # freqs, dl, docs, valid
         roof = max(p * 8 / PEAK, bytes_touched / BW)
@@ -49,10 +56,35 @@ def main() -> List[str]:
             f";tpu_roofline_us={roof*1e6:.2f},bytes={bytes_touched}"
         )
 
+    # fused term executor kernel: gathered postings tiles + BM25 + live
+    # mask + per-block top-k in one pallas_call (the tentpole's term path)
+    for bsz, p in ((8, 4096),) if smoke else ((8, 4096), (32, 8192)):
+        nd = p * 2
+        f_docs = jnp.asarray(rng.integers(0, nd, (bsz, p)).astype(np.int32))
+        f_freqs = jnp.asarray(rng.integers(1, 30, (bsz, p)).astype(np.int32))
+        f_dl = jnp.asarray(rng.integers(10, 500, nd).astype(np.int32))
+        f_live = jnp.asarray(np.ones(nd, np.int32))
+        idfs = jnp.asarray(rng.uniform(0.5, 4.0, bsz).astype(np.float32))
+        interp = not has_compiled_backend()
+        t = _time(
+            lambda: fk.term_topk_tiles(
+                f_docs, f_freqs, f_dl, f_live, idfs, 120.0, 0.9, 0.4, 10, interp
+            ),
+            reps=reps,
+        )
+        # docs + freqs tile reads + dl/live doc-side gathers, per lane
+        bytes_touched = bsz * p * (4 + 4 + 4 + 4)
+        roof = max(bsz * p * 8 / PEAK, bytes_touched / BW)
+        mode = "us_cpu_interp" if interp else "us_compiled"
+        out.append(
+            f"fused_term,B={bsz}xP={p},{t*1e6:.0f},{mode}"
+            f";tpu_roofline_us={roof*1e6:.2f},bytes={bytes_touched}"
+        )
+
     # bitset combine
-    for w in (1 << 15, 1 << 18):
+    for w in (1 << 15,) if smoke else (1 << 15, 1 << 18):
         bm = jnp.asarray(rng.integers(0, 2**32, (4, w), dtype=np.uint32))
-        t = _time(lambda: ops.bitset_combine(bm, "and"))
+        t = _time(lambda: ops.bitset_combine(bm, "and"), reps=reps)
         bytes_touched = 4 * w * 4 + w * 4
         roof = bytes_touched / BW
         out.append(
@@ -61,12 +93,12 @@ def main() -> List[str]:
         )
 
     # decode attention: the long_500k-cell shape (scaled)
-    for s in (4096, 16384):
+    for s in (4096,) if smoke else (4096, 16384):
         b, hkv, g, d = 1, 2, 6, 128
         q = jnp.asarray(rng.standard_normal((b, hkv, g, d)), jnp.bfloat16)
         k = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.bfloat16)
         v = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.bfloat16)
-        t = _time(lambda: ops.decode_attention(q, k, v))
+        t = _time(lambda: ops.decode_attention(q, k, v), reps=reps)
         flops = 4 * b * hkv * g * s * d
         bytes_touched = 2 * b * hkv * s * d * 2
         roof = max(flops / PEAK, bytes_touched / BW)
@@ -78,5 +110,12 @@ def main() -> List[str]:
 
 
 if __name__ == "__main__":
-    for line in main():
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke", action="store_true", help="small shapes, 2 reps (CI row)"
+    )
+    args = ap.parse_args()
+    for line in main(smoke=args.smoke):
         print(line)

@@ -1,16 +1,173 @@
-"""Render EXPERIMENTS.md tables from dry-run JSON records.
+"""Roofline reporting: dry-run JSON tables + the live fused query path.
 
-    PYTHONPATH=src python -m benchmarks.roofline_report --dir dryrun_baseline
+Two modes:
+
+  PYTHONPATH=src python -m benchmarks.roofline_report --dir dryrun_baseline
+      render EXPERIMENTS.md tables from dry-run JSON records (legacy)
+
+  PYTHONPATH=src python -m benchmarks.roofline_report --search
+      measure this host's memory bandwidth, run the *real* fused batched
+      query path per family, and report achieved GB/s, score-elements/s and
+      the fraction of the measured roofline each family reaches
+
+The search roofline is a bandwidth roofline: every fused executor is a
+gather/score/reduce program whose arithmetic intensity is a few flops per
+byte, so the bound that matters is bytes moved, not FLOPs.  Bytes are
+*modeled* from the staged tile shapes — the traffic the program must move
+at least once (postings gathers, doc-side gathers, dense doc-space passes),
+counted per pass; caches can only make the achieved number look better, so
+``roofline_frac`` is a conservative lower bound.
 """
 
 import argparse
 import glob
 import json
 import os
+import time
+
+import numpy as np
+
+#: repetitions for the membw probe and each per-family timing (best-of)
+_REPS = 5
 
 
 def fmt_bytes(b):
     return f"{b/2**30:.2f}"
+
+
+# ---------------------------------------------------------------------------
+# Live search roofline (fused query path)
+# ---------------------------------------------------------------------------
+
+
+def measure_membw(n_mb: int = 256, reps: int = _REPS) -> float:
+    """Measured memory bandwidth (GB/s): streaming copy of an array far
+    larger than LLC, counting read + write bytes.  This is the roofline the
+    fused executors are judged against — the same machine, same day, not a
+    spec-sheet number."""
+    a = np.ones(n_mb * 1024 * 1024 // 8, dtype=np.float64)
+    b = np.empty_like(a)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        np.copyto(b, a)
+        best = min(best, time.perf_counter() - t0)
+    return 2 * a.nbytes / best / 1e9
+
+
+#: bench family name -> roofline key (the executor family it exercises)
+_FAMILY_KEYS = {
+    "TermBatch": "term",
+    "AndBatch": "bool",
+    "SortBatch": "sort",
+    "RangeBatch": "range",
+    "FacetBatch": "facet",
+}
+
+
+def _family_traffic(segments, queries, key, tile):
+    """(bytes, score_elems) one fused batch execution must move / evaluate.
+
+    Shapes come from the same staging calls the fused executors make
+    (``plan.stage_*_meta``), so the model tracks the padded widths actually
+    dispatched.  int32 lanes throughout (4 B).  Per segment:
+
+      term   gathers docs+freqs+dl_live over (B, P)          -> 12*B*P
+      bool   gathers over (B, T, P) + 3 dense doc passes     -> 12*B*T*P + 12*B*ND
+      sort   term gathers + scatter/key/top-k + dv column    -> 12*B*P + 8*B*ND + 4*ND
+      range  dv + live read per query row                    -> 8*B*ND
+      facet  term gathers + scatter/hist + dv column         -> 12*B*P + 8*B*ND + 4*ND
+
+    score_elems counts scored lanes: postings lanes (B*P or B*T*P) plus
+    dense doc-space lanes (B*ND) where the family reduces over doc space.
+    """
+    from repro.core.query import plan as qplan
+
+    B = qplan.bucket_batch(len(queries))
+    pad = B - len(queries)
+    nb = el = 0
+    for seg in segments:
+        nd = max(qplan.TILE, -(-len(seg.doc_lens) // qplan.TILE) * qplan.TILE)
+        if key == "term":
+            meta = qplan.stage_term_meta(seg, queries, pad, tile)
+            if meta is None:
+                continue
+            nb += 12 * B * meta.p
+            el += B * meta.p
+        elif key == "bool":
+            meta = qplan.stage_bool_meta(seg, queries, pad, tile)
+            if meta is None:
+                continue
+            T = meta.starts.shape[1]
+            nb += 12 * B * T * meta.p + 12 * B * nd
+            el += B * T * meta.p + B * nd
+        elif key in ("sort", "facet"):
+            terms = [q.term for q in queries]
+            meta = qplan.stage_term_meta(seg, terms, pad, tile)
+            if meta is None:
+                continue
+            nb += 12 * B * meta.p + 8 * B * nd + 4 * nd
+            el += B * meta.p + B * nd
+        elif key == "range":
+            nb += 8 * B * nd
+            el += B * nd
+        else:
+            raise ValueError(key)
+    return nb, el
+
+
+def search_roofline(batch: int = 32) -> dict:
+    """Per-family achieved GB/s and score-elements/s on the fused batched
+    path vs this host's measured memory-bandwidth roofline.
+
+    Returns ``{"membw_gbps": float, <family>: {elapsed_ms, modeled_gb,
+    achieved_gbps, elems_per_s, roofline_frac}}`` — the payload
+    ``search_bench.run_smoke`` embeds in BENCH_search.json.
+    """
+    from benchmarks import search_bench as sb
+    from repro.core.query import fused as qfused
+
+    membw = measure_membw()
+    eng = sb._build_kind("ram", "", sb.BATCH_N_DOCS, use_pallas=True)
+    segments = eng.searcher.segments
+    tile = qfused.kernel_enabled()
+    out = {"membw_gbps": membw}
+    for fam, queries in sb._batched_families(batch).items():
+        key = _FAMILY_KEYS[fam]
+        eng.search_batch(queries)  # warm the jit cache
+        best = float("inf")
+        for _ in range(_REPS):
+            t0 = time.perf_counter()
+            eng.search_batch(queries)
+            best = min(best, time.perf_counter() - t0)
+        nb, el = _family_traffic(segments, queries, key, tile)
+        achieved = nb / best / 1e9
+        out[key] = {
+            "elapsed_ms": best * 1e3,
+            "modeled_gb": nb / 1e9,
+            "achieved_gbps": achieved,
+            "elems_per_s": el / best,
+            "roofline_frac": achieved / membw,
+        }
+    return out
+
+
+def search_table(batch: int = 32) -> str:
+    r = search_roofline(batch)
+    lines = [
+        f"search roofline @ batch={batch}: measured membw "
+        f"{r['membw_gbps']:.1f} GB/s",
+        "| family | elapsed ms | modeled GB | achieved GB/s | elems/s | roofline frac |",
+        "|---|---|---|---|---|---|",
+    ]
+    for key in ("term", "bool", "sort", "range", "facet"):
+        f = r[key]
+        lines.append(
+            f"| {key} | {f['elapsed_ms']:.2f} | {f['modeled_gb']:.4f} "
+            f"| {f['achieved_gbps']:.2f} | {f['elems_per_s']:.3e} "
+            f"| {f['roofline_frac']:.3f} |"
+        )
+    return "\n".join(lines)
 
 
 def load(d):
@@ -65,7 +222,16 @@ def main():
     ap.add_argument("--dir", default="dryrun_baseline")
     ap.add_argument("--table", choices=["dryrun", "roofline"], default="roofline")
     ap.add_argument("--mesh", default="pod1")
+    ap.add_argument(
+        "--search",
+        action="store_true",
+        help="measured-membw roofline of the live fused query path",
+    )
+    ap.add_argument("--batch", type=int, default=32)
     args = ap.parse_args()
+    if args.search:
+        print(search_table(args.batch))
+        return
     recs = load(args.dir)
     if args.table == "dryrun":
         print(dryrun_table(recs))

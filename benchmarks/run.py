@@ -13,8 +13,11 @@ Run: PYTHONPATH=src python -m benchmarks.run [--only commit|search|nrt|ingest|ke
 ``--smoke`` is the CI perf-trajectory entry point: it runs the small
 ingest configuration (with its loud lifecycle/throughput regression
 gates) and writes ``BENCH_ingest.json`` — docs/sec, flush/commit latency,
-and durability-barrier counts per directory kind — which CI uploads as an
-artifact so every PR appends a point to the perf record.
+and durability-barrier counts per directory kind — then the search smoke
+(``search_bench.run_smoke``) which writes ``BENCH_search.json`` — batched
+vs fused QPS, per-query latency percentiles, dispatch counts and the
+fused-path roofline — both uploaded by CI as artifacts so every PR
+appends a point to the perf record.
 """
 
 import argparse
@@ -23,6 +26,7 @@ import sys
 import time
 
 BENCH_INGEST_JSON = "BENCH_ingest.json"
+BENCH_SEARCH_JSON = "BENCH_search.json"
 
 
 def run_smoke(out_path: str = BENCH_INGEST_JSON) -> dict:
@@ -111,6 +115,16 @@ def run_smoke(out_path: str = BENCH_INGEST_JSON) -> dict:
     return payload
 
 
+def run_smoke_search(out_path: str = BENCH_SEARCH_JSON) -> dict:
+    """Search smoke -> BENCH_search.json (raises when the fused path loses
+    its >=2x batched-term margin over the unfused executors)."""
+    from benchmarks import search_bench
+
+    payload = search_bench.run_smoke(out_path)
+    print(f"# wrote {out_path}", file=sys.stderr)
+    return payload
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
@@ -123,6 +137,7 @@ def main() -> None:
 
     if args.smoke:
         run_smoke()
+        run_smoke_search()
         return
 
     from benchmarks import commit_bench, ingest_bench, kernel_bench

@@ -24,13 +24,18 @@ at the top (>= 25%).
 
 from __future__ import annotations
 
+import json
 import shutil
+import sys
 import tempfile
 import time
 from typing import Dict, List
 
+import numpy as np
+
 from repro.core import SearchEngine
 from repro.core.analyzer import term_hash
+from repro.core.query import profile
 from repro.core.search import (
     BooleanQuery,
     FacetQuery,
@@ -49,6 +54,12 @@ N_REPS = 3
 BATCH = 32
 BATCH_N_DOCS = 10000
 BATCH_KINDS = ("ram", "fs-ssd", "byte-pmem")
+N_LAT_REPS = 9  # latency-percentile samples per (family, path)
+
+BENCH_SEARCH_JSON = "BENCH_search.json"
+#: CI gate: fused batched-term throughput vs the PR 1 unfused batched
+#: executor, on ram at BATCH — the fusion win the tentpole claims
+FUSED_TERM_GATE = 2.0
 
 
 def _families():
@@ -201,8 +212,10 @@ def _batched_families(batch: int = BATCH) -> Dict[str, List]:
     }
 
 
-def _build_kind(kind: str, path: str, n_docs: int) -> SearchEngine:
-    eng = SearchEngine(kind, path if kind != "ram" else None)
+def _build_kind(
+    kind: str, path: str, n_docs: int, use_pallas: bool = False
+) -> SearchEngine:
+    eng = SearchEngine(kind, path if kind != "ram" else None, use_pallas=use_pallas)
     for i, (fields, dv) in enumerate(
         synthetic_corpus(CorpusConfig(n_docs=n_docs, seed=23))
     ):
@@ -216,31 +229,54 @@ def _build_kind(kind: str, path: str, n_docs: int) -> SearchEngine:
 
 def run_batched(kinds=BATCH_KINDS, batch: int = BATCH) -> List[Dict]:
     """Batched QPS (planner/executor path) vs the per-query loop, per
-    directory kind.  Both paths serve from device-resident segments; the
-    batched one spends one dispatch per (family, segment) instead of one
-    per (query, segment) and merges top-k on device instead of in heapq."""
+    directory kind, on THREE paths:
+
+      seq    — ``search_single`` loop (one dispatch per query per segment)
+      batch  — PR 1 vmapped executors (one dispatch per family per segment)
+      fused  — fused executors (``use_pallas``): score→filter→top-k→merge in
+               one program; the term family is ONE dispatch per whole group
+
+    Latency percentiles are per-query: a batch admits one query's result no
+    earlier than the batch's, so per-query latency = batch_time / batch.
+    ``N_LAT_REPS`` repeated batch executions supply the sample distribution
+    (intra-batch per-query latency is not separately observable on device).
+    Dispatch counts come from the executor ledger (``query.profile``).
+    """
     rows = []
     for kind in kinds:
         path = tempfile.mkdtemp(prefix=f"search-batch-{kind}-")
+        fpath = tempfile.mkdtemp(prefix=f"search-fused-{kind}-")
         try:
             eng = _build_kind(kind, path, BATCH_N_DOCS)
+            feng = _build_kind(kind, fpath, BATCH_N_DOCS, use_pallas=True)
             searcher = eng.searcher
             for fam, queries in _batched_families(batch).items():
-                for q in queries:  # warm both jit caches
+                for q in queries:  # warm all three jit caches
                     searcher.search_single(q)
                 eng.search_batch(queries)
+                feng.search_batch(queries)
 
-                seq_times, batch_times = [], []
+                seq_times, batch_times, fused_times = [], [], []
                 for _ in range(N_REPS):
                     t0 = time.perf_counter()
                     for q in queries:
                         searcher.search_single(q)
                     seq_times.append(time.perf_counter() - t0)
+                for _ in range(N_LAT_REPS):
                     t0 = time.perf_counter()
                     eng.search_batch(queries)
                     batch_times.append(time.perf_counter() - t0)
+                    t0 = time.perf_counter()
+                    feng.search_batch(queries)
+                    fused_times.append(time.perf_counter() - t0)
+                with profile.capture() as d_batch:
+                    eng.search_batch(queries)
+                with profile.capture() as d_fused:
+                    feng.search_batch(queries)
                 qps_seq = batch / min(seq_times)
                 qps_batch = batch / min(batch_times)
+                qps_fused = batch / min(fused_times)
+                lat_ms = np.asarray(fused_times) / batch * 1e3
                 rows.append(
                     {
                         "kind": kind,
@@ -248,12 +284,69 @@ def run_batched(kinds=BATCH_KINDS, batch: int = BATCH) -> List[Dict]:
                         "batch": batch,
                         "qps_seq": qps_seq,
                         "qps_batch": qps_batch,
+                        "qps_fused": qps_fused,
                         "speedup": qps_batch / qps_seq,
+                        "speedup_fused": qps_fused / qps_batch,
+                        "lat_p50_ms": float(np.percentile(lat_ms, 50)),
+                        "lat_p99_ms": float(np.percentile(lat_ms, 99)),
+                        "dispatches_batch": int(sum(d_batch.values())),
+                        "dispatches_fused": int(sum(d_fused.values())),
                     }
                 )
         finally:
             shutil.rmtree(path, ignore_errors=True)
+            shutil.rmtree(fpath, ignore_errors=True)
     return rows
+
+
+def run_smoke(out_path: str = BENCH_SEARCH_JSON) -> dict:
+    """CI smoke: ram-only batched rows + fused-path roofline, written as
+    ``BENCH_search.json`` and gated (``tools/check_bench.py`` compares a
+    fresh run against the committed baseline; the hard gate here is the
+    tentpole claim itself: fused term >= ``FUSED_TERM_GATE`` x the unfused
+    batched executor)."""
+    from benchmarks.roofline_report import search_roofline
+
+    rows = run_batched(kinds=("ram",), batch=BATCH)
+    roofline = search_roofline(batch=BATCH)
+    families = {
+        r["family"]: {k: v for k, v in r.items() if k not in ("kind", "family")}
+        for r in rows
+    }
+    term = families["TermBatch"]
+    payload = {
+        "bench": "search",
+        "mode": "smoke",
+        "batch": BATCH,
+        "n_docs": BATCH_N_DOCS,
+        "families": families,
+        "fused_term_speedup_ram": term["speedup_fused"],
+        "roofline": roofline,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    lines = [
+        f"search_smoke,{fam},qps_batch={r['qps_batch']:.0f}"
+        f",qps_fused={r['qps_fused']:.0f}"
+        f",speedup_fused={r['speedup_fused']:.2f}x"
+        f",lat_p50_ms={r['lat_p50_ms']:.2f},lat_p99_ms={r['lat_p99_ms']:.2f}"
+        f",dispatches={r['dispatches_batch']}->{r['dispatches_fused']}"
+        for fam, r in families.items()
+    ]
+    lines.append(
+        "search_smoke,roofline,membw_gbps=%.1f,term_frac=%.3f"
+        % (roofline["membw_gbps"], roofline["term"]["roofline_frac"])
+    )
+    lines.append(f"search_smoke,gate,fused_term_speedup_ram="
+                 f"{payload['fused_term_speedup_ram']:.2f}x,floor={FUSED_TERM_GATE}x")
+    for line in lines:
+        print(line)
+    if payload["fused_term_speedup_ram"] < FUSED_TERM_GATE:
+        raise SystemExit(
+            f"search smoke gate FAILED: fused term speedup "
+            f"{payload['fused_term_speedup_ram']:.2f}x < {FUSED_TERM_GATE}x"
+        )
+    return payload
 
 
 def main():
@@ -275,11 +368,29 @@ def main():
             f"batch={r['batch']}"
             f",qps_seq={r['qps_seq']:.0f}"
             f",qps_batch={r['qps_batch']:.0f}"
+            f",qps_fused={r['qps_fused']:.0f}"
             f",speedup={r['speedup']:.2f}x"
+            f",speedup_fused={r['speedup_fused']:.2f}x"
+            f",lat_p50_ms={r['lat_p50_ms']:.2f}"
+            f",lat_p99_ms={r['lat_p99_ms']:.2f}"
+            f",dispatches={r['dispatches_batch']}->{r['dispatches_fused']}"
         )
     return out
 
 
 if __name__ == "__main__":
-    for line in main():
-        print(line)
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="ram-only batched+roofline smoke, writes BENCH_search.json and gates",
+    )
+    ap.add_argument("--out", default=BENCH_SEARCH_JSON, help="smoke payload path")
+    args = ap.parse_args()
+    if args.smoke:
+        run_smoke(args.out)
+    else:
+        for line in main():
+            print(line)

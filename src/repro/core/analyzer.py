@@ -10,6 +10,7 @@ plane indexes terms with ``searchsorted`` over sorted hashes).
 from __future__ import annotations
 
 import re
+from functools import lru_cache
 from typing import Dict, Iterable, List, Tuple
 
 import numpy as np
@@ -31,8 +32,13 @@ def _fnv1a(data: bytes) -> int:
     return h
 
 
+@lru_cache(maxsize=1 << 16)
 def term_hash(field: str, token: str) -> int:
-    """Stable 63-bit term id for (field, token) — fits in int64."""
+    """Stable 63-bit term id for (field, token) — fits in int64.
+
+    Memoized: FNV is pure Python and the query planner re-hashes the same
+    (field, token) pairs on every batch; the cap bounds memory against
+    open vocabularies (cold pairs just re-hash)."""
     return _fnv1a((field + "\x1f" + token).encode("utf-8")) & _MASK63
 
 

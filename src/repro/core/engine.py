@@ -63,8 +63,9 @@ class SearchEngine:
         self.use_wal = use_wal
         self.writer = IndexWriter(directory, self.analyzer, use_wal=use_wal)
         # engine-owned device cache: segment arrays stay resident across
-        # NRT reopens (only new/changed segments are uploaded)
-        self.device_cache = SegmentDeviceCache()
+        # NRT reopens (only new/changed segments are uploaded); fused
+        # engines stage the kernel-tiled layout so reopens pre-tile
+        self.device_cache = SegmentDeviceCache(tile=use_pallas)
         self.writer.merge_listeners.append(self._on_merge)
         self.manager = SearcherManager(
             self.writer, use_pallas=use_pallas, device_cache=self.device_cache
@@ -131,7 +132,7 @@ class SearchEngine:
         # post-crash device state is untrusted: start from a cold cache —
         # but the engine-level lifetime counters (merge_warmups, upload
         # totals, ...) survive recovery like every other stats ledger
-        eng.device_cache = SegmentDeviceCache()
+        eng.device_cache = SegmentDeviceCache(tile=self.use_pallas)
         eng.device_cache.stats = dataclasses.replace(self.device_cache.stats)
         eng.writer.merge_listeners.append(eng._on_merge)
         eng.manager = SearcherManager(

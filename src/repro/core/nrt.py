@@ -47,7 +47,9 @@ class SearcherManager:
         self.use_pallas = use_pallas
         # explicit None check: an empty cache is falsy (it has __len__)
         self.device_cache = (
-            device_cache if device_cache is not None else SegmentDeviceCache()
+            device_cache
+            if device_cache is not None
+            else SegmentDeviceCache(tile=use_pallas)
         )
         self._infos: Optional[SegmentInfos] = None
         self._searcher: Optional[Searcher] = None

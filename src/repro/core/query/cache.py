@@ -28,8 +28,21 @@ import dataclasses
 from typing import Dict, Iterable, Optional, Sequence
 
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.query.plan import TILE
 from repro.core.segment import Segment
+
+
+def _pad_tile(host: np.ndarray, fill) -> np.ndarray:
+    """Pad a 1-D host array to a TILE multiple (min one tile)."""
+    n = host.shape[0]
+    target = max(TILE, -(-n // TILE) * TILE)
+    if target == n:
+        return host
+    out = np.full(target, fill, dtype=host.dtype)
+    out[:n] = host
+    return out
 
 
 @dataclasses.dataclass
@@ -48,11 +61,16 @@ class CacheStats:
 
 
 class SegmentDeviceCache:
-    def __init__(self) -> None:
+    def __init__(self, tile: bool = False) -> None:
         self._store: Dict[str, Dict[str, jnp.ndarray]] = {}
         # None = unrestricted (standalone Searcher); retain() narrows it to
         # the current segment view so stale searchers can't re-pollute
         self._retained: Optional[set] = None
+        # tile=True (fused/pallas engines): staging also uploads the
+        # kernel-tiled layout (CSR postings + TILE-padded doc arrays), so
+        # NRT reopens upload pre-tiled arrays and the fused executors never
+        # re-stage postings host-side
+        self.tile = tile
         self.stats = CacheStats()
 
     def __len__(self) -> int:
@@ -72,6 +90,46 @@ class SegmentDeviceCache:
             st[key] = jnp.asarray(host)
             self.stats.array_uploads += 1
             self.stats.bytes_uploaded += host.nbytes
+        if self.tile:
+            self._add_tiled(st, seg)
+        return st
+
+    def _add_tiled(self, st: Dict[str, jnp.ndarray], seg: Segment) -> None:
+        """Upload the kernel-tiled layout for ``seg`` into ``st``.
+
+        CSR postings are padded to a TILE multiple (doc 0 / freq 0: dead
+        entries under the fused gather's length mask); doc-space arrays are
+        padded so ND_pad % TILE == 0 with dead padding docs (live=0).
+        """
+        dl_pad = _pad_tile(seg.doc_lens.astype(np.int32), 1)
+        live_pad = _pad_tile(seg.live.astype(np.int32), 0)
+        hosts = {
+            "csr.docs": _pad_tile(seg.postings_docs.astype(np.int32), 0),
+            "csr.freqs": _pad_tile(seg.postings_freqs.astype(np.int32), 0),
+            "tiled.doc_lens": dl_pad,
+            "tiled.live": live_pad,
+            # doc length and deletion bit packed into one word (doc_lens <
+            # 2^30): the fused jnp selection path pays ONE doc-side gather
+            # per postings tile instead of two
+            "tiled.dl_live": (dl_pad << 1) | live_pad,
+        }
+        for k, v in seg.doc_values.items():
+            hosts[f"tiled.dv.{k}"] = _pad_tile(np.asarray(v), 0)
+        for key, host in hosts.items():
+            st[key] = jnp.asarray(host)
+            self.stats.array_uploads += 1
+            self.stats.bytes_uploaded += host.nbytes
+
+    def ensure_tiled(
+        self,
+        seg: Segment,
+        fallback: Optional[Dict[str, Dict[str, jnp.ndarray]]] = None,
+    ) -> Dict[str, jnp.ndarray]:
+        """``get`` + lazily add the tiled layout when the cache was built
+        untiled (a fused searcher handed a plain cache)."""
+        st = self.get(seg, fallback)
+        if "csr.docs" not in st:
+            self._add_tiled(st, seg)
         return st
 
     def get(
@@ -109,6 +167,16 @@ class SegmentDeviceCache:
             self.stats.array_uploads += 1
             self.stats.bytes_uploaded += seg.live.nbytes
             self.stats.live_refreshes += 1
+            if "tiled.live" in st:  # keep the kernel-tiled bitmap in step
+                st["tiled.live"] = jnp.asarray(
+                    _pad_tile(seg.live.astype(np.int32), 0)
+                )
+                self.stats.array_uploads += 1
+                self.stats.bytes_uploaded += seg.live.nbytes * 4
+                # rebuild the packed word on device from resident buffers
+                st["tiled.dl_live"] = (
+                    (st["tiled.doc_lens"] << 1) | st["tiled.live"]
+                )
         else:
             self.stats.hits += 1
         return st

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.query import profile
 from repro.core.query.plan import (
     FamilyGroup,
     bucket_batch,
@@ -230,6 +231,25 @@ def _finalize_scored(
     return out
 
 
+@partial(jax.jit, static_argnames=("k",))
+def _concat_merge(vals_t, ids_t, hits_t, k):
+    """Whole cross-segment merge in ONE program: concat + lexsort-top-k +
+    hit totals (same expressions as ``merge_topk``; fusing them removes a
+    handful of eager dispatches per group)."""
+    vals = jnp.concatenate(vals_t, axis=1)
+    ids = jnp.concatenate(ids_t, axis=1)
+    totals = hits_t[0]
+    for h in hits_t[1:]:
+        totals = totals + h
+    kk = min(k, vals.shape[1])
+    order = jnp.lexsort((ids, -vals), axis=-1)[:, :kk]
+    return (
+        jnp.take_along_axis(vals, order, axis=-1),
+        jnp.take_along_axis(ids, order, axis=-1),
+        totals,
+    )
+
+
 def _merge_segment_candidates(
     per_seg: List[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]],
     n: int,
@@ -237,12 +257,12 @@ def _merge_segment_candidates(
 ) -> List[TopDocs]:
     if not per_seg:
         return [empty_topdocs() for _ in range(n)]
-    vals = jnp.concatenate([v for v, _, _ in per_seg], axis=1)
-    ids = jnp.concatenate([i for _, i, _ in per_seg], axis=1)
-    totals = per_seg[0][2]
-    for _, _, h in per_seg[1:]:
-        totals = totals + h
-    vals, ids = merge_topk(vals, ids, k)
+    vals, ids, totals = _concat_merge(
+        tuple(v for v, _, _ in per_seg),
+        tuple(i for _, i, _ in per_seg),
+        tuple(h for _, _, h in per_seg),
+        k=k,
+    )
     return _finalize_scored(vals, ids, totals, n)
 
 
@@ -252,6 +272,10 @@ def _merge_segment_candidates(
 
 
 def _exec_term(ctx, group: FamilyGroup, k: int) -> List[TopDocs]:
+    if ctx.use_pallas:
+        from repro.core.query import fused
+
+        return fused.exec_term_fused(ctx, group, k)
     n = len(group.queries)
     pad = bucket_batch(n) - n
     idfs = np.asarray(
@@ -265,37 +289,27 @@ def _exec_term(ctx, group: FamilyGroup, k: int) -> List[TopDocs]:
             continue
         docs, freqs = staged
         st = ctx._seg_dev(seg)
-        if ctx.use_pallas:
-            from repro.kernels import ops as kops
-
-            vals, ids, hits = kops.bm25_topk_batch(
-                jnp.asarray(docs),
-                jnp.asarray(freqs),
-                st["doc_lens"],
-                st["live"],
-                idfs_dev,
-                ctx.avgdl,
-                ctx.k1,
-                ctx.b,
-                k,
-            )
-        else:
-            vals, ids, hits = _term_topk_batch(
-                jnp.asarray(docs),
-                jnp.asarray(freqs),
-                st["doc_lens"],
-                st["live"],
-                idfs_dev,
-                ctx.avgdl,
-                ctx.k1,
-                ctx.b,
-                k,
-            )
+        vals, ids, hits = _term_topk_batch(
+            jnp.asarray(docs),
+            jnp.asarray(freqs),
+            st["doc_lens"],
+            st["live"],
+            idfs_dev,
+            ctx.avgdl,
+            ctx.k1,
+            ctx.b,
+            k,
+        )
+        profile.record("vmap.term")
         per_seg.append((vals, ids + seg.base_doc, hits))
     return _merge_segment_candidates(per_seg, n, k)
 
 
 def _exec_bool(ctx, group: FamilyGroup, k: int) -> List[TopDocs]:
+    if ctx.use_pallas:
+        from repro.core.query import fused
+
+        return fused.exec_bool_fused(ctx, group, k)
     n = len(group.queries)
     pad = bucket_batch(n) - n
     mode, n_terms = group.key[1], group.key[2]
@@ -324,11 +338,16 @@ def _exec_bool(ctx, group: FamilyGroup, k: int) -> List[TopDocs]:
             conj,
             n_terms,
         )
+        profile.record("vmap.bool")
         per_seg.append((vals, ids + seg.base_doc, hits))
     return _merge_segment_candidates(per_seg, n, k)
 
 
 def _exec_sort(ctx, group: FamilyGroup, k: int) -> List[TopDocs]:
+    if ctx.use_pallas:
+        from repro.core.query import fused
+
+        return fused.exec_sort_fused(ctx, group, k)
     n = len(group.queries)
     pad = bucket_batch(n) - n
     dv_field = group.key[1]
@@ -347,11 +366,16 @@ def _exec_sort(ctx, group: FamilyGroup, k: int) -> List[TopDocs]:
             st["live"],
             k,
         )
+        profile.record("vmap.sort")
         per_seg.append((vals, ids + seg.base_doc, hits))
     return _merge_segment_candidates(per_seg, n, k)
 
 
 def _exec_range(ctx, group: FamilyGroup, k: int) -> List[TopDocs]:
+    if ctx.use_pallas:
+        from repro.core.query import fused
+
+        return fused.exec_range_fused(ctx, group, k)
     n = len(group.queries)
     pad = bucket_batch(n) - n
     dv_field = group.key[1]
@@ -371,11 +395,16 @@ def _exec_range(ctx, group: FamilyGroup, k: int) -> List[TopDocs]:
             his,
             k,
         )
+        profile.record("vmap.range")
         per_seg.append((vals, ids + seg.base_doc, hits))
     return _merge_segment_candidates(per_seg, n, k)
 
 
 def _exec_facet(ctx, group: FamilyGroup, k: int) -> List[TopDocs]:
+    if ctx.use_pallas:
+        from repro.core.query import fused
+
+        return fused.exec_facet_fused(ctx, group, k)
     n = len(group.queries)
     dv_field, n_bins, match_all = group.key[1], group.key[2], group.key[3]
     counts = np.zeros((n, n_bins), dtype=np.float64)
@@ -389,6 +418,7 @@ def _exec_facet(ctx, group: FamilyGroup, k: int) -> List[TopDocs]:
                 _facet_counts(st["live"], dv_bins, n_bins), dtype=np.float64
             )
             t = int(np.asarray(st["live"].sum()))
+            profile.record("vmap.facet")
             counts += c[None, :]
             totals += t
         else:
@@ -406,6 +436,7 @@ def _exec_facet(ctx, group: FamilyGroup, k: int) -> List[TopDocs]:
                 dv_bins,
                 n_bins,
             )
+            profile.record("vmap.facet")
             counts += np.asarray(c, dtype=np.float64)[:n]
             totals += np.asarray(t, dtype=np.int64)[:n]
     out = []
@@ -423,9 +454,144 @@ def _exec_facet(ctx, group: FamilyGroup, k: int) -> List[TopDocs]:
 
 
 def _exec_phrase(ctx, group: FamilyGroup, k: int) -> List[TopDocs]:
-    """Phrase verification is a host-side positions merge (Lucene's exact
-    phrase scorer is too); the batch executor is the sequential scorer."""
-    return [ctx.search_single(q, k) for q in group.queries]
+    """Batched exact-phrase scorer: one vectorized pass per segment.
+
+    Phrase verification is inherently a host-side positions merge (Lucene's
+    exact phrase scorer is too), but it does not have to be a per-query
+    loop over ``search_single``.  All queries in the group share each
+    segment pass: candidate positions are encoded as
+    ``global_candidate_rank * M + position`` (candidate ranks are disjoint
+    across queries, so one key space serves the whole batch) and adjacency
+    is verified with one ``np.isin`` chain per token step across every
+    query at once.  Queries of different lengths finalize as their chains
+    complete.  Scoring is vectorized float64 BM25 — elementwise IEEE
+    doubles, bit-identical to ``search_single``'s Python-scalar math.
+    """
+    from repro.core.analyzer import term_hash
+    from repro.core.query.types import PhraseQuery  # noqa: F401 (doc)
+
+    n = len(group.queries)
+    qs = group.queries
+    hashes_q = [[term_hash(q.field, t) for t in q.tokens] for q in qs]
+    idf_q = np.asarray(
+        [
+            sum(ctx.idf(TermQuery(q.field, t)) for t in q.tokens)
+            for q in qs
+        ],
+        dtype=np.float64,
+    )
+    n_tok = np.asarray([len(h) for h in hashes_q], dtype=np.int64)
+    max_ntok = int(n_tok.max())
+    k1, b, avgdl = float(ctx.k1), float(ctx.b), float(ctx.avgdl)
+    per_seg_q: List[List[Tuple[np.ndarray, np.ndarray]]] = [
+        [] for _ in range(n)
+    ]
+    totals = np.zeros(n, dtype=np.int64)
+    for seg in ctx.segments:
+        # conjunctive doc-id intersection per query (cheap int set ops);
+        # the expensive positions traffic below is shared across the batch
+        cands: List[np.ndarray] = []
+        for hs in hashes_q:
+            psets = []
+            for th in hs:
+                d, _ = seg.postings(th)
+                if len(d) == 0:
+                    psets = None
+                    break
+                psets.append(d)
+            if psets is None:
+                cands.append(np.zeros(0, np.int64))
+                continue
+            c = psets[0]
+            for d in psets[1:]:
+                c = np.intersect1d(c, d, assume_unique=True)
+            c = c[seg.live[c]]
+            cands.append(c.astype(np.int64))
+        lens = np.asarray([len(c) for c in cands], dtype=np.int64)
+        if lens.sum() == 0:
+            continue
+        all_cand = np.concatenate(cands)
+        q_of = np.repeat(np.arange(n), lens)
+        offs = np.zeros(n + 1, np.int64)
+        np.cumsum(lens, out=offs[1:])
+        # key stride: position + token step never reaches M, so keys from
+        # different candidates (and hence different queries) cannot collide
+        M = int(seg.doc_lens.max()) + max_ntok + 1
+
+        def step_keys(t: int) -> np.ndarray:
+            """grank*M+pos keys of token ``t`` for every still-active query
+            (one concatenated array; one positions gather per step)."""
+            parts = []
+            for qi in range(n):
+                if n_tok[qi] <= t or lens[qi] == 0:
+                    continue
+                slot = seg.term_slot(hashes_q[qi][t])
+                s_ = int(seg.postings_offsets[slot])
+                e_ = int(seg.postings_offsets[slot + 1])
+                rows = s_ + np.searchsorted(
+                    seg.postings_docs[s_:e_], cands[qi]
+                )
+                starts = seg.pos_offsets[rows].astype(np.int64)
+                counts = (
+                    seg.pos_offsets[rows + 1] - seg.pos_offsets[rows]
+                ).astype(np.int64)
+                total = int(counts.sum())
+                # vectorized ragged gather (replaces the per-row concat)
+                cum = np.cumsum(counts) - counts
+                idx = np.repeat(starts - cum, counts) + np.arange(total)
+                flat = seg.positions[idx].astype(np.int64)
+                grank = offs[qi] + np.repeat(
+                    np.arange(lens[qi], dtype=np.int64), counts
+                )
+                parts.append(grank * M + flat)
+            if parts:
+                return np.concatenate(parts)
+            return np.zeros(0, np.int64)
+
+        match = step_keys(0)
+        phrase_tf = np.zeros(len(all_cand), np.int64)
+        for t in range(1, max_ntok):
+            g = match // M
+            fin = n_tok[q_of[g]] <= t  # these chains are complete
+            if fin.any():
+                np.add.at(phrase_tf, g[fin], 1)
+                match = match[~fin]
+            if len(match) == 0:
+                break
+            match = match[np.isin(match + t, step_keys(t))]
+        if len(match):
+            np.add.at(phrase_tf, match // M, 1)
+        hit = phrase_tf > 0
+        if not hit.any():
+            continue
+        g_hit = np.nonzero(hit)[0]
+        docs_hit = all_cand[g_hit]
+        q_hit = q_of[g_hit]
+        tf = phrase_tf[g_hit].astype(np.float64)
+        dl = seg.doc_lens[docs_hit].astype(np.float64)
+        idf = idf_q[q_hit]
+        s = (
+            idf
+            * (tf * (k1 + 1))
+            / (tf + k1 * (1 - b + b * dl / avgdl))
+        )
+        base = seg.base_doc
+        for qi in range(n):
+            mask = q_hit == qi
+            if not mask.any():
+                continue
+            dq = docs_hit[mask] + base
+            sq = s[mask]
+            totals[qi] += int(mask.sum())
+            order = np.lexsort((dq, -sq))[:k]  # score desc, doc asc
+            per_seg_q[qi].append(
+                (sq[order].astype(np.float32), dq[order].astype(np.int64))
+            )
+    out = []
+    for qi in range(n):
+        ids, scores = ctx._merge(per_seg_q[qi], k)
+        out.append(TopDocs(int(totals[qi]), ids, scores))
+    return out
 
 
 _EXECUTORS = {

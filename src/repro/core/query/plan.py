@@ -45,6 +45,12 @@ from repro.core.query.types import (
 from repro.core.segment import Segment
 
 
+#: Postings/doc entries per fused-kernel grid step.  Must equal
+#: ``repro.kernels.fused_exec.BLOCK`` (asserted in ``repro.core.query.fused``
+#: at import time); plan.py stays jax-free so it re-declares the value.
+TILE = 1024
+
+
 def bucket(n: int, floor: int = 8) -> int:
     """Smallest power of two >= max(n, floor)."""
     b = floor
@@ -56,6 +62,25 @@ def bucket(n: int, floor: int = 8) -> int:
 def bucket_batch(n: int) -> int:
     """Power-of-two batch padding (floor 1: a batch of one stays a one)."""
     return bucket(n, floor=1)
+
+
+def pad_width(longest: int, tile: bool) -> int:
+    """Shared padded row width for a fused group.
+
+    Kernel path (``tile``): a TILE multiple (the Pallas grid steps in TILE
+    blocks; powers of two >= TILE are TILE multiples).  jnp path: powers of
+    two up to TILE, then TILE/2 multiples — power-of-two bucketing wastes up
+    to 2x compute on long postings rows, and the coarser executable-reuse
+    argument stops mattering once rows span multiple tiles.  Width only
+    changes how much inert padding is scored, never a result.
+    """
+    p = bucket(longest)
+    if tile:
+        return max(p, TILE)
+    if p > TILE:
+        half = TILE // 2
+        return -(-longest // half) * half
+    return p
 
 
 def family_key(q: Query) -> Tuple:
@@ -129,6 +154,91 @@ def stage_term_postings(
         docs[i, : len(d)] = d
         freqs[i, : len(f)] = f
     return docs, freqs
+
+
+# ---------------------------------------------------------------------------
+# CSR tile metadata (fused executors): instead of materializing padded
+# (B, P) postings host-side and re-uploading them per batch, the fused path
+# keeps the segment CSR device-resident (see ``query.cache``) and ships only
+# this tiny per-row metadata — the kernels gather their tiles on device.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CsrTileMeta:
+    """Per-row postings coordinates into a segment's device-resident CSR.
+
+    ``starts``/``lengths`` are (R,) for term-shaped groups and (R, T) for
+    boolean groups; absent terms are (0, 0) rows.  ``p`` is the shared
+    padded row width: the power-of-two bucket of the longest row, raised to
+    a ``TILE`` multiple when the kernel path will consume it (powers of two
+    >= TILE are TILE multiples, so bucketing is preserved either way).
+    """
+
+    starts: np.ndarray
+    lengths: np.ndarray
+    p: int
+
+
+def _row_coords(seg: Segment, terms: Sequence[TermQuery]):
+    """Vectorized ``term_slot`` for a whole group: ONE searchsorted over the
+    segment's sorted term table instead of a Python loop of scalar lookups
+    (the loop showed up as a per-batch hotspot in the fused executors)."""
+    ths = np.fromiter(
+        (term_hash(t.field, t.token) for t in terms),
+        dtype=np.int64,
+        count=len(terms),
+    )
+    if seg.n_terms == 0 or len(terms) == 0:
+        z = np.zeros(len(terms), dtype=np.int32)
+        return z, z.copy()
+    slots = np.searchsorted(seg.term_ids, ths)
+    clipped = np.minimum(slots, seg.n_terms - 1)
+    present = seg.term_ids[clipped] == ths
+    starts = np.where(present, seg.postings_offsets[clipped], 0)
+    ends = np.where(present, seg.postings_offsets[clipped + 1], 0)
+    return starts.astype(np.int32), (ends - starts).astype(np.int32)
+
+
+def stage_term_meta(
+    seg: Segment,
+    terms: Sequence[TermQuery],
+    pad_rows: int = 0,
+    tile: bool = False,
+) -> Optional[CsrTileMeta]:
+    """CSR coordinates for one term per row (+ inert padding rows), or None
+    when no row has postings in this segment — the same skip condition as
+    ``stage_term_postings``."""
+    starts, lengths = _row_coords(seg, terms)
+    longest = int(lengths.max()) if len(lengths) else 0
+    if longest == 0:
+        return None
+    p = pad_width(longest, tile)
+    if pad_rows:
+        starts = np.concatenate([starts, np.zeros(pad_rows, np.int32)])
+        lengths = np.concatenate([lengths, np.zeros(pad_rows, np.int32)])
+    return CsrTileMeta(starts, lengths, p)
+
+
+def stage_bool_meta(
+    seg: Segment,
+    queries: Sequence[BooleanQuery],
+    pad_rows: int = 0,
+    tile: bool = False,
+) -> Optional[CsrTileMeta]:
+    """(R, T) CSR coordinates for boolean groups, or None when nothing
+    matches (same skip condition as ``stage_bool_postings``)."""
+    n_terms = len(queries[0].terms)
+    rows = len(queries) + pad_rows
+    starts = np.zeros((rows, n_terms), dtype=np.int32)
+    lengths = np.zeros((rows, n_terms), dtype=np.int32)
+    for i, q in enumerate(queries):
+        s, l = _row_coords(seg, q.terms)
+        starts[i], lengths[i] = s, l
+    longest = int(lengths.max()) if lengths.size else 0
+    if longest == 0:
+        return None
+    return CsrTileMeta(starts, lengths, pad_width(longest, tile))
 
 
 def stage_bool_postings(

@@ -1,0 +1,50 @@
+"""Executor dispatch ledger.
+
+``search_bench`` needs to show that fusion removes dispatches (host→device
+round-trips between plan stages), not just that throughput moved.  JAX's
+profiler hooks are version-fragile, so the executors self-report instead:
+every per-(group, segment) device dispatch calls ``record(tag)``, and a
+bench run wraps its timed region in ``capture()`` to read the delta.
+
+Tags are ``<path>.<family>`` — e.g. ``vmap.term`` (PR 1 unfused batched
+executor, one staged upload + dispatch per segment) vs ``fused.term``
+(single fused dispatch per segment, no host staging).  The ledger counts
+executor-issued dispatches, which is the quantity fusion changes; XLA may
+still split a program internally, but it never adds host round-trips.
+"""
+
+from __future__ import annotations
+
+import collections
+import contextlib
+from typing import Dict, Iterator
+
+_counts: "collections.Counter[str]" = collections.Counter()
+
+
+def record(tag: str) -> None:
+    """Count one executor-issued device dispatch."""
+    _counts[tag] += 1
+
+
+def snapshot() -> Dict[str, int]:
+    return dict(_counts)
+
+
+def reset() -> None:
+    _counts.clear()
+
+
+@contextlib.contextmanager
+def capture() -> Iterator[Dict[str, int]]:
+    """Yield a dict that is filled with the dispatch-count delta of the
+    wrapped region (previous counts are restored on exit)."""
+    before = dict(_counts)
+    delta: Dict[str, int] = {}
+    try:
+        yield delta
+    finally:
+        for tag, n in _counts.items():
+            d = n - before.get(tag, 0)
+            if d:
+                delta[tag] = d

@@ -115,12 +115,18 @@ class Searcher:
         tokens = sum(s.total_tokens for s in self.segments)
         self.avgdl = float(tokens) / max(self.total_docs, 1)
         # explicit None check: an empty cache is falsy (it has __len__)
+        # (fused searchers get a tiled cache so staging pre-tiles the CSR)
         self.device_cache = (
-            device_cache if device_cache is not None else SegmentDeviceCache()
+            device_cache
+            if device_cache is not None
+            else SegmentDeviceCache(tile=use_pallas)
         )
         # memo for segments evicted from the shared cache while this
         # point-in-time view still references them (post-merge stale reads)
         self._transient_dev: Dict[str, Dict[str, jnp.ndarray]] = {}
+        # df memo: a Searcher is a point-in-time view over immutable
+        # segments, so document frequencies never change under it
+        self._df_cache: Dict[int, int] = {}
 
     # -- device residency ---------------------------------------------------
     def _seg_dev(self, seg: Segment) -> Dict[str, jnp.ndarray]:
@@ -129,11 +135,14 @@ class Searcher:
     # -- stats ----------------------------------------------------------------
     def doc_freq(self, q: TermQuery) -> int:
         th = term_hash(q.field, q.token)
-        df = 0
-        for seg in self.segments:
-            i = seg.term_slot(th)
-            if i >= 0:
-                df += int(seg.term_df[i])
+        df = self._df_cache.get(th)
+        if df is None:
+            df = 0
+            for seg in self.segments:
+                i = seg.term_slot(th)
+                if i >= 0:
+                    df += int(seg.term_df[i])
+            self._df_cache[th] = df
         return df
 
     def idf(self, q: TermQuery) -> float:

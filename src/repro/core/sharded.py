@@ -521,7 +521,7 @@ class ShardedSearcherManager:
     ) -> None:
         self.writer = writer
         caches = device_caches or [
-            SegmentDeviceCache() for _ in writer.writers
+            SegmentDeviceCache(tile=use_pallas) for _ in writer.writers
         ]
         self.device_caches = caches
         self.managers = [
@@ -605,7 +605,9 @@ class ShardedEngine:
             self.shards, router=router, analyzer=analyzer, parallel=parallel,
             use_wal=use_wal,
         )
-        self.device_caches = [SegmentDeviceCache() for _ in self.writer.writers]
+        self.device_caches = [
+            SegmentDeviceCache(tile=use_pallas) for _ in self.writer.writers
+        ]
         for w, cache in zip(self.writer.writers, self.device_caches):
             # per-shard merge warmup (the SearchEngine._on_merge contract,
             # one cache per shard so same-named segments never collide)

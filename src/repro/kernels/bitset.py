@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
+
 BLOCK_ROWS = 8
 BLOCK_COLS = 128
 BLOCK = BLOCK_ROWS * BLOCK_COLS  # uint32 words per grid step
@@ -38,12 +40,19 @@ def _bitset_kernel(bits_ref, out_ref, cnt_ref, *, n_terms: int, conjunctive: boo
     cnt_ref[...] = jnp.where(col == 0, total, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
-def bitset_combine_blocks(bitmaps, mode="and", interpret=True):
+def bitset_combine_blocks(bitmaps, mode="and", interpret=None):
     """bitmaps: (T, W) uint32 with W % 1024 == 0.
 
-    Returns (combined (W,), per-block counts (NB,)).
+    Returns (combined (W,), per-block counts (NB,)).  ``interpret=None``
+    auto-detects the execution mode (``repro.kernels.runtime``).
     """
+    return _bitset_combine_blocks(
+        bitmaps, mode=mode, interpret=resolve_interpret(interpret)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+def _bitset_combine_blocks(bitmaps, mode, interpret):
     t, w = bitmaps.shape
     assert w % BLOCK == 0, w
     nb = w // BLOCK

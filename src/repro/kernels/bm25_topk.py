@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
+
 BLOCK_ROWS = 8
 BLOCK_COLS = 128
 BLOCK = BLOCK_ROWS * BLOCK_COLS
@@ -73,10 +75,20 @@ def _bm25_topk_kernel(params_ref, freqs_ref, dl_ref, valid_ref,
     idx_ref[...] = jnp.where(idxs >= 0, idxs + block_start, -1)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "interpret"))
-def bm25_topk_blocks(freqs, dl, valid, idf, avgdl, k1, b, k=10, interpret=True):
+def bm25_topk_blocks(freqs, dl, valid, idf, avgdl, k1, b, k=10, interpret=None):
     """freqs/dl/valid: (P,) with P % 1024 == 0.  Returns per-block winners
-    ((NB, 128) vals, (NB, 128) idx); entries past k are -inf / -1."""
+    ((NB, 128) vals, (NB, 128) idx); entries past k are -inf / -1.
+
+    ``interpret=None`` auto-detects: compiled on TPU/GPU, interpreted where
+    no Pallas backend exists (see ``repro.kernels.runtime``)."""
+    return _bm25_topk_blocks(
+        freqs, dl, valid, idf, avgdl, k1, b,
+        k=k, interpret=resolve_interpret(interpret),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def _bm25_topk_blocks(freqs, dl, valid, idf, avgdl, k1, b, k, interpret):
     assert freqs.shape[0] % BLOCK == 0, freqs.shape
     nb = freqs.shape[0] // BLOCK
     params = jnp.array([[idf, avgdl, k1, b]], dtype=jnp.float32)

@@ -1,9 +1,11 @@
 """Public jit'd wrappers around the Pallas kernels.
 
-Each wrapper (a) pads/stages inputs to kernel-friendly tile shapes, (b) picks
-``interpret=True`` automatically off-TPU so the same call sites run on CPU
-(tests/benches) and compile to Mosaic on TPU, and (c) performs the cheap XLA
-epilogues (hierarchical top-k merge, count reduction).
+Each wrapper (a) pads/stages inputs to kernel-friendly tile shapes, (b)
+resolves the execution mode via ``repro.kernels.runtime`` (compiled where a
+Pallas backend exists, interpreted otherwise) so the same call sites run on
+CPU (tests/benches) and compile to Mosaic/Triton on TPU/GPU, and (c)
+performs the cheap XLA epilogues (hierarchical top-k merge, count
+reduction).
 """
 
 from __future__ import annotations
@@ -16,10 +18,7 @@ import jax.numpy as jnp
 from repro.kernels import bitset as _bitset
 from repro.kernels import bm25_topk as _bm25
 from repro.kernels import decode_attn as _decode
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels.runtime import resolve_interpret
 
 
 def _pad_to(x, multiple, value=0):
@@ -62,7 +61,6 @@ def bm25_topk(docs, freqs, doc_lens, live, idf, avgdl, k1, b, k=10):
         jnp.float32(k1),
         jnp.float32(b),
         k=kk,
-        interpret=not _on_tpu(),
     )
     vals, ids = _bm25_epilogue(blk_vals, blk_idx, docs, kk)
     return vals, ids, valid.sum()
@@ -92,9 +90,7 @@ def bitset_combine(bitmaps, mode="and"):
             bitmaps = jnp.concatenate([bitmaps, fill], axis=1)
         else:
             bitmaps = jnp.concatenate([bitmaps, fill], axis=1)
-    combined, counts = _bitset.bitset_combine_blocks(
-        bitmaps, mode=mode, interpret=not _on_tpu()
-    )
+    combined, counts = _bitset.bitset_combine_blocks(bitmaps, mode=mode)
     return combined[:w], counts.sum()
 
 
@@ -127,7 +123,7 @@ def decode_attention(q, k, v, kv_len=None, s_block=None):
         vp,
         kv_len=kv_len,
         s_block=s_block,
-        interpret=not _on_tpu(),
+        interpret=resolve_interpret(None),
         scale=float(1.0 / (d ** 0.5)),  # true scale, not the padded one
     )
     return out[:, :, :g, :dv]

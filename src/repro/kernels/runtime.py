@@ -1,0 +1,47 @@
+"""Pallas execution-mode detection: compiled where a backend exists.
+
+The kernels in this package target TPU (Mosaic); GPU lowers via Triton.  On
+CPU there is no compiled Pallas backend, so the same kernel bodies execute
+under the Pallas interpreter (bit-identical semantics, jittable, but paying
+a grid-loop emulation tax).  Every kernel entry point used to hard-code
+``interpret=True``; the default is now *auto-detected* here so a TPU/GPU
+host compiles to a real kernel with no call-site changes.
+
+Overrides (highest wins):
+
+  REPRO_PALLAS_INTERPRET=1   force interpret everywhere (debugging)
+  REPRO_PALLAS_INTERPRET=0   force compiled mode even where detection says
+                             no backend exists (CI probes, new backends)
+
+``resolve_interpret(None)`` is the contract every kernel wrapper follows:
+an explicit ``interpret=`` argument is honored verbatim, ``None`` means
+"auto".
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+# backends with a compiled Pallas lowering (mosaic / triton)
+_COMPILED_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+
+def has_compiled_backend() -> bool:
+    """True when the default JAX backend can compile Pallas kernels."""
+    return jax.default_backend() in _COMPILED_BACKENDS
+
+
+def auto_interpret() -> bool:
+    """Interpret only where no compiled Pallas backend exists."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None and env != "":
+        return env not in ("0", "false", "no")
+    return not has_compiled_backend()
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """``None`` -> auto-detect; an explicit flag passes through."""
+    return auto_interpret() if interpret is None else bool(interpret)

@@ -1,0 +1,202 @@
+"""Fused device-side query execution: bit-parity with the oracles.
+
+The fused executors (``core/query/fused.py`` + ``kernels/fused_exec.py``)
+must return bit-identical ``TopDocs`` to both the sequential oracle
+(``search_single``) and the PR 1 vmapped executors (``search_batch`` with
+``use_pallas=False``) for all six query families, on every directory kind,
+sharded and unsharded — including batch padding rows, deleted docs, and a
+real match of segment-local doc 0 (the PR 1 scatter-bug regression case).
+
+Both fused backends are pinned: the jnp selection path (CPU default) and
+the Pallas kernels (forced via REPRO_FUSED_KERNEL=1, interpret mode on
+hosts without a compiled backend).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import SearchEngine
+from repro.core.query import fused
+from repro.core.search import (
+    BooleanQuery,
+    FacetQuery,
+    PhraseQuery,
+    RangeQuery,
+    SortQuery,
+    TermQuery,
+)
+from repro.core.sharded import ShardedEngine
+from repro.data.corpus import CorpusConfig, synthetic_corpus, _word
+
+N_DOCS = 300
+KINDS = ["ram", "fs-ssd", "byte-pmem"]
+
+
+def _build(kind, path, use_pallas, n_shards=0):
+    """Engine over several segments with one term deleted (live bitmap)."""
+    p = str(path) if path else None
+    if n_shards:
+        eng = ShardedEngine(
+            kind, path=p, n_shards=n_shards, use_pallas=use_pallas,
+            parallel=False,
+        )
+    else:
+        eng = SearchEngine(kind, path=p, use_pallas=use_pallas)
+    for i, (fields, dv) in enumerate(
+        synthetic_corpus(CorpusConfig(n_docs=N_DOCS, vocab=400, seed=7))
+    ):
+        eng.add(fields, dv)
+        if (i + 1) % 80 == 0:
+            eng.flush()
+    eng.delete("body", _word(110))
+    eng.reopen()
+    return eng
+
+
+def _mixed_batch():
+    """All six families; group sizes are non-powers-of-two so every fused
+    dispatch carries inert padding rows."""
+    highs = [_word(i) for i in (1, 2, 3)]
+    meds = [_word(i) for i in (20, 40, 60)]
+    return (
+        [TermQuery("body", t) for t in highs + meds[:2]]  # 5 -> pad to 8
+        + [
+            BooleanQuery((TermQuery("body", a), TermQuery("body", b)), m)
+            for m in ("and", "or")
+            for a, b in [(highs[0], highs[1]), (highs[2], meds[0])]
+        ]
+        + [
+            PhraseQuery("body", (highs[0], highs[1])),
+            PhraseQuery("body", (highs[0], highs[1], highs[2])),  # 3-token
+            PhraseQuery("body", (highs[0], "zzznope")),  # absent token
+        ]
+        + [SortQuery(TermQuery("body", t), "timestamp") for t in highs]
+        + [RangeQuery("month", 2, 9), RangeQuery("month", 0, 5),
+           RangeQuery("month", 11, 3)]  # empty window
+        + [
+            FacetQuery(None, "month", 12),
+            FacetQuery(TermQuery("body", highs[0]), "month", 12),
+            FacetQuery(TermQuery("body", "zzznope"), "month", 12),
+        ]
+    )
+
+
+def _assert_identical(a, b, ctx=""):
+    assert a.total_hits == b.total_hits, ctx
+    np.testing.assert_array_equal(a.doc_ids, b.doc_ids, err_msg=ctx)
+    np.testing.assert_array_equal(a.scores, b.scores, err_msg=ctx)
+    assert (a.facets is None) == (b.facets is None), ctx
+    if a.facets is not None:
+        np.testing.assert_array_equal(a.facets, b.facets, err_msg=ctx)
+
+
+def _check_against_oracle(fused_eng, ref_eng, queries, k=10):
+    got = fused_eng.search_batch(queries, k=k)
+    vmapped = ref_eng.search_batch(queries, k=k)
+    for q, g, v in zip(queries, got, vmapped):
+        _assert_identical(g, v, ctx=f"vs vmapped: {q!r}")
+    if hasattr(ref_eng, "searcher") and hasattr(
+        ref_eng.searcher, "search_single"
+    ):
+        s = ref_eng.searcher
+        for q, g in zip(queries, got):
+            _assert_identical(g, s.search_single(q, k=k), ctx=f"vs single: {q!r}")
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_fused_jnp_parity_all_families(kind, tmp_path, monkeypatch):
+    monkeypatch.delenv("REPRO_FUSED_KERNEL", raising=False)
+    assert not fused.kernel_enabled(10) or fused.has_compiled_backend()
+    ref = _build(kind, tmp_path / "ref" if kind != "ram" else None, False)
+    fe = _build(kind, tmp_path / "fe" if kind != "ram" else None, True)
+    _check_against_oracle(fe, ref, _mixed_batch())
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_fused_kernel_parity_all_families(kind, tmp_path, monkeypatch):
+    """Force the Pallas kernel path (interpret mode on CPU) and pin it to
+    the same oracle results."""
+    monkeypatch.setenv("REPRO_FUSED_KERNEL", "1")
+    assert fused.kernel_enabled(10)
+    ref = _build(kind, tmp_path / "ref" if kind != "ram" else None, False)
+    fe = _build(kind, tmp_path / "fe" if kind != "ram" else None, True)
+    _check_against_oracle(fe, ref, _mixed_batch())
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_fused_sharded_parity(kind, tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_FUSED_KERNEL", "1")
+    ref = _build(
+        kind, tmp_path / "ref" if kind != "ram" else None, False, n_shards=2
+    )
+    fe = _build(
+        kind, tmp_path / "fe" if kind != "ram" else None, True, n_shards=2
+    )
+    got = fe.search_batch(_mixed_batch(), k=10)
+    want = ref.search_batch(_mixed_batch(), k=10)
+    for q, g, w in zip(_mixed_batch(), got, want):
+        _assert_identical(g, w, ctx=f"sharded: {q!r}")
+
+
+def test_fused_k_beyond_kernel_width(monkeypatch):
+    """k > 128 exceeds the kernels' per-block output lane; the fused path
+    must fall back to jnp selection inside the same fused program."""
+    monkeypatch.setenv("REPRO_FUSED_KERNEL", "1")
+    assert not fused.kernel_enabled(N_DOCS)
+    ref = _build("ram", None, False)
+    fe = _build("ram", None, True)
+    queries = [TermQuery("body", _word(i)) for i in (1, 2, 3, 999983)]
+    got = fe.search_batch(queries, k=N_DOCS)
+    s = ref.searcher
+    for q, g in zip(queries, got):
+        _assert_identical(g, s.search_single(q, k=N_DOCS), ctx=repr(q))
+
+
+def test_fused_deletes_refresh_tiled_bitmap(monkeypatch):
+    """Deletes after the tiled arrays are resident must refresh the
+    kernel-tiled live bitmap too, not just the untiled one."""
+    monkeypatch.setenv("REPRO_FUSED_KERNEL", "1")
+    ref = _build("ram", None, False)
+    fe = _build("ram", None, True)
+    q = TermQuery("body", _word(1))
+    fe.search(q, k=10)  # stage tiled arrays
+    for eng in (ref, fe):
+        eng.delete("body", _word(2))
+        eng.reopen()
+    _check_against_oracle(fe, ref, [q, TermQuery("body", _word(2))])
+    assert fe.device_cache.stats.live_refreshes >= 1
+
+
+def test_fused_doc_zero_regression(monkeypatch):
+    """Padding rows alias segment-local doc 0; a real match of doc 0 must
+    survive the fused scatter + kernel selection (PR 1 regression case)."""
+    monkeypatch.setenv("REPRO_FUSED_KERNEL", "1")
+    eng = SearchEngine("ram", use_pallas=True)
+    texts = ["target alpha", "filler beta", "target gamma", "filler d",
+             "target e"]
+    for i, text in enumerate(texts):
+        eng.add({"body": text}, {"month": i % 3, "ts": i})
+    eng.reopen()
+    td = eng.search(SortQuery(TermQuery("body", "target"), "ts"), k=10)
+    assert td.total_hits == 3
+    assert sorted(td.doc_ids.tolist()) == [0, 2, 4]
+    fd = eng.search(FacetQuery(TermQuery("body", "target"), "month", 3))
+    assert fd.total_hits == 3
+    np.testing.assert_array_equal(fd.facets, [1.0, 1.0, 1.0])
+
+
+def test_phrase_batch_matches_sequential():
+    """The batched phrase executor (one vectorized pass per segment) is
+    bit-identical to the per-query sequential scorer, across mixed phrase
+    lengths in one group."""
+    eng = _build("ram", None, False)
+    queries = [
+        PhraseQuery("body", (_word(1), _word(2))),
+        PhraseQuery("body", (_word(2), _word(1))),
+        PhraseQuery("body", (_word(1), _word(2), _word(3))),
+        PhraseQuery("body", (_word(1), "zzznope")),
+    ]
+    batch = eng.search_batch(queries, k=10)
+    s = eng.searcher
+    for q, td in zip(queries, batch):
+        _assert_identical(td, s.search_single(q, k=10), ctx=repr(q))

@@ -14,17 +14,26 @@ perf wins the trajectory records:
   * ``wal.commit_speedup``         — WAL vs non-WAL byte-path commit
   * ``wal.barriers_per_batch``     — one barrier per acked batch
 
+The search-path trajectory is gated the same way against
+``BENCH_search.json`` (written by ``search_bench.run_smoke``):
+
+  * ``fused_term_speedup_ram``        — fused vs unfused batched term QPS
+  * ``families.*.lat_p50_ms``         — fused per-query latency, per family
+  * ``roofline.term.roofline_frac``   — achieved fraction of measured membw
+
 Ratio rows ("higher is better") regress when fresh < 0.75 * baseline;
 latency rows ("lower is better") when fresh > 1.25 * baseline.  A key
 missing from the *baseline* is skipped (bootstrap: the first PR that adds
 a row commits its own baseline); a key missing from the *fresh* run fails.
 
-CI wiring (ci.yml): the committed file is copied aside BEFORE the smoke
-steps overwrite it, then::
+CI wiring (ci.yml): the committed files are copied aside BEFORE the smoke
+steps overwrite them, then::
 
-    python tools/check_bench.py --baseline /tmp/bench_baseline.json
+    python tools/check_bench.py --baseline /tmp/bench_baseline.json \\
+        --baseline-search /tmp/bench_search_baseline.json
 
-Run locally the same way; ``--fresh`` defaults to ``BENCH_ingest.json``.
+Run locally the same way; ``--fresh`` / ``--fresh-search`` default to the
+repo's ``BENCH_ingest.json`` / ``BENCH_search.json``.
 """
 
 from __future__ import annotations
@@ -53,6 +62,19 @@ GATES = [
     ("wal.barriers_per_batch", "lower"),
 ]
 
+# BENCH_search.json gates: the fusion win itself (hard-floored at 2.0x
+# inside run_smoke regardless of baseline drift), the per-family fused
+# per-query latencies, and the term family's achieved roofline fraction.
+SEARCH_GATES = [
+    ("fused_term_speedup_ram", "higher"),
+    ("families.TermBatch.lat_p50_ms", "lower"),
+    ("families.AndBatch.lat_p50_ms", "lower"),
+    ("families.SortBatch.lat_p50_ms", "lower"),
+    ("families.RangeBatch.lat_p50_ms", "lower"),
+    ("families.FacetBatch.lat_p50_ms", "lower"),
+    ("roofline.term.roofline_frac", "higher"),
+]
+
 
 def lookup(payload: dict, dotted: str) -> Optional[float]:
     node = payload
@@ -63,9 +85,9 @@ def lookup(payload: dict, dotted: str) -> Optional[float]:
     return float(node)  # type: ignore[arg-type]
 
 
-def check(baseline: dict, fresh: dict) -> Tuple[list, list]:
+def check(baseline: dict, fresh: dict, gates=GATES) -> Tuple[list, list]:
     failures, notes = [], []
-    for key, direction in GATES:
+    for key, direction in gates:
         base = lookup(baseline, key)
         new = lookup(fresh, key)
         if new is None:
@@ -87,48 +109,68 @@ def check(baseline: dict, fresh: dict) -> Tuple[list, list]:
     return failures, notes
 
 
+def _compare(label: str, baseline_path: str, fresh_path: str, gates) -> list:
+    """Run one baseline/fresh comparison; returns the failure list (a
+    missing fresh file is itself a failure, a missing baseline is a
+    bootstrap skip)."""
+    if not os.path.exists(fresh_path):
+        return [f"{label}: fresh file {fresh_path} missing"]
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    if not os.path.exists(baseline_path):
+        print(
+            f"check_bench[{label}]: baseline {baseline_path} missing — "
+            f"bootstrap run, nothing to gate against",
+        )
+        return []
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    if os.path.samefile(baseline_path, fresh_path):
+        print(
+            f"check_bench[{label}]: baseline and fresh are the same file — "
+            "comparing a measurement with itself proves nothing; pass the "
+            "pre-smoke copy as the baseline",
+            file=sys.stderr,
+        )
+    failures, notes = check(baseline, fresh, gates)
+    for n in notes:
+        print(f"  [{label}] {n}")
+    return [f"{label}: {f_}" for f_ in failures]
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument(
         "--baseline",
         default=os.path.join(REPO, "BENCH_ingest.json"),
-        help="committed baseline JSON (copy it aside before smoke overwrites)",
+        help="committed ingest baseline JSON (copy aside before smoke overwrites)",
     )
     ap.add_argument(
         "--fresh",
         default=os.path.join(REPO, "BENCH_ingest.json"),
-        help="freshly measured smoke JSON",
+        help="freshly measured ingest smoke JSON",
+    )
+    ap.add_argument(
+        "--baseline-search",
+        default=os.path.join(REPO, "BENCH_search.json"),
+        help="committed search baseline JSON (copy aside before smoke overwrites)",
+    )
+    ap.add_argument(
+        "--fresh-search",
+        default=os.path.join(REPO, "BENCH_search.json"),
+        help="freshly measured search smoke JSON",
     )
     args = ap.parse_args()
-    if not os.path.exists(args.fresh):
-        print(f"check_bench FAILED: fresh file {args.fresh} missing", file=sys.stderr)
-        return 1
-    with open(args.fresh) as f:
-        fresh = json.load(f)
-    if not os.path.exists(args.baseline):
-        print(
-            f"check_bench: baseline {args.baseline} missing — bootstrap run, "
-            f"nothing to gate against",
-        )
-        return 0
-    with open(args.baseline) as f:
-        baseline = json.load(f)
-    if os.path.samefile(args.baseline, args.fresh):
-        print(
-            "check_bench: baseline and fresh are the same file — comparing a "
-            "measurement with itself proves nothing; pass --baseline the "
-            "pre-smoke copy",
-            file=sys.stderr,
-        )
-    failures, notes = check(baseline, fresh)
-    for n in notes:
-        print(f"  {n}")
+    failures = _compare("ingest", args.baseline, args.fresh, GATES)
+    failures += _compare(
+        "search", args.baseline_search, args.fresh_search, SEARCH_GATES
+    )
     if failures:
         print("check_bench FAILED (>25% regression):", file=sys.stderr)
         for f_ in failures:
             print(f"  - {f_}", file=sys.stderr)
         return 1
-    print(f"check_bench OK ({len(GATES)} gated rows)")
+    print(f"check_bench OK ({len(GATES) + len(SEARCH_GATES)} gated rows)")
     return 0
 
 

@@ -1,11 +1,13 @@
-"""Docs gate (CI): core + storage modules must stay documented.
+"""Docs gate (CI): core + storage + kernels modules must stay documented.
 
 Fails when README.md or ARCHITECTURE.md is missing, or when any module
-under ``src/repro/core`` or ``src/repro/storage`` is mentioned in neither
-— the module map in ARCHITECTURE.md is where new layers land with a
-documented home, and this check is what keeps it from rotting (PRs 1-3
-were discoverable only through commit messages; that stops here; the
-storage package joined the walk when ``storage/wal.py`` landed).
+under ``src/repro/core``, ``src/repro/storage`` or ``src/repro/kernels``
+is mentioned in neither — the module map in ARCHITECTURE.md is where new
+layers land with a documented home, and this check is what keeps it from
+rotting (PRs 1-3 were discoverable only through commit messages; that
+stops here; the storage package joined the walk when ``storage/wal.py``
+landed, the kernels package when the fused executors made it a load-
+bearing query-path layer rather than a substrate demo).
 
 A module "appears" when its name is present in either doc: the basename
 for top-level modules (``writer.py``, ``heap.py``), the package-qualified
@@ -23,6 +25,7 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 ROOTS = (
     os.path.join(REPO, "src", "repro", "core"),
     os.path.join(REPO, "src", "repro", "storage"),
+    os.path.join(REPO, "src", "repro", "kernels"),
 )
 DOCS = ("README.md", "ARCHITECTURE.md")
 
