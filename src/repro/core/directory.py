@@ -34,7 +34,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.segment import Segment
-from repro.storage.device_model import DeviceModel, DRAM, PMEM, SSD
+from repro.storage.device_model import DEVICE_MODELS, DeviceModel, DRAM, PMEM, SSD
 
 _SEG_NAME_RE = re.compile(r"^_[a-z]\d{6}$")
 
@@ -182,6 +182,11 @@ class Directory(ABC):
     def drop_caches(self) -> None:
         """Evict page cache so subsequent reads hit the device (search bench
         'working set exceeds memory' condition)."""
+
+    def close(self) -> None:
+        """Release OS resources the directory holds open (memmaps, file
+        handles).  Idempotent.  Long-lived shard worker processes call this
+        on shutdown so a heap memmap never outlives its owning worker."""
 
     def list_segments(self) -> List[str]:
         raise NotImplementedError
@@ -984,6 +989,11 @@ class ByteAddressableDirectory(Directory):
     def list_segments(self) -> List[str]:
         return sorted(self._toc)
 
+    def close(self) -> None:
+        """Flush and unmap the heap (idempotent).  A shard worker process
+        calls this on shutdown: the memmap must not outlive the worker."""
+        self.heap.close()
+
 
 # ---------------------------------------------------------------------------
 # Volatile baseline
@@ -1089,3 +1099,28 @@ class RAMDirectory(Directory):
 
     def list_segments(self) -> List[str]:
         return sorted(self._segs)
+
+
+# ---------------------------------------------------------------------------
+# Factory
+# ---------------------------------------------------------------------------
+
+
+def make_directory(kind: str, path: Optional[str] = None) -> Directory:
+    """kind: 'ram' | 'fs-ssd' | 'fs-pmem' | 'byte-pmem' | 'byte-dram'.
+
+    Lives here (not in ``engine``) so shard worker processes can build
+    their Directory without importing the jax-dependent search stack;
+    ``repro.core.engine`` re-exports it for the application-facing API.
+    """
+    if kind == "ram":
+        return RAMDirectory()
+    if path is None:
+        import tempfile
+
+        path = tempfile.mkdtemp(prefix=f"repro-{kind}-")
+    if kind.startswith("fs-"):
+        return FSDirectory(path, DEVICE_MODELS[kind[3:]])
+    if kind.startswith("byte-"):
+        return ByteAddressableDirectory(path, DEVICE_MODELS[kind[5:]])
+    raise ValueError(f"unknown directory kind {kind!r}")

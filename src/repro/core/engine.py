@@ -9,9 +9,6 @@ frequency.
 
 from __future__ import annotations
 
-import os
-import shutil
-import tempfile
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.analyzer import Analyzer
@@ -20,26 +17,19 @@ from repro.core.directory import (
     Directory,
     FSDirectory,
     RAMDirectory,
+    make_directory,
 )
 from repro.core.nrt import SearcherManager
 from repro.core.query.cache import SegmentDeviceCache
 from repro.core.query.types import Query
 from repro.core.search import Searcher, TopDocs
 from repro.core.writer import IndexWriter
-from repro.storage.device_model import DEVICE_MODELS
 
 
-def make_directory(kind: str, path: Optional[str] = None) -> Directory:
-    """kind: 'ram' | 'fs-ssd' | 'fs-pmem' | 'byte-pmem' | 'byte-dram'."""
-    if kind == "ram":
-        return RAMDirectory()
-    if path is None:
-        path = tempfile.mkdtemp(prefix=f"repro-{kind}-")
-    if kind.startswith("fs-"):
-        return FSDirectory(path, DEVICE_MODELS[kind[3:]])
-    if kind.startswith("byte-"):
-        return ByteAddressableDirectory(path, DEVICE_MODELS[kind[5:]])
-    raise ValueError(f"unknown directory kind {kind!r}")
+# ``make_directory`` now lives in ``repro.core.directory`` (jax-free, so
+# shard worker processes can import it without the search stack); it stays
+# re-exported here because this module is its historical home.
+__all__ = ["SearchEngine", "make_directory"]
 
 
 class SearchEngine:

@@ -37,8 +37,7 @@ import tempfile
 from typing import Dict, List, Optional
 
 from repro.core.analyzer import _fnv1a
-from repro.core.directory import Directory
-from repro.core.engine import make_directory
+from repro.core.directory import Directory, make_directory
 
 MANIFEST_NAME = "shards.json"
 
@@ -133,13 +132,38 @@ class ShardSet:
             self.path = path or tempfile.mkdtemp(prefix=f"repro-shards-{kind}-")
             os.makedirs(self.path, exist_ok=True)
         self.dirs: List[Directory] = [
-            make_directory(kind, self._shard_path(i)) for i in range(n_shards)
+            make_directory(kind, self.shard_path(i)) for i in range(n_shards)
         ]
 
-    def _shard_path(self, i: int) -> Optional[str]:
+    def shard_path(self, i: int) -> Optional[str]:
+        """Filesystem home of shard ``i`` (None for the ram kind) — what a
+        worker process needs to build its own ``Directory`` over the same
+        durable bytes."""
         if self.path is None:
             return None
         return os.path.join(self.path, f"shard{i:02d}")
+
+    # kept for callers of the historical private name
+    _shard_path = shard_path
+
+    def reload(self) -> None:
+        """Rebuild ``self.dirs`` from storage, dropping in-memory state.
+
+        Under the processes backend the coordinator's ``Directory`` objects
+        are stale mirrors — the workers own the real ones and advance the
+        committed watermarks.  Recovery paths must reload from the durable
+        bytes *before* simulating a crash, or the stale watermark would
+        truncate data a worker durably committed.  Meaningless for ``ram``
+        (nothing durable to reload from), so it is a no-op there.
+        """
+        if self.kind == "ram":
+            return
+        for d in self.dirs:
+            d.close()
+        self.dirs = [
+            make_directory(self.kind, self.shard_path(i))
+            for i in range(self.n_shards)
+        ]
 
     # -- manifest -----------------------------------------------------------
     @property

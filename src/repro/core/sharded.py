@@ -42,14 +42,13 @@ point gives one index.
 
 from __future__ import annotations
 
-import time
-from concurrent.futures import ThreadPoolExecutor
-from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.analyzer import Analyzer
+from repro.core.ingest_backend import BACKENDS, make_backend
 from repro.core.nrt import SearcherManager
 from repro.core.query.cache import SegmentDeviceCache
 from repro.core.query.exec import _finalize_scored, execute_group, merge_topk
@@ -57,7 +56,7 @@ from repro.core.query.plan import FamilyGroup, plan_batch
 from repro.core.query.types import Query, TopDocs
 from repro.core.search import Searcher
 from repro.core.shard import Router, HashIdRouter, ShardSet, router_from_spec
-from repro.core.writer import EXT_ID_FIELD, IndexWriter
+from repro.core.writer import EXT_ID_FIELD
 
 # EXT_ID_FIELD (re-exported from repro.core.writer): the reserved
 # doc-values column carrying each document's external id — its assignment
@@ -77,14 +76,27 @@ class ShardedWriter:
     Each shard owns its Directory, its DRAM buffer, its tiered merge
     cascade, and (byte path) its PersistentHeap; shards share *nothing*
     mutable — not even the Analyzer (each gets its own memo dicts), so
-    per-shard work can run on worker threads without coordination.
+    per-shard work runs wherever the **execution backend** puts it:
 
-    ``parallel=True`` fans per-shard batches out on a thread pool; either
+      ``backend="serial"``     inline on the caller's thread — the
+                               uncontended busy-ledger baseline the
+                               critical-path model reads
+      ``backend="threads"``    thread-pool fan-out (the historical
+                               ``parallel=True``, kept as the semantics
+                               oracle; the GIL serializes analysis)
+      ``backend="processes"``  one long-lived worker process per shard —
+                               real parallelism; batches travel by
+                               shared-memory columnar blocks, commits by
+                               the same two-phase protocol over a control
+                               pipe (see ``repro.core.ingest_backend``)
+
+    ``parallel`` is kept as the legacy knob: ``backend=None`` maps
+    ``parallel=True`` to ``threads`` and ``False`` to ``serial``.  Either
     way a per-shard *busy ledger* (``shard_busy_s``) records the seconds
     each shard's writer actually worked, which is what the ingest
-    benchmark's critical-path model reads (single-process repro: the
-    modeled N-writer wall is router overhead + the slowest shard, the same
-    real-vs-modeled convention as ``SimClock``).
+    benchmark's critical-path model reads (the modeled N-writer wall is
+    router overhead + the slowest shard, the same real-vs-modeled
+    convention as ``SimClock``).
     """
 
     def __init__(
@@ -93,14 +105,21 @@ class ShardedWriter:
         router: Optional[Router] = None,
         analyzer: Optional[Analyzer] = None,
         parallel: bool = True,
+        backend: Optional[str] = None,
         **writer_kwargs,
     ) -> None:
         self.shards = shards
         n = shards.n_shards
+        name = backend or ("threads" if parallel else "serial")
+        if name not in BACKENDS:
+            raise ValueError(
+                f"unknown ingest backend {name!r}; expected one of {BACKENDS}"
+            )
         manifest = shards.read_manifest()
         self.router = self._resolve_router(router, manifest, n)
         self._next_ext = 0
         self._epoch = -1
+        gens = [-1] * n  # no manifest: every per-shard commit is an orphan
         if manifest is not None:
             if manifest.get("n_shards") != n:
                 raise ValueError(
@@ -109,43 +128,59 @@ class ShardedWriter:
                 )
             self._next_ext = int(manifest["next_ext"])
             self._epoch = int(manifest["epoch"])
-            for sid, (d, gen) in enumerate(zip(shards.dirs, manifest["gens"])):
-                # shards ahead of the manifest (crash mid-wave) roll back.
-                # On a DURABLE kind a failed rollback means the manifest's
-                # generation is unrecoverable (e.g. repeated commit waves
-                # whose manifest writes kept failing pushed the retained
-                # previous commit past it) — opening this shard at a
-                # generation the cross-shard commit never published would
-                # be exactly the mixed point in time this layer forbids,
-                # so refuse loudly.  Volatile ram legitimately loses
-                # everything in a crash: it opens empty, which is the
-                # manifest state every ram shard recovers to.
-                if not d.rollback_to(int(gen)) and shards.kind != "ram":
-                    raise RuntimeError(
-                        f"shard {sid}: commit generation {gen} named by the "
-                        f"cross-shard manifest is not recoverable; refusing "
-                        f"to open a mixed point in time"
-                    )
-        else:
-            # no manifest: any per-shard commit is an orphan of a torn
-            # first wave — recover every shard to the empty state
-            for d in shards.dirs:
-                d.rollback_to(-1)
+            gens = [int(g) for g in manifest["gens"]]
+        self.backend_name = name
+        self.parallel = name != "serial" and n > 1
         base_an = analyzer or Analyzer()
-        self.writers: List[IndexWriter] = [
-            IndexWriter(d, Analyzer(base_an.stopwords), **writer_kwargs)
-            for d in shards.dirs
-        ]
+        self._backend = make_backend(name, n)
+        try:
+            # the backend brings every shard's writer up at the manifest's
+            # point in time: shards ahead of it (crash mid-wave) roll back,
+            # then per-shard recovery/WAL replay runs — in-process against
+            # ``shards.dirs``, or inside each worker over the same durable
+            # bytes for the processes backend
+            rolled = self._backend.start(shards, gens, base_an, writer_kwargs)
+            if manifest is not None and shards.kind != "ram":
+                for sid, ok in enumerate(rolled):
+                    # On a DURABLE kind a failed rollback means the
+                    # manifest's generation is unrecoverable (e.g. repeated
+                    # commit waves whose manifest writes kept failing pushed
+                    # the retained previous commit past it) — opening this
+                    # shard at a generation the cross-shard commit never
+                    # published would be exactly the mixed point in time
+                    # this layer forbids, so refuse loudly.  Volatile ram
+                    # legitimately loses everything in a crash: it opens
+                    # empty, which is the manifest state every ram shard
+                    # recovers to.
+                    if not ok:
+                        raise RuntimeError(
+                            f"shard {sid}: commit generation {gens[sid]} "
+                            f"named by the cross-shard manifest is not "
+                            f"recoverable; refusing to open a mixed point "
+                            f"in time"
+                        )
+        except Exception:
+            self._backend.close()  # workers must not outlive a failed open
+            raise
         # per-shard WAL replay (use_wal=True in writer_kwargs) can recover
         # batches acked AFTER the manifest was published: their external
         # ids sit past the manifest's watermark, so advance it — otherwise
         # new documents would reuse ids that live in replayed buffers
-        replayed = max((w.replay_max_ext for w in self.writers), default=-1)
+        replayed = self._backend.replay_max_ext
         if replayed + 1 > self._next_ext:
             self._next_ext = replayed + 1
-        self.parallel = parallel and n > 1
-        self._pool: Optional[ThreadPoolExecutor] = None
-        self.shard_busy_s: List[float] = [0.0] * n
+
+    @property
+    def writers(self):
+        """Per-shard writer views, sid-ordered: real ``IndexWriter``s for
+        in-process backends, ``MirrorWriter`` snapshots for processes —
+        either satisfies the search stack's writer surface."""
+        return self._backend.writers
+
+    @property
+    def shard_busy_s(self) -> List[float]:
+        """Per-shard busy seconds (the critical-path model's ledger)."""
+        return self._backend.busy()
 
     @staticmethod
     def _resolve_router(router, manifest, n_shards) -> Router:
@@ -178,24 +213,16 @@ class ShardedWriter:
     def n_shards(self) -> int:
         return self.shards.n_shards
 
-    def _run(self, fn: Callable[[int], None], sids: Iterable[int]) -> None:
-        """Run ``fn(shard_id)`` for each shard — on the pool when parallel
-        (shards share no mutable state), inline otherwise."""
-        sids = list(sids)
-        if self.parallel and len(sids) > 1:
-            if self._pool is None:
-                self._pool = ThreadPoolExecutor(
-                    max_workers=self.n_shards, thread_name_prefix="shard"
-                )
-            list(self._pool.map(fn, sids))  # list(): propagate exceptions
-        else:
-            for sid in sids:
-                fn(sid)
+    def inject_fault(self, sid: int, mode: str) -> None:
+        """Fault injection (tests, processes backend only): arm shard
+        ``sid``'s worker to SIGKILL itself at a crash point."""
+        self._backend.inject_fault(sid, mode)
 
     def close(self) -> None:
-        if self._pool is not None:
-            self._pool.shutdown(wait=True)
-            self._pool = None
+        """Tear the backend down — joins/terminates worker processes (or
+        drains the thread pool) even when a shard op raised; workers never
+        outlive the coordinator or hold a heap memmap open past close()."""
+        self._backend.close()
 
     # -- indexing -----------------------------------------------------------
     def add_document(
@@ -205,22 +232,19 @@ class ShardedWriter:
         ext = self._next_ext
         self._next_ext += 1
         sid = self.router.route(fields, doc_values, ext)
-        t0 = time.perf_counter()
-        self.writers[sid].add_document(
-            fields, {**(doc_values or {}), EXT_ID_FIELD: ext}
-        )
-        self.shard_busy_s[sid] += time.perf_counter() - t0
+        self._backend.run("add", [sid], [[(fields, doc_values, ext)]])
         return ext
 
     def add_documents(
         self, docs: Sequence[Tuple[Dict[str, str], Optional[dict]]]
     ) -> List[int]:
         """Fan a batch out: route every document, then ingest each shard's
-        slice as one batch (on worker threads when ``parallel``).
+        slice as one batch (concurrently on every backend but serial; the
+        processes backend ships each slice as one shared-memory block).
 
         With per-shard WALs (``use_wal``) each slice is one log record and
         one barrier per shard — the return is then a durable ack for the
-        whole batch, and the barriers run concurrently when ``parallel``.
+        whole batch, and the barriers run concurrently.
         """
         routed: List[List[Tuple[Dict[str, str], Optional[dict], int]]] = [
             [] for _ in range(self.n_shards)
@@ -231,43 +255,21 @@ class ShardedWriter:
             self._next_ext += 1
             exts.append(ext)
             routed[self.router.route(fields, dv, ext)].append((fields, dv, ext))
-
-        def ingest(sid: int) -> None:
-            w = self.writers[sid]
-            t0 = time.perf_counter()
-            w.add_documents(
-                [
-                    (fields, {**(dv or {}), EXT_ID_FIELD: ext})
-                    for fields, dv, ext in routed[sid]
-                ]
-            )
-            self.shard_busy_s[sid] += time.perf_counter() - t0
-
-        self._run(ingest, [i for i in range(self.n_shards) if routed[i]])
+        sids = [i for i in range(self.n_shards) if routed[i]]
+        self._backend.run("add", sids, [routed[i] for i in sids])
         return exts
 
     def delete_by_term(self, field: str, token: str) -> int:
         """A term can live anywhere: the delete fans out to every shard
         (each scans only its own snapshot, so shards run concurrently)."""
-        counts = [0] * self.n_shards
-
-        def do(sid: int) -> None:
-            t0 = time.perf_counter()
-            counts[sid] = self.writers[sid].delete_by_term(field, token)
-            self.shard_busy_s[sid] += time.perf_counter() - t0
-
-        self._run(do, range(self.n_shards))
+        counts = self._backend.run(
+            "delete", range(self.n_shards), [(field, token)] * self.n_shards
+        )
         return sum(counts)
 
     def flush(self) -> None:
         """Freeze every shard's buffer into its own segment (NRT flush)."""
-
-        def do(sid: int) -> None:
-            t0 = time.perf_counter()
-            self.writers[sid].flush()
-            self.shard_busy_s[sid] += time.perf_counter() - t0
-
-        self._run(do, range(self.n_shards))
+        self._backend.run("flush", range(self.n_shards), [None] * self.n_shards)
 
     # -- the cross-shard commit ---------------------------------------------
     def commit(self, meta: Optional[dict] = None) -> int:
@@ -282,23 +284,22 @@ class ShardedWriter:
         A crash in phase 1 leaves shards split across two generations, but
         the manifest still names the old wave and recovery rolls the early
         committers back.  A crash after phase 2 recovers the new wave on
-        every shard (phase 3 re-runs implicitly at the next commit).
+        every shard (phase 3 re-runs implicitly at the next commit).  Under
+        the processes backend the same protocol runs over the control
+        pipes: a worker SIGKILLed mid-wave surfaces as a RuntimeError
+        *before* the manifest is written, so the torn wave is never
+        published.
         """
         epoch = self._epoch + 1
-        gens = [0] * self.n_shards
-
-        def commit_shard(sid: int) -> None:
-            t0 = time.perf_counter()
-            gens[sid] = self.writers[sid].commit(
-                {**(meta or {}), "epoch": epoch}, gc=False
-            )
-            self.shard_busy_s[sid] += time.perf_counter() - t0
-
-        self._run(commit_shard, range(self.n_shards))
+        gens = self._backend.run(
+            "commit",
+            range(self.n_shards),
+            [{**(meta or {}), "epoch": epoch}] * self.n_shards,
+        )
         self.shards.write_manifest(
             {
                 "epoch": epoch,
-                "gens": gens,
+                "gens": [int(g) for g in gens],
                 "next_ext": self._next_ext,
                 "router": self.router.spec(),
                 "n_shards": self.n_shards,
@@ -306,13 +307,7 @@ class ShardedWriter:
             }
         )
         self._epoch = epoch
-
-        def gc_shard(sid: int) -> None:
-            t0 = time.perf_counter()
-            self.writers[sid].run_gc()
-            self.shard_busy_s[sid] += time.perf_counter() - t0
-
-        self._run(gc_shard, range(self.n_shards))
+        self._backend.run("gc", range(self.n_shards), [None] * self.n_shards)
         return epoch
 
     # -- stats --------------------------------------------------------------
@@ -325,11 +320,14 @@ class ShardedWriter:
         return self._next_ext
 
     def stats(self) -> dict:
-        per_shard = [w.stats() for w in self.writers]
+        per_shard = self._backend.run(
+            "stats", range(self.n_shards), [None] * self.n_shards
+        )
         return {
             "shards": self.n_shards,
             "epoch": self._epoch,
             "docs": self._next_ext,
+            "backend": self.backend_name,
             "segments": sum(s["segments"] for s in per_shard),
             "buffered": sum(s["buffered"] for s in per_shard),
             "busy_s": list(self.shard_busy_s),
@@ -596,6 +594,7 @@ class ShardedEngine:
         parallel: bool = True,
         shards: Optional[ShardSet] = None,
         use_wal: bool = False,
+        backend: Optional[str] = None,
     ) -> None:
         self.shards = shards or ShardSet(directory, path, n_shards)
         self.analyzer = analyzer
@@ -603,14 +602,16 @@ class ShardedEngine:
         self.use_wal = use_wal
         self.writer = ShardedWriter(
             self.shards, router=router, analyzer=analyzer, parallel=parallel,
-            use_wal=use_wal,
+            backend=backend, use_wal=use_wal,
         )
         self.device_caches = [
             SegmentDeviceCache(tile=use_pallas) for _ in self.writer.writers
         ]
         for w, cache in zip(self.writer.writers, self.device_caches):
             # per-shard merge warmup (the SearchEngine._on_merge contract,
-            # one cache per shard so same-named segments never collide)
+            # one cache per shard so same-named segments never collide).
+            # MirrorWriters (processes backend) never fire these — merges
+            # happen in the worker and the mirror warms on reopen instead.
             w.merge_listeners.append(
                 lambda wr, c=cache: c.warm_merged(wr.segments)
             )
@@ -660,6 +661,12 @@ class ShardedEngine:
         after which each shard's WAL tail replays its acked batches (the
         rollback un-retired any span only the torn wave had retired)."""
         self.writer.close()
+        if self.writer.backend_name == "processes":
+            # the workers owned the real Directories; the coordinator's are
+            # stale mirrors whose committed watermarks predate everything
+            # the workers durably wrote.  Reload from storage FIRST, or
+            # crash() would truncate worker commits to the stale watermark.
+            self.shards.reload()
         self.shards.crash()
         return ShardedEngine(
             directory=self.shards.kind,
@@ -668,6 +675,7 @@ class ShardedEngine:
             analyzer=self.analyzer,
             use_pallas=self.use_pallas,
             parallel=self.writer.parallel,
+            backend=self.writer.backend_name,
             shards=self.shards,
             use_wal=self.use_wal,
         )

@@ -244,5 +244,10 @@ class PersistentHeap:
         self._mm = np.memmap(self.path, dtype=np.uint8, mode="r+")
 
     def close(self) -> None:
-        self._mm.flush()
-        del self._mm
+        """Flush and unmap the backing file.  Idempotent — a shard worker's
+        shutdown path and the coordinator's teardown may both call it."""
+        mm = getattr(self, "_mm", None)
+        if mm is None:
+            return
+        mm.flush()
+        self._mm = None

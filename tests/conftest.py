@@ -11,21 +11,31 @@ import pytest
 # kind is not listed, e.g. REPRO_KINDS=byte-pmem runs only the byte path
 _DIR_KINDS = {"ram", "fs-ssd", "fs-pmem", "byte-pmem", "byte-dram"}
 
+# same idea for the ingest execution backends (the CI backend axis):
+# REPRO_BACKENDS=processes runs only process-parallel parameterizations
+_BACKENDS = {"serial", "threads", "processes"}
 
-def pytest_collection_modifyitems(config, items):
-    spec = os.environ.get("REPRO_KINDS")
-    if not spec:
-        return
+
+def _axis_filter(items, config, spec, universe):
     allowed = {k.strip() for k in spec.split(",") if k.strip()}
     keep, drop = [], []
     for item in items:
         cs = getattr(item, "callspec", None)
         params = cs.params.values() if cs is not None else ()
-        kinds = {v for v in params if isinstance(v, str) and v in _DIR_KINDS}
-        (keep if not kinds or kinds <= allowed else drop).append(item)
+        vals = {v for v in params if isinstance(v, str) and v in universe}
+        (keep if not vals or vals <= allowed else drop).append(item)
     if drop:
         config.hook.pytest_deselected(items=drop)
         items[:] = keep
+
+
+def pytest_collection_modifyitems(config, items):
+    kinds = os.environ.get("REPRO_KINDS")
+    if kinds:
+        _axis_filter(items, config, kinds, _DIR_KINDS)
+    backends = os.environ.get("REPRO_BACKENDS")
+    if backends:
+        _axis_filter(items, config, backends, _BACKENDS)
 
 
 @pytest.fixture

@@ -85,9 +85,11 @@ def build_unsharded(kind, path, corpus):
     return eng
 
 
-def build_sharded(kind, path, corpus, n_shards, router=None):
+def build_sharded(kind, path, corpus, n_shards, router=None, backend=None,
+                  use_wal=False):
     eng = ShardedEngine(
-        kind, path=str(path) if path else None, n_shards=n_shards, router=router
+        kind, path=str(path) if path else None, n_shards=n_shards,
+        router=router, backend=backend, use_wal=use_wal,
     )
     for j in range(0, len(corpus), FLUSH_EVERY):
         eng.add_documents(corpus[j : j + FLUSH_EVERY])
@@ -119,10 +121,14 @@ def assert_results_identical(queries, ref, ref_ext, sharded_results):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.parametrize("backend", ["serial", "threads", "processes"])
 @pytest.mark.parametrize("kind", KINDS)
-def test_sharded_parity_all_families(kind, tmp_path, corpus):
+def test_sharded_parity_all_families(kind, backend, tmp_path, corpus):
     ref = build_unsharded(kind, tmp_path / "ref" if kind != "ram" else None, corpus)
-    sh = build_sharded(kind, tmp_path / "sh" if kind != "ram" else None, corpus, 3)
+    sh = build_sharded(
+        kind, tmp_path / "sh" if kind != "ram" else None, corpus, 3,
+        backend=backend,
+    )
     try:
         queries = all_family_batch(corpus)
         a = ref.search_batch(queries, k=10)
@@ -455,3 +461,114 @@ def test_sharded_stats_aggregate(corpus):
         assert len(st["busy_s"]) == 3 and all(b > 0 for b in st["busy_s"])
     finally:
         sh.close()
+
+
+# ---------------------------------------------------------------------------
+# 4. processes backend: worker-crash fault injection (SIGKILL)
+# ---------------------------------------------------------------------------
+#
+# A shard worker is SIGKILLed at the two dangerous points of the ingest
+# lifecycle: mid-``add_documents`` (before any buffer/WAL mutation) and
+# between phase 1 and phase 2 of the cross-shard commit (its shard durably
+# one generation ahead of the manifest).  Recovery — a fresh coordinator
+# over the same durable bytes — must roll every shard back to the
+# manifest's single point in time, un-retire the WAL spans the torn wave
+# retired, and replay the acked prefix bit-identically.
+
+
+def _drive_acked(eng, corpus):
+    """60-doc acked batches: two waves committed, two acked past the
+    manifest (the WAL-held tail recovery must replay)."""
+    eng.add_documents(corpus[:60])
+    eng.add_documents(corpus[60:120])
+    eng.commit()  # manifest at 120 docs
+    eng.add_documents(corpus[120:180])
+    eng.add_documents(corpus[180:240])  # acked, never committed
+    return eng
+
+
+def _assert_bit_identical(corpus, ref, rec):
+    """Flush+reopen both sides, then compare every query family."""
+    ref.reopen()
+    rec.reopen()
+    queries = all_family_batch(corpus)
+    a = ref.search_batch(queries, k=20)
+    b = rec.search_batch(queries, k=20)
+    for q, ta, tb in zip(queries, a, b):
+        assert ta.total_hits == tb.total_hits, repr(q)
+        np.testing.assert_array_equal(ta.doc_ids, tb.doc_ids, err_msg=repr(q))
+        np.testing.assert_array_equal(ta.scores, tb.scores, err_msg=repr(q))
+
+
+@pytest.mark.parametrize("backend", ["processes"])
+@pytest.mark.parametrize("kind", ["byte-pmem"])
+def test_worker_sigkill_mid_add_recovers_acked_prefix(
+    kind, backend, tmp_path, corpus
+):
+    """SIGKILL one shard's worker at the moment an add arrives (before any
+    mutation): the un-acked batch is lost — everything acked before it
+    replays bit-identically.  The batch is a single document routed AT the
+    killed shard, so no sibling shard holds a durably-logged slice of it
+    (per-shard WALs ack independently; a multi-shard batch would leave the
+    survivor's half durable)."""
+    eng = _drive_acked(
+        ShardedEngine(kind, str(tmp_path / "s"), n_shards=2,
+                      backend=backend, use_wal=True),
+        corpus,
+    )
+    eng.writer.inject_fault(0, "kill_before_add")
+    # next ext id is 240 -> HashIdRouter sends it to shard 240 % 2 == 0
+    with pytest.raises(RuntimeError, match="worker died"):
+        eng.add(*corpus[0])
+    eng.close()  # teardown with a dead worker must reap the survivor too
+
+    rec = ShardedEngine(kind, str(tmp_path / "s"), n_shards=2,
+                        backend=backend, use_wal=True)
+    ref = _drive_acked(
+        ShardedEngine(kind, str(tmp_path / "r"), n_shards=2,
+                      backend=backend, use_wal=True),
+        corpus,
+    )
+    try:
+        assert rec.writer.next_ext == N_DOCS  # the killed doc never acked
+        _assert_bit_identical(corpus, ref, rec)
+    finally:
+        rec.close()
+        ref.close()
+
+
+@pytest.mark.parametrize("backend", ["processes"])
+@pytest.mark.parametrize("kind", ["byte-pmem"])
+def test_worker_sigkill_between_commit_phases_rolls_back_wave(
+    kind, backend, tmp_path, corpus
+):
+    """SIGKILL one worker after its phase-1 commit is durable but before it
+    reports: the coordinator never writes the manifest, so the whole wave
+    is torn.  Recovery rolls EVERY shard back to the previous manifest
+    (shards that committed are one generation ahead), un-retires the WAL
+    spans that commit retired, and replays the acked tail — bit-identical
+    to a reference that never attempted the torn commit."""
+    eng = _drive_acked(
+        ShardedEngine(kind, str(tmp_path / "s"), n_shards=2,
+                      backend=backend, use_wal=True),
+        corpus,
+    )
+    eng.writer.inject_fault(0, "kill_after_commit")
+    with pytest.raises(RuntimeError, match="worker died"):
+        eng.commit()  # phase 1 runs on both shards; the manifest never lands
+    eng.close()
+
+    rec = ShardedEngine(kind, str(tmp_path / "s"), n_shards=2,
+                        backend=backend, use_wal=True)
+    ref = _drive_acked(
+        ShardedEngine(kind, str(tmp_path / "r"), n_shards=2,
+                      backend=backend, use_wal=True),
+        corpus,
+    )
+    try:
+        assert rec.writer.epoch == 0  # the torn epoch-1 wave was rolled back
+        assert rec.writer.next_ext == N_DOCS  # acked tail replayed
+        _assert_bit_identical(corpus, ref, rec)
+    finally:
+        rec.close()
+        ref.close()

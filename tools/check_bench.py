@@ -62,6 +62,21 @@ GATES = [
     ("wal.barriers_per_batch", "lower"),
 ]
 
+# Absolute HARD floors on the fresh measurement (no baseline ratio): the
+# processes backend's real-wall N-shard speedup vs the unsharded serial
+# baseline, per directory kind.  These are the numbers the process-parallel
+# refactor exists to move — 2 shards must beat 1.5x unsharded on ram, and
+# fs-ssd must at least stop LOSING to unsharded (the pre-refactor thread
+# pool went backwards there).  Enforced only when the measuring machine
+# reported >= 2 usable cores (payload "cpus"): one core cannot exhibit
+# real parallelism, so a 1-core number is pure IPC overhead and gating it
+# would punish the wrong thing.  Deliberately NOT in GATES: a baseline
+# committed from a 1-core box must never relax a multi-core CI floor.
+PARALLEL_FLOORS = [
+    ("sharded_real_speedup.ram/processes", 1.5),
+    ("sharded_real_speedup.fs-ssd/processes", 1.0),
+]
+
 # BENCH_search.json gates: the fusion win itself (hard-floored at 2.0x
 # inside run_smoke regardless of baseline drift), the per-family fused
 # per-query latencies, and the term family's achieved roofline fraction.
@@ -106,6 +121,43 @@ def check(baseline: dict, fresh: dict, gates=GATES) -> Tuple[list, list]:
             notes.append(f"{key}: OK — {verdict}")
         else:
             failures.append(f"{key}: REGRESSED — {verdict}")
+    return failures, notes
+
+
+def check_parallel_floors(fresh: dict) -> Tuple[list, list]:
+    """Absolute floors on the processes backend's real-wall speedups.
+
+    Applies only to the FRESH measurement, and only when it was taken on
+    >= 2 usable cores; the rows themselves must exist whenever the smoke
+    run measured the processes backend (their absence is only a bootstrap
+    note so serial-only smoke invocations keep working)."""
+    failures, notes = [], []
+    measured = any(lookup(fresh, key) is not None for key, _ in PARALLEL_FLOORS)
+    if not measured:
+        notes.append(
+            "parallel floors: processes backend not in this smoke run "
+            "(run ingest_bench --backend serial,processes to measure)"
+        )
+        return failures, notes
+    cpus = lookup(fresh, "cpus") or 0
+    if cpus < 2:
+        notes.append(
+            f"parallel floors: SKIPPED — measured on {cpus:.0f} usable "
+            f"core(s); real parallel speedup is physically impossible there "
+            f"(CI multi-core runners enforce the floors)"
+        )
+        return failures, notes
+    for key, floor in PARALLEL_FLOORS:
+        new = lookup(fresh, key)
+        if new is None:
+            failures.append(f"{key}: missing from the fresh smoke run")
+        elif new < floor:
+            failures.append(
+                f"{key}: HARD FLOOR — fresh {new:g} < required {floor:g} "
+                f"(real-wall, {cpus:.0f} cores)"
+            )
+        else:
+            notes.append(f"{key}: OK — fresh {new:g} >= floor {floor:g}")
     return failures, notes
 
 
@@ -162,6 +214,13 @@ def main() -> int:
     )
     args = ap.parse_args()
     failures = _compare("ingest", args.baseline, args.fresh, GATES)
+    if os.path.exists(args.fresh):
+        with open(args.fresh) as f:
+            fresh_ingest = json.load(f)
+        floor_failures, floor_notes = check_parallel_floors(fresh_ingest)
+        for n in floor_notes:
+            print(f"  [ingest] {n}")
+        failures += [f"ingest: {f_}" for f_ in floor_failures]
     failures += _compare(
         "search", args.baseline_search, args.fresh_search, SEARCH_GATES
     )
