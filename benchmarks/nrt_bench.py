@@ -19,15 +19,29 @@ Times combine measured compute with modeled storage (device constants).
 flushes are 1/N the size per shard and per-shard reopens are independent,
 so reopen latency (the Fig 4b metric) tracks the slowest *shard's* flush
 — the row reports that critical-path reopen alongside QPS.
+
+``--smoke`` is the search-at-ack trajectory entry point: it measures
+**ack-to-visible latency** — the time from the last acked document of a
+10k-doc uncommitted tail to a query observing it — on the default live
+path (``reopen()``: bind a ``LiveSnapshot``, zero flush) vs the historical
+flush-reopen path (``maybe_reopen(force_flush=True)``: build segments
+first), per directory kind, plus a six-family live==flush parity bit.  The
+rows merge into ``BENCH_search.json`` (which ``search_bench.run_smoke``
+wrote earlier in the same CI step) and ``tools/check_bench.py`` gates them:
+the live path must stay >=10x faster on ram and parity must hold exactly.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import shutil
 import tempfile
 import time
 from typing import Dict, List
+
+import numpy as np
 
 from repro.core import SearchEngine, ShardedEngine
 from repro.core.search import TermQuery
@@ -39,6 +53,14 @@ REOPEN_OFFSET = 500  # reopens fall between commits (paper's interleaving):
                      # buffered docs at reopen ~ min(commit interval, 500)
 COMMIT_FREQS = [100, 300, 1000]
 QUERIES = [TermQuery("body", _word(i)) for i in (1, 2, 3, 20, 40)]
+
+BENCH_SEARCH_JSON = "BENCH_search.json"
+ACK_TAIL_DOCS = 10_000   # the tentpole's headline tail size
+ACK_BASE_DOCS = 2_000    # committed base under the tail
+ACK_BATCH_DOCS = 250     # acked-batch granularity (the WAL acks batches)
+ACK_REPEATS = 3          # each repeat rebuilds base + tail from scratch
+ACK_KINDS = ("ram", "fs-ssd", "byte-pmem")
+ACK_SPEEDUP_GATE = 10.0  # live must beat flush-reopen >=10x on ram
 
 
 def run_one(kind: str, docs_per_commit: int) -> Dict:
@@ -145,6 +167,156 @@ def run_one_sharded(kind: str, docs_per_commit: int, n_shards: int) -> Dict:
             shutil.rmtree(path, ignore_errors=True)
 
 
+def _ack_corpus(n: int):
+    return list(synthetic_corpus(CorpusConfig(n_docs=n, seed=47)))
+
+
+def run_ack_to_visible(kind: str, tail: int = ACK_TAIL_DOCS) -> Dict:
+    """Ack-to-visible latency at a ``tail``-doc uncommitted tail.
+
+    Protocol per repeat (each on a FRESH directory, so the committed set —
+    and with it every XLA shape bucket — is identical across repeats):
+    commit a base, buffer the tail minus one batch in acked batches (on
+    the byte path durably, via the WAL), catch an NRT reader up on that
+    tail (``reopen()`` + probe — a search-at-ack deployment reopens
+    continuously, so the reader is never 10k docs behind), ack the FINAL
+    batch, then time *ack-to-visible*: ``reopen()`` + one query observing
+    it.  The live path binds a ``LiveSnapshot`` covering the new batch
+    (zero flush); the flush path must build segments for the ENTIRE
+    buffered tail inside the timer before the last ack is visible —
+    exactly the cost ``maybe_reopen(force_flush=True)`` put on the read
+    path, and why it scales with the tail while the live path does not.
+    Repeat 0 is a discarded warm lap: it absorbs one-time JIT compilation
+    of the repeats' shape buckets (the same idiom as ``run_one``'s warm
+    pass — a steady-state searcher saw every bucket long ago)."""
+    docs = _ack_corpus(ACK_BASE_DOCS + tail)
+    probe = TermQuery("body", _word(1))
+    out: Dict = {"dir": kind, "tail_docs": tail}
+    for mode in ("live", "flush"):
+        lat: List[float] = []
+        for rep in range(ACK_REPEATS + 1):
+            path = None if kind == "ram" else tempfile.mkdtemp(prefix="ack-")
+            try:
+                eng = SearchEngine(
+                    kind, path, use_wal=kind.startswith("byte")
+                )
+                for i in range(0, ACK_BASE_DOCS, ACK_BATCH_DOCS):
+                    eng.add_documents(docs[i : i + ACK_BATCH_DOCS])
+                eng.flush()
+                eng.commit()
+                eng.reopen()
+                eng.search(probe)  # warm: JIT + upload outside the timer
+                last = len(docs) - ACK_BATCH_DOCS
+                for i in range(ACK_BASE_DOCS, last, ACK_BATCH_DOCS):
+                    eng.add_documents(docs[i : i + ACK_BATCH_DOCS])
+                eng.reopen()       # the NRT reader keeps up with the tail
+                eng.search(probe)  # (visibility work for it sits outside
+                                   # the timer, as in steady-state serving)
+                eng.add_documents(docs[last:])  # the final acked batch
+                t0 = time.perf_counter()
+                if mode == "flush":
+                    eng.manager.maybe_reopen(force_flush=True)
+                else:
+                    eng.reopen()
+                eng.search(probe)
+                if rep > 0:  # rep 0 is the warm lap
+                    lat.append(time.perf_counter() - t0)
+                eng.directory.close()
+            finally:
+                if path is not None:
+                    shutil.rmtree(path, ignore_errors=True)
+        out[f"{mode}_us"] = float(np.percentile(lat, 50) * 1e6)
+    out["speedup"] = out["flush_us"] / out["live_us"]
+    return out
+
+
+def run_live_parity() -> bool:
+    """Six-family parity bit: buffer-resident results == flush-then-search
+    on the same corpus (ram; the per-kind matrix lives in the test suite)."""
+    from repro.core.search import (
+        BooleanQuery,
+        FacetQuery,
+        PhraseQuery,
+        RangeQuery,
+        SortQuery,
+    )
+
+    docs = _ack_corpus(600)
+    toks = [_word(i) for i in (1, 2, 3, 20)]
+    queries = [
+        TermQuery("body", toks[0]),
+        BooleanQuery((TermQuery("body", toks[0]), TermQuery("body", toks[1])), "and"),
+        PhraseQuery("body", (toks[0], toks[1])),
+        RangeQuery("month", 3, 7),
+        SortQuery(TermQuery("body", toks[2]), "timestamp"),
+        FacetQuery(TermQuery("body", toks[3]), "month", 12),
+    ]
+    eng = SearchEngine("ram")
+    for fields, dv in docs[:400]:
+        eng.add(fields, dv)
+    eng.flush()
+    eng.commit()
+    for fields, dv in docs[400:]:
+        eng.add(fields, dv)
+    eng.reopen()
+    live = eng.search_batch(queries, k=20)
+    eng.flush()
+    eng.reopen()
+    flushed = eng.search_batch(queries, k=20)
+    for a, b in zip(live, flushed):
+        if a.total_hits != b.total_hits:
+            return False
+        if not np.array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids)):
+            return False
+        if not np.array_equal(np.asarray(a.scores), np.asarray(b.scores)):
+            return False
+    return True
+
+
+def run_smoke(out_path: str = BENCH_SEARCH_JSON) -> dict:
+    """Search-at-ack rows merged into ``BENCH_search.json``.
+
+    The file already holds ``search_bench.run_smoke``'s families/roofline
+    payload (CI runs that first); this adds the ``nrt`` block and rewrites.
+    Raises when the live path loses its >=10x ram margin or parity breaks —
+    the same loud-gate convention as the fused-term floor."""
+    rows = {kind: run_ack_to_visible(kind) for kind in ACK_KINDS}
+    parity = run_live_parity()
+    payload = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            payload = json.load(f)
+    payload["nrt"] = {
+        "tail_docs": ACK_TAIL_DOCS,
+        "nrt_ack_to_visible_us": {k: round(r["live_us"], 1) for k, r in rows.items()},
+        "flush_reopen_us": {k: round(r["flush_us"], 1) for k, r in rows.items()},
+        "ack_speedup_vs_flush": {k: round(r["speedup"], 2) for k, r in rows.items()},
+        "live_search_parity": 1.0 if parity else 0.0,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    for k, r in rows.items():
+        print(
+            f"nrt_smoke,ack_to_visible,{k},{r['live_us']:.0f},us_p50"
+            f";flush_reopen_us={r['flush_us']:.0f}"
+            f",speedup={r['speedup']:.1f}x,tail={r['tail_docs']}",
+            flush=True,
+        )
+    print(
+        f"nrt_smoke,gate,live_search_parity={int(parity)}"
+        f",ram_speedup={rows['ram']['speedup']:.1f}x,floor={ACK_SPEEDUP_GATE}x",
+        flush=True,
+    )
+    if not parity:
+        raise SystemExit("nrt smoke gate FAILED: live_search_parity != 1")
+    if rows["ram"]["speedup"] < ACK_SPEEDUP_GATE:
+        raise SystemExit(
+            f"nrt smoke gate FAILED: ack-to-visible speedup "
+            f"{rows['ram']['speedup']:.1f}x < {ACK_SPEEDUP_GATE}x on ram"
+        )
+    return payload
+
+
 def run() -> List[Dict]:
     rows = []
     for freq in COMMIT_FREQS:
@@ -193,6 +365,15 @@ if __name__ == "__main__":
         metavar="N",
         help="sharded NRT rows: shards=1 vs shards=N per directory kind",
     )
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="ack-to-visible rows per kind, merged into BENCH_search.json "
+        "(>=10x live-vs-flush gate + parity gate)",
+    )
     args = ap.parse_args()
-    for line in main(shards=args.shards):
-        print(line)
+    if args.smoke:
+        run_smoke()
+    else:
+        for line in main(shards=args.shards):
+            print(line)

@@ -117,10 +117,15 @@ def run_smoke(out_path: str = BENCH_INGEST_JSON) -> dict:
 
 def run_smoke_search(out_path: str = BENCH_SEARCH_JSON) -> dict:
     """Search smoke -> BENCH_search.json (raises when the fused path loses
-    its >=2x batched-term margin over the unfused executors)."""
-    from benchmarks import search_bench
+    its >=2x batched-term margin over the unfused executors, when the
+    search-at-ack live path loses its >=10x ack-to-visible margin over
+    flush-reopen, or when live==flush parity breaks)."""
+    from benchmarks import nrt_bench, search_bench
 
-    payload = search_bench.run_smoke(out_path)
+    search_bench.run_smoke(out_path)
+    # merges the nrt_ack_to_visible_us / live_search_parity rows into the
+    # same file (and enforces its own loud gates)
+    payload = nrt_bench.run_smoke(out_path)
     print(f"# wrote {out_path}", file=sys.stderr)
     return payload
 

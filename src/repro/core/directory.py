@@ -133,8 +133,15 @@ class Directory(ABC):
         when this is False (``use_wal`` becomes a no-op)."""
         return False
 
-    def wal_append(self, meta: dict, arrays: Dict[str, np.ndarray]) -> int:
-        """Durably append one ingest record (ack = durable); returns seq."""
+    def wal_append(
+        self,
+        meta: dict,
+        arrays: Dict[str, np.ndarray],
+        live_root: Optional[int] = None,
+    ) -> int:
+        """Durably append one ingest record (ack = durable); returns seq.
+        ``live_root`` (byte path) publishes the live-index root block on
+        the same ack barrier — see ``repro.storage.live_index``."""
         raise NotImplementedError(f"{type(self).__name__} has no WAL")
 
     def wal_replay(self) -> List[Tuple[dict, Dict[str, np.ndarray]]]:
@@ -156,15 +163,20 @@ class Directory(ABC):
         return 0
 
     # -- storage reclamation -------------------------------------------------
-    def gc(self, live_names: List[str]) -> Dict[str, int]:
+    def gc(
+        self, live_names: List[str], live_heap_bytes: int = 0
+    ) -> Dict[str, int]:
         """Reclaim storage for segments not in ``live_names``.
 
         Called by the writer right after every commit (so ``live_names`` is
         exactly the set the new commit point references).  File path:
         delete unreferenced ``.seg``/``.liv`` files and prune superseded
         commit manifests.  Byte path: free TOC entries and compact the
-        persistent heap.  Returns ``{"reclaimed_bytes": int, "removed":
-        int}`` (plus implementation-specific counters).
+        persistent heap.  ``live_heap_bytes`` is heap storage the WRITER
+        still references outside the TOC — the live buffer index's
+        capacity arrays — which garbage accounting must treat as live
+        (ignored by non-heap kinds).  Returns ``{"reclaimed_bytes": int,
+        "removed": int}`` (plus implementation-specific counters).
         """
         return {"reclaimed_bytes": 0, "removed": 0}
 
@@ -507,7 +519,9 @@ class FSDirectory(Directory):
         return True
 
     # -- storage reclamation -------------------------------------------------
-    def gc(self, live_names: List[str]) -> Dict[str, int]:
+    def gc(
+        self, live_names: List[str], live_heap_bytes: int = 0
+    ) -> Dict[str, int]:
         """Delete files no commit point or live snapshot references.
 
         Runs right after a commit: prunes superseded ``segments_N``
@@ -834,13 +848,19 @@ class ByteAddressableDirectory(Directory):
     def supports_wal(self) -> bool:
         return True
 
-    def wal_append(self, meta: dict, arrays: Dict[str, np.ndarray]) -> int:
+    def wal_append(
+        self,
+        meta: dict,
+        arrays: Dict[str, np.ndarray],
+        live_root: Optional[int] = None,
+    ) -> int:
         """Durable ack: one record store + ONE barrier (which also flips
-        the chain head).  This is the paper-§4 mechanism applied to the
-        ingest buffer itself — durability at CPU-store cost, no file, no
-        fsync, no commit."""
+        the chain head, and — when the writer keeps a live buffer index in
+        this heap — the live-index root).  This is the paper-§4 mechanism
+        applied to the ingest buffer itself — durability at CPU-store
+        cost, no file, no fsync, no commit."""
         t0 = time.perf_counter()
-        seq = self._wal.append(meta, arrays)
+        seq = self._wal.append(meta, arrays, live_root=live_root)
         nbytes = sum(a.nbytes for a in arrays.values())
         self.clock.add_real("wal_append", time.perf_counter() - t0)
         self.clock.add_modeled(
@@ -862,7 +882,9 @@ class ByteAddressableDirectory(Directory):
         return self._wal.last_seq
 
     # -- storage reclamation -------------------------------------------------
-    def gc(self, live_names: List[str]) -> Dict[str, int]:
+    def gc(
+        self, live_names: List[str], live_heap_bytes: int = 0
+    ) -> Dict[str, int]:
         """Free TOC entries of dead segments; compact the heap when the
         garbage (dead allocations + superseded live bitmaps + retired WAL
         records) outweighs the live data.  Runs right after a commit, so
@@ -884,6 +906,9 @@ class ByteAddressableDirectory(Directory):
         # the unretired WAL tail is replayable state, not garbage: it gets
         # carried into any compacted heap (retired records do not)
         live_bytes += self._wal.live_bytes(after_seq=self._wal_retired)
+        # ...and so is the writer's live buffer index (rehomed into any
+        # compacted heap by the writer right after gc returns)
+        live_bytes += int(live_heap_bytes)
         dead_bytes = max(0, self.heap.tail - self.heap.HEADER - live_bytes)
         reclaimed = 0
         if dead_bytes > max(4096, live_bytes // 2):
@@ -1076,7 +1101,9 @@ class RAMDirectory(Directory):
             return True
         return False
 
-    def gc(self, live_names: List[str]) -> Dict[str, int]:
+    def gc(
+        self, live_names: List[str], live_heap_bytes: int = 0
+    ) -> Dict[str, int]:
         keep = set(live_names)
         reclaimed = 0
         removed = 0

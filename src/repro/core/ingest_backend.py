@@ -432,10 +432,18 @@ def _worker_main(conn, sid, kind, path, rollback_gen, stopwords, writer_kwargs, 
                 reply = s
             elif op == "poll":
                 # one round trip for the NRT probe: buffered count + the
-                # generation (the mirror pulls only when it moved)
-                reply = (int(w.buffered_docs), int(w.infos.generation))
+                # segment generation (the mirror pulls only when it moved)
+                # + the live generation (the mirror re-syncs its live-tail
+                # mirror only when THAT moved)
+                reply = (
+                    int(w.buffered_docs),
+                    int(w.infos.generation),
+                    int(w.live_generation),
+                )
             elif op == "sync":
                 reply = _sync_reply(w, payload)
+            elif op == "live":
+                reply = _live_sync_reply(w, payload)
             elif op == "busy":
                 reply = busy
             elif op == "fault":
@@ -474,6 +482,50 @@ def _sync_reply(w: IndexWriter, known: Optional[Sequence[str]]) -> dict:
     return {"generation": int(w.infos.generation), "segments": segs}
 
 
+def _live_sync_reply(w: IndexWriter, known: Optional[dict]) -> Optional[dict]:
+    """Incremental live-tail sync: ship only the buffer-column delta past
+    the mirror's watermarks.  ``known`` is the mirror's
+    ``{"epoch", "docs", "entries", "pos"}`` (None on first contact); an
+    epoch mismatch (the worker flushed, resetting the buffer) forces a
+    full resync from zero.  Returns None when the worker has no live
+    structure — the coordinator's reopen then falls back to flushing.
+
+    The slices are buffer-absolute, exactly what ``_live_append`` fed the
+    worker's own live index batch by batch; the mirror replays the whole
+    delta as ONE batch, which changes its block layout but not the
+    doc-ascending postings ``LiveSnapshot`` reads — parity holds.
+    """
+    live = w._live
+    if live is None:
+        return None
+    w._live_sync()  # worker defers DRAM appends until a reader shows up
+    epoch = int(w.live_epoch)
+    nd, ne, npos = int(live.n_docs), int(live.n_entries), int(live.n_pos)
+    d0 = n0 = p0 = 0
+    if (
+        known is not None
+        and int(known.get("epoch", -1)) == epoch
+        and int(known["docs"]) <= nd
+        and int(known["entries"]) <= ne
+        and int(known["pos"]) <= npos
+    ):
+        d0, n0, p0 = int(known["docs"]), int(known["entries"]), int(known["pos"])
+    th, dl, fr, po, ps = w._buf.columns()
+    return {
+        "epoch": epoch,
+        "gen": int(w.live_generation),
+        "base": (d0, n0, p0),
+        "th": np.asarray(th[n0:ne]),
+        "dl": np.asarray(dl[n0:ne]),
+        "fr": np.asarray(fr[n0:ne]),
+        "po": np.asarray(po[n0:ne]),
+        "ps": np.asarray(ps[p0:npos]),
+        "doc_lens": np.asarray(w._buf_doc_lens[d0:nd], dtype=np.int32),
+        "deletes": [(int(t), int(m)) for t, m in w._buf_deletes],
+        "dv": {k: list(v) for k, v in w._buf_dv.items()},
+    }
+
+
 class MirrorWriter:
     """Coordinator-side stand-in for a worker-owned ``IndexWriter``.
 
@@ -492,6 +544,13 @@ class MirrorWriter:
         self.merge_listeners: List[Any] = []  # merges happen in the worker
         self._segs: Dict[str, Segment] = {}
         self._infos = SegmentInfos.empty()
+        # live-tail mirror: a DRAM LiveIndex fed by the incremental "live"
+        # sync, so the coordinator's search stack sees the worker's acked
+        # tail without a flush (search-at-ack across the process boundary)
+        self._live_mirror = None
+        self._live_epoch = -1
+        self._live_snap = None  # memoized LiveSnapshot (keyed by its gen)
+        self._remote_live_gen = -1
         self.pull()
 
     # -- the SearcherManager surface ----------------------------------------
@@ -509,13 +568,60 @@ class MirrorWriter:
 
     @property
     def buffered_docs(self) -> int:
-        buffered, gen = self._backend.request(self.sid, "poll")
+        buffered, gen, live_gen = self._backend.request(self.sid, "poll")
         if gen != self._infos.generation:
             self.pull()
+        self._remote_live_gen = live_gen
         return buffered
+
+    def live_snapshot(self):
+        """``IndexWriter.live_snapshot`` across the process boundary: sync
+        the DRAM live-tail mirror up to the worker's watermarks, then hand
+        out a ``LiveSnapshot`` over it.  The snapshot is memoized on the
+        worker's live generation (which ``buffered_docs``' poll refreshes),
+        so the reopen steady state is one round trip, not a column ship."""
+        if (
+            self._live_snap is not None
+            and self._live_snap.generation == self._remote_live_gen
+        ):
+            return self._live_snap
+        known = None
+        if self._live_mirror is not None:
+            known = {
+                "epoch": self._live_epoch,
+                "docs": self._live_mirror.n_docs,
+                "entries": self._live_mirror.n_entries,
+                "pos": self._live_mirror.n_pos,
+            }
+        rep = self._backend.request(self.sid, "live", known)
+        if rep is None:  # worker's live structure degraded: mirror follows
+            self._live_mirror = None
+            self._live_snap = None
+            return None
+        from repro.core.query.live import LiveSnapshot
+        from repro.storage.live_index import LiveIndex
+
+        if rep["base"] == (0, 0, 0) or self._live_mirror is None:
+            self._live_mirror = LiveIndex()
+            self._live_epoch = int(rep["epoch"])
+        if len(rep["doc_lens"]) or len(rep["th"]):
+            self._live_mirror.append_batch(
+                rep["th"], rep["dl"], rep["fr"], rep["po"], rep["ps"],
+                rep["doc_lens"],
+            )
+        self._remote_live_gen = int(rep["gen"])
+        self._live_snap = LiveSnapshot(
+            self._live_mirror,
+            deletes=rep["deletes"],
+            dv={k: (v, len(v)) for k, v in rep["dv"].items()},
+            generation=int(rep["gen"]),
+        )
+        return self._live_snap
 
     def flush(self) -> None:
         self._backend.request(self.sid, "flush")
+        self._live_snap = None
+        self._remote_live_gen = -1
         self.pull()
 
     def stats(self) -> dict:

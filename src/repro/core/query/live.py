@@ -1,0 +1,404 @@
+"""Buffer-resident query execution: search the acked tail without a flush.
+
+``storage/live_index`` makes the uncommitted tail *addressable*; this module
+makes it *scoreable*.  The contract with the rest of the query stack is
+deliberately thin — no second executor is grown:
+
+* The live tail is materialized per planned family group as a **mini
+  Segment** (a real ``repro.core.segment.Segment``) holding only the
+  group's terms, CSR postings rebuilt doc-ascending from the live index's
+  block chains, positions only when the family needs them (phrase), the
+  buffered-delete mask as its live bitmap, and ``base_doc`` = the committed
+  doc count — so every executor in ``query/exec.py`` scores it unchanged.
+* BM25 statistics are merged across sources the same way ``CrossShardStats``
+  merges them across shards: the owning ``Searcher`` folds the tail's
+  doc/token counts into ``total_docs``/``avgdl`` and its ``doc_freq`` adds
+  the live df, then a ``_CombinedView`` (committed segments ∪ mini segment)
+  runs the ONE existing pass — scores and tie-breaks come out bit-identical
+  to flush-then-search.
+* Fused (Pallas) engines keep their committed-segment kernels: the
+  committed pass runs fused as ever, the mini segment runs through the
+  unfused executors, and :func:`merge_topdocs` folds the two top-k lists
+  with the same (score desc, doc asc) lexsort order the device merge uses.
+
+A ``LiveSnapshot`` is the point-in-time handle ``IndexWriter.live_snapshot``
+returns: watermarks (docs/entries/positions), the buffered-delete list, and
+lazily-padded doc-values columns.  Every read it serves is watermark-
+filtered, so a Searcher keeps its view while the writer keeps acking.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.analyzer import term_hash
+from repro.core.query.plan import bucket
+from repro.core.query.types import (
+    BooleanQuery,
+    FacetQuery,
+    PhraseQuery,
+    Query,
+    RangeQuery,
+    SortQuery,
+    TermQuery,
+    TopDocs,
+)
+from repro.core.segment import Segment
+
+LIVE_SEGMENT_NAME = "_live"
+
+
+class LiveSnapshot:
+    """Point-in-time view of the acked-but-unflushed tail.
+
+    Captures the live index's counters as watermarks at construction; all
+    reads are filtered against them, so appends (and in-place probe-table
+    mutation) after the snapshot are invisible.  Deletes are the writer's
+    buffered ``(term_hash, doc_watermark)`` pairs — the same Lucene
+    ordering rule ``flush`` applies, evaluated here at query time.
+    """
+
+    def __init__(
+        self,
+        index,
+        deletes: Sequence[Tuple[int, int]],
+        dv: Dict[str, Tuple[list, int]],
+        generation: int,
+    ) -> None:
+        self.index = index
+        self.generation = generation
+        self.n_docs = index.n_docs
+        self.total_tokens = index.total_tokens
+        self._wm_entries = index.n_entries
+        self._wm_pos = index.n_pos
+        self._deletes = [(int(th), int(wm)) for th, wm in deletes]
+        self._dv = dict(dv)  # key -> (column ref, length at snapshot)
+        self._postings: Dict[int, tuple] = {}
+        self._bitmap: Optional[np.ndarray] = None
+        self._dv_cols: Dict[str, np.ndarray] = {}
+
+    # -- reads ---------------------------------------------------------------
+    def postings(self, th: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Doc-ascending ``(docs, freqs, pos_offsets)`` at the snapshot
+        watermark (memoized: the delete mask and every group touching the
+        term share one chain walk)."""
+        r = self._postings.get(th)
+        if r is None:
+            r = self._postings[th] = self.index.postings(
+                th, wm_entries=self._wm_entries
+            )
+        return r
+
+    def df(self, th: int) -> int:
+        """Raw document frequency (deleted docs included — the same
+        convention flushed segments' ``term_df`` uses)."""
+        return len(self.postings(th)[0])
+
+    def doc_lens(self) -> np.ndarray:
+        return self.index.doc_lens(self.n_docs)
+
+    def positions(self) -> np.ndarray:
+        return self.index.positions(self._wm_pos)
+
+    def live_bitmap(self) -> np.ndarray:
+        """Buffered deletes as a live mask: a doc dies iff some delete's
+        term matches it AND the doc was buffered before the delete
+        (``doc < watermark``)."""
+        if self._bitmap is None:
+            live = np.ones(self.n_docs, dtype=bool)
+            for th, wm in self._deletes:
+                docs, _, _ = self.postings(th)
+                if len(docs):
+                    live[docs[docs < wm]] = False
+            self._bitmap = live
+        return self._bitmap
+
+    def has_dv(self, key: str) -> bool:
+        return key in self._dv
+
+    def dv_col(self, key: str) -> np.ndarray:
+        """Doc-values column zero-padded to the snapshot's doc count —
+        byte-for-byte what ``flush`` would bake into the segment.  Unknown
+        keys come back as zeros (what a flush of this buffer would imply
+        for a column it never saw)."""
+        c = self._dv_cols.get(key)
+        if c is None:
+            ref = self._dv.get(key)
+            if ref is None:
+                c = np.zeros(self.n_docs, dtype=np.int32)
+            else:
+                col, ln = ref
+                c = np.asarray(
+                    list(col[:ln]) + [0] * (self.n_docs - ln), dtype=np.int32
+                )
+            self._dv_cols[key] = c
+        return c
+
+
+# ---------------------------------------------------------------------------
+# Mini-segment materialization
+# ---------------------------------------------------------------------------
+
+
+def query_term_hashes(query: Query) -> List[int]:
+    """Term hashes a single query needs from the live tail."""
+    if isinstance(query, TermQuery):
+        return [term_hash(query.field, query.token)]
+    if isinstance(query, BooleanQuery):
+        return [term_hash(t.field, t.token) for t in query.terms]
+    if isinstance(query, PhraseQuery):
+        return [term_hash(query.field, tok) for tok in query.tokens]
+    if isinstance(query, SortQuery):
+        return [term_hash(query.term.field, query.term.token)]
+    if isinstance(query, FacetQuery):
+        if query.term is None:
+            return []
+        return [term_hash(query.term.field, query.term.token)]
+    if isinstance(query, RangeQuery):
+        return []
+    raise TypeError(f"unsupported query type: {type(query).__name__}")
+
+
+def group_term_hashes(group) -> List[int]:
+    """Term hashes one planned family group needs from the live tail."""
+    hs: List[int] = []
+    for q in group.queries:
+        hs.extend(query_term_hashes(q))
+    return hs
+
+
+def materialize_segment(
+    snapshot: LiveSnapshot,
+    hashes: Sequence[int],
+    with_positions: bool = False,
+    base_doc: int = 0,
+) -> Segment:
+    """Build a real ``Segment`` over the live tail, restricted to
+    ``hashes`` (the only terms the caller's group scores).
+
+    CSR layout matches ``build_segment_columnar``'s conventions exactly:
+    ``term_ids`` sorted ascending, postings doc-ascending per term,
+    ``term_df`` raw (deleted docs included), positions gathered only when
+    requested — so every executor and oracle scorer runs on it unchanged,
+    and scores are bit-identical to what a flush of the same buffer yields.
+
+    The per-doc arrays (``doc_lens``, ``live``, lazily the dv columns) are
+    padded to the power-of-two ``bucket`` of the doc count: the tail grows
+    with every acked batch, and exact shapes would force an XLA recompile
+    per batch on the read path — bucketed shapes recompile only O(log n)
+    times.  Padded rows are dead (``live`` False), and every executor
+    masks candidates, counts, and hit totals through ``live``, so padding
+    is invisible in results.
+    """
+    per_term = []
+    for th in sorted(set(int(h) for h in hashes)):
+        docs, freqs, poffs = snapshot.postings(th)
+        if len(docs):
+            per_term.append((th, docs, freqs, poffs))
+    n_terms = len(per_term)
+    if n_terms:
+        term_ids = np.asarray([t[0] for t in per_term], dtype=np.int64)
+        term_df = np.asarray([len(t[1]) for t in per_term], dtype=np.int32)
+        postings_docs = np.concatenate([t[1] for t in per_term])
+        postings_freqs = np.concatenate([t[2] for t in per_term])
+        src_pos = np.concatenate([t[3] for t in per_term])
+        offsets = np.zeros(n_terms + 1, dtype=np.int32)
+        np.cumsum(term_df, out=offsets[1:])
+    else:
+        term_ids = np.zeros(0, dtype=np.int64)
+        term_df = np.zeros(0, dtype=np.int32)
+        postings_docs = np.zeros(0, dtype=np.int32)
+        postings_freqs = np.zeros(0, dtype=np.int32)
+        src_pos = np.zeros(0, dtype=np.int64)
+        offsets = np.zeros(1, dtype=np.int32)
+    nnz = len(postings_docs)
+    if with_positions and nnz:
+        lens = postings_freqs.astype(np.int64)
+        pos_offsets = np.zeros(nnz + 1, dtype=np.int32)
+        pos_offsets[1:] = np.cumsum(lens)
+        total = int(pos_offsets[-1])
+        row = np.repeat(np.arange(nnz, dtype=np.int64), lens)
+        within = np.arange(total, dtype=np.int64) - pos_offsets[:-1].astype(
+            np.int64
+        )[row]
+        positions = snapshot.positions()[src_pos[row] + within]
+        positions = np.ascontiguousarray(positions, dtype=np.int32)
+    else:
+        pos_offsets = np.zeros(nnz + 1, dtype=np.int32)
+        positions = np.zeros(0, dtype=np.int32)
+    n_docs = snapshot.n_docs
+    n_padded = bucket(max(n_docs, 1))
+    doc_lens = np.ones(n_padded, dtype=np.int32)  # 1, not 0: inert in BM25
+    doc_lens[:n_docs] = snapshot.doc_lens()
+    live_mask = np.zeros(n_padded, dtype=bool)
+    live_mask[:n_docs] = snapshot.live_bitmap()
+    return Segment(
+        name=LIVE_SEGMENT_NAME,
+        base_doc=base_doc,
+        term_ids=term_ids,
+        term_df=term_df,
+        postings_offsets=offsets,
+        postings_docs=np.ascontiguousarray(postings_docs, dtype=np.int32),
+        postings_freqs=np.ascontiguousarray(postings_freqs, dtype=np.int32),
+        pos_offsets=pos_offsets,
+        positions=positions,
+        doc_lens=doc_lens,
+        live=live_mask,
+        doc_values={},  # served lazily by the searcher's live device dict
+    )
+
+
+# ---------------------------------------------------------------------------
+# Combined execution context
+# ---------------------------------------------------------------------------
+
+
+class _LiveDev(dict):
+    """Device-side staging for the mini segment, OUTSIDE the shared
+    ``SegmentDeviceCache`` (the cache's store and its pinned upload stats
+    must never see the transient tail).  Doc-values columns upload lazily
+    on first touch, keyed ``dv.<field>``."""
+
+    def __init__(self, snapshot: LiveSnapshot, seg: Segment) -> None:
+        import jax.numpy as jnp
+
+        super().__init__()
+        self._snapshot = snapshot
+        self._n_padded = len(seg.doc_lens)  # bucket-padded (see above)
+        self["doc_lens"] = jnp.asarray(np.asarray(seg.doc_lens))
+        self["live"] = jnp.asarray(np.asarray(seg.live))
+
+    def __missing__(self, key: str):
+        if key.startswith("dv."):
+            import jax.numpy as jnp
+
+            col = self._snapshot.dv_col(key[3:])
+            if len(col) < self._n_padded:  # padded rows are dead: value 0
+                col = np.pad(col, (0, self._n_padded - len(col)))
+            val = jnp.asarray(col)
+            self[key] = val
+            return val
+        raise KeyError(key)
+
+
+class _CombinedView:
+    """Duck-typed executor context: (committed segments ∪ live mini
+    segment) behind the existing single-pass executors.  BM25 statistics
+    (``idf``/``avgdl``/``total_docs``) delegate to the owning Searcher,
+    which already folded the tail in — the cross-source stats merge, same
+    shape as ``CrossShardStats``."""
+
+    def __init__(
+        self, parent, segments: List[Segment], live_seg: Segment,
+        use_pallas: bool = False,
+    ) -> None:
+        self._parent = parent
+        self._live_seg = live_seg
+        self.segments = segments
+        self.use_pallas = use_pallas
+        self._live = None  # the tail is already IN self.segments
+
+    @property
+    def total_docs(self) -> int:
+        return self._parent.total_docs
+
+    @property
+    def avgdl(self) -> float:
+        return self._parent.avgdl
+
+    @property
+    def k1(self) -> float:
+        return self._parent.k1
+
+    @property
+    def b(self) -> float:
+        return self._parent.b
+
+    def idf(self, q) -> float:
+        return self._parent.idf(q)
+
+    def doc_freq(self, q) -> int:
+        return self._parent.doc_freq(q)
+
+    def _seg_dev(self, seg):
+        if seg is self._live_seg:
+            return self._parent._live_dev(seg)
+        return self._parent._seg_dev(seg)
+
+    def _merge(self, per_seg, k):
+        return self._parent._merge(per_seg, k)
+
+    def _padded_postings(self, seg, q, bucket):
+        return self._parent._padded_postings(seg, q, bucket)
+
+    def search_single(self, query: Query, k: int = 10) -> TopDocs:
+        from repro.core.search import Searcher
+
+        return Searcher.search_single(self, query, k)
+
+    def __getattr__(self, name: str):
+        # the reference oracle scorers (``_search_*``) are reused verbatim,
+        # re-bound to this view so they walk the combined segment list
+        if name.startswith("_search_"):
+            from repro.core.search import Searcher
+
+            return getattr(Searcher, name).__get__(self)
+        raise AttributeError(name)
+
+
+# ---------------------------------------------------------------------------
+# Two-source top-k merge (fused committed pass ∪ unfused live pass)
+# ---------------------------------------------------------------------------
+
+
+def merge_topdocs(a: TopDocs, b: TopDocs, k: int, kind: str) -> TopDocs:
+    """Fold two per-source top-k lists into one, preserving the device
+    merge's order contract (score descending, doc ascending on ties).
+    Each source already kept its k best, so the union's top k is exact."""
+    if kind == "facet":
+        facets = np.asarray(a.facets, dtype=np.float64) + np.asarray(
+            b.facets, dtype=np.float64
+        )
+        order = np.argsort(-facets, kind="stable")[:k]
+        return TopDocs(
+            a.total_hits + b.total_hits,
+            order.astype(np.int64),
+            facets[order].astype(np.float32),
+            facets=facets,
+        )
+    ids = np.concatenate(
+        [np.asarray(a.doc_ids, dtype=np.int64), np.asarray(b.doc_ids, dtype=np.int64)]
+    )
+    scores = np.concatenate(
+        [np.asarray(a.scores, dtype=np.float32), np.asarray(b.scores, dtype=np.float32)]
+    )
+    order = np.lexsort((ids, -scores))[:k]
+    return TopDocs(a.total_hits + b.total_hits, ids[order], scores[order])
+
+
+def run_group(searcher, group, k: int) -> List[TopDocs]:
+    """Execute one family group over (committed ∪ live).
+
+    Unfused engines (and phrase, whose scorer is host-side everywhere) run
+    ONE combined pass — the mini segment rides the normal per-segment merge,
+    so results are bit-identical to flush-then-search.  Fused engines keep
+    their committed-segment kernels: committed fused, live unfused, folded
+    by :func:`merge_topdocs`.
+    """
+    from repro.core.query.exec import execute_group
+
+    lseg = searcher._live_segment_for(group)
+    if group.kind == "phrase" or not searcher.use_pallas:
+        view = _CombinedView(
+            searcher, list(searcher.segments) + [lseg], lseg, use_pallas=False
+        )
+        return execute_group(view, group, k)
+    committed = execute_group(searcher, group, k)
+    lview = _CombinedView(searcher, [lseg], lseg, use_pallas=False)
+    live_tds = execute_group(lview, group, k)
+    return [
+        merge_topdocs(c, l, k, group.kind)
+        for c, l in zip(committed, live_tds)
+    ]

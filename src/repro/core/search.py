@@ -99,6 +99,7 @@ class Searcher:
         b: float = B_DEFAULT,
         use_pallas: bool = False,
         device_cache: Optional[SegmentDeviceCache] = None,
+        live=None,
     ) -> None:
         # a SegmentInfos IS the point-in-time contract: the writer only
         # publishes new snapshots, never mutates one this view holds
@@ -113,7 +114,23 @@ class Searcher:
         self.use_pallas = use_pallas
         self.total_docs = sum(s.n_docs for s in self.segments)
         tokens = sum(s.total_tokens for s in self.segments)
+        # live buffer tail (a ``repro.core.query.live.LiveSnapshot``): its
+        # docs/tokens fold into the collection statistics exactly like a
+        # flushed segment's would, so BM25 comes out bit-identical to
+        # flush-then-search (the cross-source merge CrossShardStats does
+        # across shards, applied across committed/live here)
+        self._live = live if (live is not None and live.n_docs) else None
+        self._live_base = self.total_docs  # committed docs = tail's base
+        if self._live is not None:
+            self.total_docs += self._live.n_docs
+            tokens += self._live.total_tokens
+        self._local_tokens = tokens  # what CrossShardStats sums per shard
         self.avgdl = float(tokens) / max(self.total_docs, 1)
+        # per-group mini segments over the tail + their device staging
+        # (kept OUT of the shared SegmentDeviceCache: the transient tail
+        # must not pollute its store or its pinned upload stats)
+        self._live_segs: Dict[tuple, Segment] = {}
+        self._live_dev_map: Optional[Dict[str, jnp.ndarray]] = None
         # explicit None check: an empty cache is falsy (it has __len__)
         # (fused searchers get a tiled cache so staging pre-tiles the CSR)
         self.device_cache = (
@@ -132,6 +149,44 @@ class Searcher:
     def _seg_dev(self, seg: Segment) -> Dict[str, jnp.ndarray]:
         return self.device_cache.get(seg, fallback=self._transient_dev)
 
+    def _live_dev(self, seg: Segment) -> Dict[str, jnp.ndarray]:
+        """Device staging for the live tail's mini segments — private to
+        this Searcher, never entered into the shared cache.  All minis of
+        one snapshot share doc_lens/live/dv, so one dict serves them all."""
+        if self._live_dev_map is None:
+            from repro.core.query.live import _LiveDev
+
+            self._live_dev_map = _LiveDev(self._live, seg)
+        return self._live_dev_map
+
+    def _live_segment_for(self, group) -> Segment:
+        from repro.core.query import live as _lv
+
+        hs = _lv.group_term_hashes(group)
+        key = (tuple(sorted(set(hs))), group.kind == "phrase")
+        seg = self._live_segs.get(key)
+        if seg is None:
+            seg = _lv.materialize_segment(
+                self._live, key[0], with_positions=key[1],
+                base_doc=self._live_base,
+            )
+            self._live_segs[key] = seg
+        return seg
+
+    def _live_segment_for_query(self, query: Query) -> Segment:
+        from repro.core.query import live as _lv
+
+        hs = _lv.query_term_hashes(query)
+        key = (tuple(sorted(set(hs))), isinstance(query, PhraseQuery))
+        seg = self._live_segs.get(key)
+        if seg is None:
+            seg = _lv.materialize_segment(
+                self._live, key[0], with_positions=key[1],
+                base_doc=self._live_base,
+            )
+            self._live_segs[key] = seg
+        return seg
+
     # -- stats ----------------------------------------------------------------
     def doc_freq(self, q: TermQuery) -> int:
         th = term_hash(q.field, q.token)
@@ -142,6 +197,8 @@ class Searcher:
                 i = seg.term_slot(th)
                 if i >= 0:
                     df += int(seg.term_df[i])
+            if self._live is not None:
+                df += self._live.df(th)  # raw, like term_df (deleted incl.)
             self._df_cache[th] = df
         return df
 
@@ -171,13 +228,31 @@ class Searcher:
         plan = plan_batch(queries)
         results: List[Optional[TopDocs]] = [None] * plan.n_queries
         for group in plan.groups:
-            for qi, td in zip(group.indices, execute_group(self, group, k)):
+            for qi, td in zip(group.indices, self.execute_group(group, k)):
                 results[qi] = td
         return results  # type: ignore[return-value]
+
+    def execute_group(self, group, k: int) -> List[TopDocs]:
+        """Execute one planned family group: committed segments, plus the
+        live buffer tail when this view holds one (``query/live``)."""
+        if self._live is None:
+            return execute_group(self, group, k)
+        from repro.core.query.live import run_group
+
+        return run_group(self, group, k)
 
     def search_single(self, query: Query, k: int = 10) -> TopDocs:
         """The sequential per-query path (one dispatch per segment, heapq
         merge on host).  Kept as the oracle for the batched executors."""
+        if self._live is not None:
+            from repro.core.query.live import _CombinedView
+
+            lseg = self._live_segment_for_query(query)
+            view = _CombinedView(
+                self, list(self.segments) + [lseg], lseg,
+                use_pallas=self.use_pallas,
+            )
+            return view.search_single(query, k)
         if isinstance(query, TermQuery):
             return self._search_term(query, k)
         if isinstance(query, BooleanQuery):

@@ -51,7 +51,7 @@ from repro.core.analyzer import Analyzer
 from repro.core.ingest_backend import BACKENDS, make_backend
 from repro.core.nrt import SearcherManager
 from repro.core.query.cache import SegmentDeviceCache
-from repro.core.query.exec import _finalize_scored, execute_group, merge_topk
+from repro.core.query.exec import _finalize_scored, merge_topk
 from repro.core.query.plan import FamilyGroup, plan_batch
 from repro.core.query.types import Query, TopDocs
 from repro.core.search import Searcher
@@ -359,12 +359,12 @@ class CrossShardStats:
 
     def __init__(self, searchers: Sequence["ShardSearcher"]) -> None:
         self._searchers = list(searchers)
-        self.total_docs = sum(
-            seg.n_docs for s in self._searchers for seg in s.segments
-        )
-        tokens = sum(
-            seg.total_tokens for s in self._searchers for seg in s.segments
-        )
+        # per-shard totals come from the views themselves: a Searcher has
+        # already folded its live buffer tail (docs AND tokens) into
+        # total_docs/_local_tokens, so the cross-shard stats see the tail
+        # exactly like flushed segments — committed ∪ live, all shards
+        self.total_docs = sum(s.total_docs for s in self._searchers)
+        tokens = sum(s._local_tokens for s in self._searchers)
         self.avgdl = float(tokens) / max(self.total_docs, 1)
         self._df_cache: Dict[Tuple[str, str], int] = {}
         for s in self._searchers:
@@ -415,6 +415,19 @@ class ShardSearcher(Searcher):
                 )
                 for seg in self.segments
             ]
+            if self._live is not None:
+                # the live tail's docs sit at shard-global ids
+                # [_live_base, _live_base + n_docs); routed docs carry
+                # their external id in the buffered dv column
+                if self._live.has_dv(EXT_ID_FIELD):
+                    cols.append(
+                        self._live.dv_col(EXT_ID_FIELD).astype(np.int64)
+                    )
+                else:
+                    cols.append(
+                        self._live_base
+                        + np.arange(self._live.n_docs, dtype=np.int64)
+                    )
             self._ext_ids = (
                 np.concatenate(cols) if cols else np.empty(0, dtype=np.int64)
             )
@@ -446,7 +459,9 @@ class ShardedSearcher:
         plan = plan_batch(queries)
         results: List[Optional[TopDocs]] = [None] * plan.n_queries
         for group in plan.groups:
-            shard_tds = [execute_group(s, group, k) for s in self.searchers]
+            # instance dispatch: a shard view holding a live tail scores
+            # (committed ∪ live) through repro.core.query.live
+            shard_tds = [s.execute_group(group, k) for s in self.searchers]
             for qi, td in zip(
                 group.indices, self._merge_shards(group, shard_tds, k)
             ):
@@ -528,11 +543,15 @@ class ShardedSearcherManager:
         ]
         self.reopen_times: List[float] = []
         self._current: Optional[ShardedSearcher] = None
-        self._view_gens: List[int] = []
+        self._view_gens: List[tuple] = []
         self._rebind()
 
     def _rebind(self) -> None:
-        gens = [m.infos.generation for m in self.managers]
+        # a shard's view must refresh when EITHER its segment snapshot or
+        # its live-tail snapshot moved (the pair is the visibility token)
+        gens = [
+            (m.infos.generation, m._live_token) for m in self.managers
+        ]
         if self._current is not None and gens == self._view_gens:
             return  # nothing changed anywhere: current views stay valid
         old_views = self._current.searchers if self._current is not None else []
@@ -543,14 +562,18 @@ class ShardedSearcherManager:
                 analyzer=m.writer.analyzer,
                 use_pallas=m.use_pallas,
                 device_cache=m.device_cache,
+                live=m.live,
             )
             if sid < len(old_views) and gens[sid] == self._view_gens[sid]:
                 # unchanged shard: its snapshot is the same, so the fresh
                 # view (new stats binding) inherits the old view's memos —
-                # external-id map and any transient device stagings —
-                # keeping per-reopen host work proportional to what changed
+                # external-id map, transient device stagings, and the live
+                # tail's mini segments + device dict — keeping per-reopen
+                # host work proportional to what changed
                 v._ext_ids = old_views[sid]._ext_ids
                 v._transient_dev = old_views[sid]._transient_dev
+                v._live_segs = old_views[sid]._live_segs
+                v._live_dev_map = old_views[sid]._live_dev_map
             views.append(v)
         CrossShardStats(views)  # binds itself onto the views
         self._current = ShardedSearcher(views)
@@ -562,7 +585,7 @@ class ShardedSearcherManager:
         return self._current
 
     def maybe_reopen(
-        self, shard: Optional[int] = None, force_flush: bool = True
+        self, shard: Optional[int] = None, force_flush: bool = False
     ) -> float:
         targets = range(len(self.managers)) if shard is None else [shard]
         dts = [self.managers[i].maybe_reopen(force_flush) for i in targets]

@@ -38,6 +38,7 @@ See ``repro.storage.wal`` for the record format and torn-write rules.
 from __future__ import annotations
 
 import time
+import weakref
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -123,8 +124,23 @@ class IndexWriter:
         # (term hash, buffer watermark): a buffered delete applies only to
         # docs buffered BEFORE the delete_by_term call (Lucene semantics)
         self._buf_deletes: List[Tuple[int, int]] = []
+        # buffered docs already masked by a delete (dedup for the count
+        # delete_by_term returns on the live path)
+        self._buf_dead: set = set()
         # maintained incrementally by add_document (O(1) ram_bytes_used)
         self._ram_bytes = 0
+
+        # live buffer index: the acked tail, searchable before any flush
+        # (repro.storage.live_index).  Heap-resident only when acks are
+        # durable there (the WAL path) — the non-WAL byte commit stays
+        # zero-barrier / zero-heap-traffic until flush.  Mirrors the
+        # columnar buffer per batch; the reference dict-buffer path has
+        # no live structure (SearcherManager falls back to flushing).
+        self._live = self._new_live_index()
+        self._live_expected = None  # buffer counters the live index owes
+        self._live_loans: List[weakref.ref] = []  # snapshots over _live
+        self._live_gen = 0
+        self._live_epoch = 0  # buffer resets (flushes) — mirrors resync on it
 
         self._infos = SegmentInfos.empty()
         self._seg_counter = 0
@@ -154,6 +170,128 @@ class IndexWriter:
     def merge_factor(self, value: int) -> None:
         self.merge_policy.segments_per_tier = value
         self.merge_policy.max_merge_at_once = value
+
+    # ------------------------------------------------------------------
+    def _new_live_index(self):
+        """Fresh live index bound to the right arena: heap-resident when
+        the WAL owns the ack barrier (the root rides it for free), DRAM
+        otherwise (ram/fs kinds — and the non-WAL byte path, whose commit
+        is pinned to zero barriers before flush)."""
+        if self.use_reference_ingest:
+            return None
+        from repro.storage.live_index import HeapArena, LiveIndex
+
+        if self._wal_on:
+            return LiveIndex(HeapArena(self.directory.heap))
+        return LiveIndex()
+
+    def _live_append(self, d0: int, n0: int, p0: int) -> Optional[int]:
+        """Account the batch's buffer delta for the live index; returns
+        the root offset the ack barrier should publish (None when there is
+        no barrier to feed).  A lockstep violation (someone grew the buffer
+        behind our back) degrades to no live index until the next flush
+        resets it — SearcherManager then falls back to flush-on-reopen.
+
+        Heap-resident (WAL) live indexes append eagerly: the batch's ack
+        barrier must publish a root covering it.  DRAM live indexes defer —
+        the pending span is applied as ONE ``append_batch`` when something
+        actually reads the structure (``_live_sync``), keeping the
+        single-doc ingest hot path free of per-add index maintenance."""
+        if self._live is None:
+            return None
+        expect = self._live_expected
+        if expect is None:
+            expect = (
+                self._live.n_docs, self._live.n_entries, self._live.n_pos
+            )
+        if (d0, n0, p0) != expect:
+            self._live = None
+            self._live_expected = None
+            self._live_gen += 1
+            return None
+        self._live_expected = (
+            len(self._buf_doc_lens), len(self._buf), self._buf.n_positions
+        )
+        self._live_gen += 1
+        if self._live.arena.is_heap:
+            return self._live_sync()
+        return None
+
+    def _live_sync(self) -> Optional[int]:
+        """Apply the pending *accounted* buffer span (one batch) and return
+        the published root offset (None on DRAM arenas).  Only the span
+        ``_live_append`` vouched for is applied — buffer growth it never
+        saw stays invisible until the next append degrades the index."""
+        if self._live is None:
+            return None
+        if self._live_expected is not None:
+            d0, n0, p0 = (
+                self._live.n_docs, self._live.n_entries, self._live.n_pos
+            )
+            nd, ne, npos = self._live_expected
+            if (nd, ne, npos) != (d0, n0, p0):
+                th, dl, fr, po, ps = self._buf.columns()
+                self._live.append_batch(
+                    th[n0:ne], dl[n0:ne], fr[n0:ne], po[n0:ne], ps[p0:npos],
+                    np.asarray(self._buf_doc_lens[d0:nd], dtype=np.int32),
+                )
+        return self._live.publish_root()
+
+    def _detach_live(self) -> None:
+        """Retire the current live index (flush reset).  When no handed-out
+        snapshot still reads it, the capacity allocations are recycled in
+        place (``reset``) — per-flush heap garbage and re-doubling cost
+        both drop to ~zero in steady state.  Otherwise outstanding
+        snapshots keep reading the old arrays — pin_views materializes the
+        heap views so they survive even a later compaction — and a fresh
+        index starts over for the next buffer lifetime."""
+        loaned = any(r() is not None for r in self._live_loans)
+        self._live_loans = []
+        if self._live is not None and not loaned:
+            self._live.reset()
+        else:
+            if self._live is not None and self._live.arena.is_heap:
+                self._live.pin_views()
+            self._live = self._new_live_index()
+        self._live_expected = None
+        self._buf_dead = set()
+        self._live_gen += 1
+        self._live_epoch += 1
+
+    def live_snapshot(self):
+        """Point-in-time handle over the acked-but-unflushed tail for the
+        search stack (``repro.core.query.live``); None when this writer
+        has no live structure (reference ingest, or a degraded mirror)."""
+        if self._live is None:
+            return None
+        self._live_sync()  # DRAM arenas defer appends to first read
+        if self._live is None:
+            return None
+        from repro.core.query.live import LiveSnapshot
+
+        snap = LiveSnapshot(
+            self._live,
+            deletes=list(self._buf_deletes),
+            dv={k: (v, len(v)) for k, v in self._buf_dv.items()},
+            generation=self._live_gen,
+        )
+        # loan ledger: _detach_live may only recycle the allocations once
+        # every snapshot over them is gone
+        self._live_loans = [r for r in self._live_loans if r() is not None]
+        self._live_loans.append(weakref.ref(snap))
+        return snap
+
+    @property
+    def live_generation(self) -> int:
+        """Bumped on every live-tail visibility change (append, delete,
+        flush reset) — what the NRT manager watches on the no-flush path."""
+        return self._live_gen
+
+    @property
+    def live_epoch(self) -> int:
+        """Buffer lifetime counter (bumped per flush reset) — how a
+        process-backend mirror detects it must resync from scratch."""
+        return self._live_epoch
 
     # ------------------------------------------------------------------
     def _recover(self) -> None:
@@ -198,6 +336,7 @@ class IndexWriter:
             if meta["kind"] == "delete":
                 self._apply_delete(int(meta["th"]))
             else:
+                n0, p0 = len(self._buf), self._buf.n_positions
                 self._ram_bytes += self._buf.extend_raw(
                     arrays["term_hash"],
                     arrays["doc_local"],
@@ -215,6 +354,10 @@ class IndexWriter:
                     self._append_dv(int(dloc), key, float(val))
                     if key == EXT_ID_FIELD:
                         self.replay_max_ext = max(self.replay_max_ext, int(val))
+                # replaying the same batches in the same per-batch grouping
+                # rebuilds the live index bit-identically (block layout and
+                # all); no root publish here — the next ack barrier covers it
+                self._live_append(base, n0, p0)
             self._wal_last_seq = int(meta["seq"])
             self.wal_stats["replayed"] += 1
         # seq numbering continues above anything the durable chain holds
@@ -247,7 +390,10 @@ class IndexWriter:
         """
         if self._wal_on:
             return self.add_documents([(fields, doc_values)])[0]
+        d0 = len(self._buf_doc_lens)
+        n0, p0 = len(self._buf), self._buf.n_positions
         gid = self._append_document(fields, doc_values)
+        self._live_append(d0, n0, p0)
         self._maybe_autoflush()
         return gid
 
@@ -265,7 +411,10 @@ class IndexWriter:
         if not docs:
             return []
         if not self._wal_on:
+            d0 = len(self._buf_doc_lens)
+            n0, p0 = len(self._buf), self._buf.n_positions
             gids = [self._append_document(f, dv) for f, dv in docs]
+            self._live_append(d0, n0, p0)
             self._maybe_autoflush()
             return gids
         d0 = len(self._buf_doc_lens)
@@ -278,7 +427,11 @@ class IndexWriter:
             if dv:
                 for k, v in dv.items():
                     dv_log.append((k, local, v))
-        self._wal_append_batch(d0, n0, p0, dv_log)
+        # live index first: its root block must be stored before the ack
+        # barrier (inside _wal_append_batch) publishes it — search-at-ack
+        # rides the batch's ONE barrier, adding zero of its own
+        live_root = self._live_append(d0, n0, p0)
+        self._wal_append_batch(d0, n0, p0, dv_log, live_root=live_root)
         # the autoflush check runs per batch, after the ack: a WAL record
         # must describe one contiguous run of the buffer it was logged into
         self._maybe_autoflush()
@@ -335,7 +488,12 @@ class IndexWriter:
             self.flush()
 
     def _wal_append_batch(
-        self, d0: int, n0: int, p0: int, dv_log: List[Tuple[str, int, float]]
+        self,
+        d0: int,
+        n0: int,
+        p0: int,
+        dv_log: List[Tuple[str, int, float]],
+        live_root: Optional[int] = None,
     ) -> None:
         """Log the batch's buffer delta (the ack's durability point).
 
@@ -369,6 +527,7 @@ class IndexWriter:
                 "dv_doc": dv_doc,
                 "dv_val": dv_val,
             },
+            live_root=live_root,
         )
         self.wal_stats["appends"] += 1
 
@@ -406,7 +565,22 @@ class IndexWriter:
                 replaced[seg.name] = seg.with_live(live)
                 self.directory.write_live(seg.name, live)
                 n += len(docs)
-        self._buf_deletes.append((th, len(self._buf_doc_lens)))
+        wm = len(self._buf_doc_lens)
+        self._buf_deletes.append((th, wm))
+        # buffered docs the delete newly masks count too — on the live
+        # path they stop matching at the next reopen, not the next flush
+        if self.use_reference_ingest:
+            cand = [d for (d, _, _) in self._buf_terms.get(th, ()) if d < wm]
+        elif self._live is not None:
+            self._live_sync()  # catch up deferred DRAM appends first
+            docs_l, _, _ = self._live.postings(th)
+            cand = [int(d) for d in docs_l if d < wm]
+        else:
+            cand = []
+        newly = [d for d in cand if d not in self._buf_dead]
+        self._buf_dead.update(newly)
+        n += len(newly)
+        self._live_gen += 1
         if replaced:
             # deletions become visible at the next reopen, not before
             self._infos = self._infos.with_replaced(replaced)
@@ -458,6 +632,7 @@ class IndexWriter:
         self._buf_doc_lens = []
         self._buf_dv = {}
         self._buf_deletes = []
+        self._detach_live()
         self._ram_bytes = 0
         self._wal_flushed_seq = self._wal_last_seq
         self._maybe_merge()
@@ -559,7 +734,22 @@ class IndexWriter:
         """Reclaim storage no snapshot references (the deferred half of a
         ``commit(gc=False)``; also ends any superseded commit's rollback
         window)."""
-        res = self.directory.gc(self._infos.names())
+        heap_before = getattr(self.directory, "heap", None)
+        live_on_heap = self._live is not None and self._live.arena.is_heap
+        if live_on_heap:
+            # gc may compact (replace the heap file); pin the views first
+            # so the copy-out in rehome reads from the old mapping
+            self._live.pin_views()
+        res = self.directory.gc(
+            self._infos.names(),
+            live_heap_bytes=self._live.heap_bytes() if live_on_heap else 0,
+        )
+        if live_on_heap:
+            heap_after = getattr(self.directory, "heap", None)
+            if heap_after is not None and heap_after is not heap_before:
+                from repro.storage.live_index import HeapArena
+
+                self._live.rehome(HeapArena(heap_after))
         self.gc_stats["runs"] += 1
         self.gc_stats["reclaimed_bytes"] += int(res.get("reclaimed_bytes", 0))
         self.gc_stats["removed"] += int(res.get("removed", 0))
@@ -588,5 +778,13 @@ class IndexWriter:
                 "last_seq": self._wal_last_seq,
                 "flushed_seq": self._wal_flushed_seq,
                 "retired_seq": self.directory.wal_retired(),
+            }
+        if self._live is not None:
+            self._live_sync()  # counters below must reflect the buffer
+            s["live"] = {
+                "docs": self._live.n_docs,
+                "terms": self._live.n_terms,
+                "generation": self._live_gen,
+                "on_heap": self._live.arena.is_heap,
             }
         return s

@@ -15,7 +15,11 @@ Layout (all little-endian):
     [16:24)  bump-allocator tail (uint64)
     [24:32)  WAL head (uint64) -- heap offset of the newest durable
              write-ahead-log record (0 = none); see ``repro.storage.wal``
-    [32:64)  reserved
+    [32:40)  live-index root (uint64) -- heap offset of the newest durable
+             live-buffer-index root block (0 = none); see
+             ``repro.storage.live_index``.  Published by the SAME barrier
+             that publishes the WAL head, so ack stays one barrier.
+    [40:64)  reserved
     [64:...) allocations, each 64-byte aligned:
              [dtype code u32][ndim u32][shape u64 x ndim][payload]
 
@@ -130,6 +134,13 @@ class PersistentHeap:
         so a crash can never expose a head pointing at a torn record."""
         return self._get_u64(24)
 
+    @property
+    def live_root(self) -> int:
+        """Offset of the newest *durable* live-index root block (0 = none).
+        Updated only inside :meth:`barrier`, with the same
+        bytes-before-pointer ordering as ``wal_head``."""
+        return self._get_u64(32)
+
     # -- store / load -------------------------------------------------------
     @staticmethod
     def alloc_size(arr: np.ndarray) -> int:
@@ -184,6 +195,25 @@ class PersistentHeap:
         self.store_into(off, arr)
         return off
 
+    def store_uninit(self, count: int, dtype) -> int:
+        """Allocate a 1-D array writing only its metadata header — the
+        payload keeps whatever bytes the extent held (after a tail rewind
+        that can be stale garbage, not zeros).  For append-only capacity
+        arrays whose reads are gated by externally-stored counters: they
+        overwrite before they read, so zero-filling the headroom would be
+        pure write amplification."""
+        dtype = np.dtype(dtype)
+        nbytes = count * dtype.itemsize
+        code = _DTYPE_CODE[dtype]
+        off = self.reserve(_align(16 + 8 + nbytes))
+        meta = np.empty(3, dtype=np.uint64)
+        meta[0] = (code << 32) | 1
+        meta[1] = nbytes
+        meta[2] = count
+        self._mm[off : off + meta.nbytes] = meta.view(np.uint8)
+        self.stats["stores"] += 1
+        return off
+
     def load(self, off: int) -> np.ndarray:
         """Zero-copy load of the array stored at ``off``."""
         head = self._mm[off : off + 16].view(np.uint64)
@@ -212,7 +242,11 @@ class PersistentHeap:
         alignment padding, so padding must not count as garbage)."""
         return _align(self.extent(off))
 
-    def barrier(self, wal_head: Optional[int] = None) -> None:
+    def barrier(
+        self,
+        wal_head: Optional[int] = None,
+        live_root: Optional[int] = None,
+    ) -> None:
         """Durability fence: everything stored so far becomes committed.
 
         One barrier per commit -- this is what collapses Lucene's
@@ -223,11 +257,17 @@ class PersistentHeap:
         names them (store -> CLWB/SFENCE -> pointer store -> SFENCE on real
         pmem), so recovery either sees the old head or a fully-stored new
         record -- never a head pointing into torn bytes.
+
+        ``live_root`` (when given) rides the same fence: the live-buffer
+        index's root block is published by the barrier that acks the batch
+        it describes, so search-at-ack costs zero extra barriers.
         """
         tail = self.tail
         self._mm.flush()
         if wal_head is not None:
             self._set_u64(24, wal_head)
+        if live_root is not None:
+            self._set_u64(32, live_root)
         self._set_u64(8, tail)
         self._mm.flush()
         self.stats["barriers"] += 1

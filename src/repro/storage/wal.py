@@ -115,6 +115,12 @@ class HeapWAL:
         self.heap = heap
         self.head = 0
         self.last_seq = 0
+        # (seq, footprint) per acked record, ascending: live_bytes runs at
+        # EVERY commit-time gc, and re-walking the chain with a crc32 per
+        # record there turns gc O(unretired tail) — the ledger keeps that
+        # accounting O(1) per record and is rebuilt from the validated
+        # chain on open/crash resync
+        self._ledger: List[Tuple[int, int]] = []
         self._resync()
 
     def _resync(self) -> None:
@@ -126,6 +132,11 @@ class HeapWAL:
         else:
             self.head = 0
             self.last_seq = 0
+        self._ledger = [
+            (int(self.heap.load(o)[16:24].view(np.uint64)[0]),
+             self.heap.footprint(o))
+            for o in self.chain(0)
+        ]
 
     # -- validation ---------------------------------------------------------
     def _valid(self, off: int) -> bool:
@@ -149,7 +160,11 @@ class HeapWAL:
 
     # -- append (the ack path) ----------------------------------------------
     def append(
-        self, meta: dict, arrays: Dict[str, np.ndarray], durable: bool = True
+        self,
+        meta: dict,
+        arrays: Dict[str, np.ndarray],
+        durable: bool = True,
+        live_root: Optional[int] = None,
     ) -> int:
         """Append one record; returns its seq.
 
@@ -157,14 +172,20 @@ class HeapWAL:
         which also publishes the new chain head.  ``durable=False`` leaves
         the record un-acked (stores issued, no fence) — the state a crash
         mid-batch tears, used by the torn-write tests.
+
+        ``live_root`` (when given) rides the same ack barrier: the live
+        buffer index's root block (``repro.storage.live_index``) becomes
+        durable together with the record it describes, so search-at-ack
+        adds zero barriers.
         """
         seq = self.last_seq + 1
         blob = pack_record(meta, arrays, seq, self.head)
         off = self.heap.store(blob)
         if durable:
-            self.heap.barrier(wal_head=off)
+            self.heap.barrier(wal_head=off, live_root=live_root)
             self.head = off
             self.last_seq = seq
+            self._ledger.append((seq, self.heap.footprint(off)))
         return seq
 
     # -- replay / accounting -------------------------------------------------
@@ -192,8 +213,9 @@ class HeapWAL:
     def live_bytes(self, after_seq: int = 0) -> int:
         """Heap footprint of unretired records — counted as live by the
         directory's gc so compaction never treats the replayable tail as
-        garbage."""
-        return sum(self.heap.footprint(o) for o in self.chain(after_seq))
+        garbage.  Served from the append-time ledger: size accounting
+        needs no crc re-validation (replay still walks ``chain``)."""
+        return sum(fp for seq, fp in self._ledger if seq > after_seq)
 
     def carry_to(self, new_heap: PersistentHeap, after_seq: int = 0) -> int:
         """Re-store the unretired tail into a compaction's fresh heap,

@@ -137,6 +137,10 @@ def test_engine_stats_survive_crash_recovery(tmp_path):
     for i in range(60):
         eng.add({"body": f"tok{i % 7} common"}, {"month": i % 12})
         if (i + 1) % 10 == 0:
+            # explicit flush: the default reopen serves the tail live (no
+            # segments, no merges) — this test is about the merge/upload
+            # ledger, so it needs actual segment churn
+            eng.flush()
             eng.reopen()
     eng.commit()
     eng.search(TermQuery("body", "common"))

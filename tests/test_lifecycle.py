@@ -530,6 +530,7 @@ def test_merge_warmup_makes_post_merge_reopen_cheap():
     for i, (fields, dv) in enumerate(docs):
         eng.add(fields, dv)
         if (i + 1) % 20 == 0:
+            eng.flush()  # segment-per-20 cadence drives the tiered merge
             eng.reopen()
     stats = eng.device_cache.stats
     assert stats.merge_warmups >= 1

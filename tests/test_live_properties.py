@@ -1,0 +1,192 @@
+"""Hypothesis properties for search-at-ack.
+
+Two generative invariants on the live buffer index:
+
+1. **Interleaving oracle** — any interleaving of add / delete / flush /
+   commit / crash leaves the live-path searcher (default reopen, no flush)
+   in exact agreement with a flush-then-search oracle fed the same
+   operations.  Results are compared in a unique-id space (a reserved
+   doc-values column) because flush/merge histories may compact doc ids
+   differently.
+2. **Torn live append** — a crash may tear the heap at any byte while a
+   batch's WAL record AND live-index stores are in flight (the ack barrier
+   never landed).  Whatever the tear point, recovery must rebuild exactly
+   the acked prefix's live index: the torn batch is never visible, no
+   acked batch is lost (``tests/test_wal_torn.py`` pins the WAL half; this
+   pins the live-structure half).
+
+``hypothesis`` is an optional test dependency (same convention as
+``test_wal_torn.py``): the module skips itself when absent; the
+deterministic twins in ``tests/test_live_search.py`` keep the invariants
+covered either way.
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SearchEngine
+from repro.core.search import FacetQuery, RangeQuery, TermQuery
+
+TOKENS = [f"w{i}" for i in range(8)]
+UID = "uid"  # reserved doc-values column: comparison space
+
+
+def _batch(start_uid, size):
+    out = []
+    for j in range(size):
+        n = start_uid + j
+        toks = " ".join(TOKENS[(n + i) % len(TOKENS)] for i in range(1 + n % 3))
+        out.append(
+            ({"body": f"{toks} common"}, {"month": n % 12, UID: n})
+        )
+    return out
+
+
+def _uid_map(eng):
+    """doc id -> uid for a searcher whose tail may be live."""
+    cols = [
+        np.asarray(s.doc_values.get(UID, np.zeros(s.n_docs, np.int32)))
+        for s in eng.manager.infos.segments
+    ]
+    live = eng.manager.live
+    if live is not None and live.n_docs:
+        cols.append(live.dv_col(UID))
+    return np.concatenate(cols) if cols else np.zeros(0, np.int64)
+
+
+def _observe(eng, n_total):
+    """Every probe family's results, mapped to uid space and sorted so the
+    observation is independent of doc-id assignment and tie order."""
+    eng.reopen()
+    uids = _uid_map(eng)
+    obs = []
+    k = max(n_total, 1)
+    for tok in TOKENS[:4] + ["common"]:
+        td = eng.search(TermQuery("body", tok), k=k)
+        hit_uids = uids[np.asarray(td.doc_ids)]
+        order = np.argsort(hit_uids)
+        obs.append(
+            (
+                int(td.total_hits),
+                hit_uids[order].tolist(),
+                np.asarray(td.scores)[order].tolist(),
+            )
+        )
+    td = eng.search(FacetQuery(None, "month", 12), k=12)
+    obs.append((int(td.total_hits), np.asarray(td.facets).tolist()))
+    td = eng.search(RangeQuery("month", 2, 9), k=k)
+    obs.append((int(td.total_hits), sorted(uids[np.asarray(td.doc_ids)].tolist())))
+    return obs
+
+
+_OP = st.one_of(
+    st.tuples(st.just("add"), st.integers(1, 6)),
+    st.tuples(st.just("delete"), st.integers(0, len(TOKENS) - 1)),
+    st.tuples(st.just("flush"), st.just(0)),
+    st.tuples(st.just("commit"), st.just(0)),
+    st.tuples(st.just("crash"), st.just(0)),
+)
+
+
+@settings(max_examples=12, deadline=None)
+@given(ops=st.lists(_OP, min_size=1, max_size=10))
+def test_interleaving_matches_flush_oracle(tmp_path_factory, ops):
+    tmp = tmp_path_factory.mktemp("liveprop")
+    eng = SearchEngine("byte-pmem", str(tmp / "d"), use_wal=True)
+    oracle = SearchEngine("ram")
+    uid = 0
+    n_total = 0
+    for op, arg in ops:
+        if op == "add":
+            batch = _batch(uid, arg)
+            uid += arg
+            n_total += arg
+            eng.add_documents(batch)
+            oracle.add_documents(batch)
+        elif op == "delete":
+            na = eng.delete("body", TOKENS[arg])
+            nb = oracle.delete("body", TOKENS[arg])
+            assert na == nb, (TOKENS[arg], na, nb)
+        elif op == "flush":
+            eng.flush()
+        elif op == "commit":
+            eng.commit()
+        elif op == "crash":
+            # every op above was acked (WAL): recovery must lose nothing
+            eng = eng.crash_and_recover()
+        # the oracle flushes before every observation; the engine never
+        # flushes for one — parity at every step is the tentpole claim
+        oracle.writer.flush()
+        assert _observe(eng, n_total) == _observe(oracle, n_total), (op, arg)
+
+
+# ---------------------------------------------------------------------------
+# torn live append
+# ---------------------------------------------------------------------------
+
+
+def _inflight_live_batch(w, batch):
+    """One more batch's stores — buffer, live index, WAL record — WITHOUT
+    the ack barrier: exactly the state a mid-batch power cut tears."""
+    d0, n0, p0 = len(w._buf_doc_lens), len(w._buf), w._buf.n_positions
+    for fields, dv in batch:
+        w._append_document(fields, dv)
+    w._live_append(d0, n0, p0)  # live stores + root store, never published
+    th, dl, fr, po, ps = w._buf.columns()
+    w.directory._wal.append(
+        {"kind": "batch", "base": d0, "dv_keys": []},
+        {
+            "term_hash": th[n0:], "doc_local": dl[n0:], "freq": fr[n0:],
+            "pos_offset": po[n0:], "positions": ps[p0:],
+            "doc_lens": np.asarray(w._buf_doc_lens[d0:], dtype=np.int64),
+            "dv_key": np.empty(0, np.int32),
+            "dv_doc": np.empty(0, np.int32),
+            "dv_val": np.empty(0, np.float64),
+        },
+        durable=False,
+    )
+
+
+def _tear(directory, frac):
+    heap = directory.heap
+    lo, hi = heap.committed, max(heap.tail, heap.committed)
+    cut = int(lo + frac * (hi - lo))
+    cap = heap.capacity
+    heap.close()
+    with open(heap.path, "r+b") as f:
+        f.truncate(cut)
+        f.truncate(cap)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    sizes=st.lists(st.integers(1, 6), min_size=1, max_size=3),
+    inflight=st.integers(1, 5),
+    frac=st.floats(0.0, 1.0),
+)
+def test_torn_live_append_never_visible(tmp_path_factory, sizes, inflight, frac):
+    tmp = tmp_path_factory.mktemp("livetorn")
+    eng = SearchEngine("byte-pmem", str(tmp / "d"), use_wal=True)
+    uid = 0
+    for size in sizes:
+        eng.add_documents(_batch(uid, size))
+        uid += size
+    _inflight_live_batch(eng.writer, _batch(uid, inflight))
+    path = eng.directory.path
+    _tear(eng.directory, frac)
+
+    rec = SearchEngine("byte-pmem", path, use_wal=True)
+    n_acked = sum(sizes)
+    assert rec.writer.buffered_docs == n_acked
+    # the recovered live index holds exactly the acked prefix
+    oracle = SearchEngine("ram")
+    uid = 0
+    for size in sizes:
+        oracle.add_documents(_batch(uid, size))
+        uid += size
+    oracle.writer.flush()
+    assert _observe(rec, n_acked) == _observe(oracle, n_acked)
+    assert rec.writer.buffered_docs == n_acked  # observation did not flush

@@ -1,0 +1,345 @@
+"""Search-at-ack: buffer-resident results == flush-then-search, everywhere.
+
+The live buffer index (``repro.storage.live_index``) plus the buffer
+executor (``repro.core.query.live``) make the acked-but-unflushed tail
+searchable with zero flush on the read path.  The whole design is gated on
+ONE oracle, pinned here across every axis that could break it:
+
+  * all six query families (term, boolean, phrase, range, sort, facet),
+  * every directory kind (DRAM twin on ram/fs, heap-resident on byte+WAL),
+  * unsharded and 2-shard, under all three ingest execution backends
+    (the processes backend syncs the tail through the MirrorWriter's
+    incremental live protocol),
+  * after SIGKILL + WAL replay (recovery rebuilds the live index
+    bit-identically from the acked batches),
+  * with buffered deletes masking live AND committed docs at query time
+    (watermark-correct, Lucene semantics).
+
+``force_flush=True`` keeps the historical segment-only reopen semantics.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import EXT_ID_FIELD, SearchEngine, ShardSet, ShardedEngine
+from repro.core.search import (
+    BooleanQuery,
+    FacetQuery,
+    PhraseQuery,
+    RangeQuery,
+    SortQuery,
+    TermQuery,
+)
+from repro.data.corpus import CorpusConfig, synthetic_corpus
+
+KINDS = ["ram", "fs-ssd", "byte-pmem"]
+BACKENDS = ["serial", "threads", "processes"]
+N_DOCS = 180
+SPLIT = 120  # committed base / buffered tail boundary
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return list(synthetic_corpus(CorpusConfig(n_docs=N_DOCS, vocab=300, seed=11)))
+
+
+def family_batch(corpus):
+    from collections import Counter
+
+    from repro.core import Analyzer
+
+    an = Analyzer()
+    c = Counter()
+    for fields, _ in corpus:
+        c.update(set(an.tokenize(fields["body"])))
+    toks = [t for t, _ in c.most_common(6)]
+    bigram = tuple(an.tokenize(corpus[0][0]["body"])[:2])
+    return [
+        TermQuery("body", toks[0]),
+        TermQuery("body", toks[5]),
+        BooleanQuery((TermQuery("body", toks[0]), TermQuery("body", toks[1])), "and"),
+        BooleanQuery((TermQuery("body", toks[2]), TermQuery("body", toks[3])), "or"),
+        PhraseQuery("body", bigram),
+        RangeQuery("month", 3, 7),
+        SortQuery(TermQuery("body", toks[0]), "timestamp"),
+        FacetQuery(None, "month", 12),
+        FacetQuery(TermQuery("body", toks[1]), "month", 12),
+    ]
+
+
+def assert_same_results(queries, a, b, ctx=""):
+    for q, ta, tb in zip(queries, a, b):
+        msg = f"{ctx} {q!r}"
+        assert ta.total_hits == tb.total_hits, msg
+        np.testing.assert_array_equal(ta.doc_ids, tb.doc_ids, err_msg=msg)
+        np.testing.assert_array_equal(ta.scores, tb.scores, err_msg=msg)
+        if isinstance(q, FacetQuery):
+            np.testing.assert_array_equal(ta.facets, tb.facets, err_msg=msg)
+
+
+def _engine(kind, tmp_path, use_wal=False):
+    path = None if kind == "ram" else str(tmp_path / "idx")
+    return SearchEngine(kind, path, use_wal=use_wal)
+
+
+# ---------------------------------------------------------------------------
+# 1. the core oracle: live == flush-then-search, per kind, per family
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("use_wal", [False, True])
+def test_live_matches_flush_then_search(tmp_path, corpus, kind, use_wal):
+    if use_wal and not kind.startswith("byte"):
+        pytest.skip("WAL is a byte-path feature")
+    queries = family_batch(corpus)
+    eng = _engine(kind, tmp_path, use_wal=use_wal)
+    for fields, dv in corpus[:SPLIT]:
+        eng.add(fields, dv)
+    eng.flush()
+    eng.commit()
+    for fields, dv in corpus[SPLIT:]:
+        eng.add(fields, dv)
+    eng.reopen()
+    # the default reopen must NOT flush: the tail is served live
+    assert eng.writer.buffered_docs == N_DOCS - SPLIT
+    live = eng.search_batch(queries, k=25)
+    eng.writer.flush()
+    eng.reopen()
+    assert eng.writer.buffered_docs == 0
+    flushed = eng.search_batch(queries, k=25)
+    assert_same_results(queries, live, flushed, ctx=f"{kind}/wal={use_wal}")
+
+
+def test_empty_tail_and_live_only_index(corpus):
+    """Degenerate shapes: reopen with nothing buffered (live is None) and
+    search with NO committed segments at all (the whole index is the tail)."""
+    queries = family_batch(corpus)
+    eng = SearchEngine("ram")
+    for fields, dv in corpus:
+        eng.add(fields, dv)
+    eng.reopen()  # zero committed segments, 180 live docs
+    live = eng.search_batch(queries, k=25)
+    eng.writer.flush()
+    eng.reopen()
+    assert_same_results(queries, live, eng.search_batch(queries, k=25))
+    eng.reopen()  # empty tail: no-op reopen keeps the same searcher
+    assert eng.manager.live is None
+
+
+def test_force_flush_still_flushes(tmp_path, corpus):
+    eng = SearchEngine("ram")
+    for fields, dv in corpus[:40]:
+        eng.add(fields, dv)
+    eng.manager.maybe_reopen(force_flush=True)
+    assert eng.writer.buffered_docs == 0
+    assert len(eng.manager.infos.segments) == 1
+
+
+# ---------------------------------------------------------------------------
+# 2. deletes: logged-but-unflushed deletes mask live AND committed docs
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_delete_before_flush_masks_live_and_committed(tmp_path, kind):
+    """Regression: delete → search BEFORE any flush.  The delete must mask
+    committed postings (via the segment live bitmap) and buffered postings
+    (via the snapshot's watermark filter) in the same reopen."""
+    eng = _engine(kind, tmp_path, use_wal=kind.startswith("byte"))
+    for i in range(30):
+        eng.add({"body": "keep alpha"}, {"month": i % 12})
+    eng.flush()
+    eng.commit()
+    for i in range(20):
+        eng.add({"body": "drop alpha"}, {"month": i % 12})
+    eng.reopen()
+    assert eng.search(TermQuery("body", "alpha"), k=60).total_hits == 50
+    ndel = eng.delete("body", "drop")
+    assert ndel == 20
+    eng.reopen()  # STILL no flush
+    assert eng.writer.buffered_docs == 20
+    assert eng.search(TermQuery("body", "drop"), k=60).total_hits == 0
+    assert eng.search(TermQuery("body", "alpha"), k=60).total_hits == 30
+    # watermark semantics: docs buffered AFTER the delete survive it
+    eng.add({"body": "drop beta"}, {"month": 1})
+    eng.reopen()
+    assert eng.search(TermQuery("body", "drop"), k=60).total_hits == 1
+    # and flushing changes nothing (the oracle)
+    eng.writer.flush()
+    eng.reopen()
+    assert eng.search(TermQuery("body", "drop"), k=60).total_hits == 1
+    assert eng.search(TermQuery("body", "alpha"), k=60).total_hits == 30
+
+
+def test_delete_masks_committed_only_delete(tmp_path):
+    """A delete whose victims are ALL committed must still apply at query
+    time before any flush (the segment-bitmap half of the satellite fix)."""
+    eng = SearchEngine("ram")
+    for i in range(10):
+        eng.add({"body": "gone now"}, {"month": i})
+    eng.flush()
+    eng.commit()
+    eng.add({"body": "other stuff"}, {"month": 0})  # non-empty tail
+    assert eng.delete("body", "gone") == 10
+    eng.reopen()
+    assert eng.writer.buffered_docs == 1
+    assert eng.search(TermQuery("body", "gone"), k=20).total_hits == 0
+
+
+# ---------------------------------------------------------------------------
+# 3. sharded fan-out: every backend sees every shard's live tail
+# ---------------------------------------------------------------------------
+
+
+def live_ext_map(eng):
+    """External ids for an unsharded reference whose tail is live."""
+    cols = [np.asarray(s.doc_values[EXT_ID_FIELD]) for s in eng.manager.infos.segments]
+    live = eng.manager.live
+    if live is not None and live.n_docs:
+        cols.append(live.dv_col(EXT_ID_FIELD))
+    return np.concatenate(cols) if cols else np.zeros(0, np.int64)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("kind", KINDS)
+def test_sharded_live_parity(tmp_path, corpus, kind, backend):
+    """2-shard fan-out over live tails == unsharded live reference, in
+    external-id space with cross-shard (live-inclusive) BM25 stats."""
+    queries = family_batch(corpus)
+    use_wal = kind.startswith("byte")
+    un = _engine(kind, tmp_path, use_wal=use_wal)
+    for i, (fields, dv) in enumerate(corpus[:SPLIT]):
+        un.add(fields, {**dv, EXT_ID_FIELD: i})
+    un.flush()
+    un.commit()
+    for i, (fields, dv) in enumerate(corpus[SPLIT:], start=SPLIT):
+        un.add(fields, {**dv, EXT_ID_FIELD: i})
+    un.reopen()
+
+    sh = ShardedEngine(
+        kind, str(tmp_path / "sh"), n_shards=2, backend=backend, use_wal=use_wal
+    )
+    try:
+        sh.add_documents(corpus[:SPLIT])
+        sh.flush()
+        sh.commit()
+        sh.add_documents(corpus[SPLIT:])
+        sh.reopen()
+
+        ra = un.search_batch(queries, k=25)
+        rb = sh.search_batch(queries, k=25)
+        rext = live_ext_map(un)
+        for q, ta, tb in zip(queries, ra, rb):
+            msg = f"{kind}/{backend} {q!r}"
+            assert ta.total_hits == tb.total_hits, msg
+            ids = ta.doc_ids if isinstance(q, FacetQuery) else rext[ta.doc_ids]
+            np.testing.assert_array_equal(ids, tb.doc_ids, err_msg=msg)
+            np.testing.assert_array_equal(ta.scores, tb.scores, err_msg=msg)
+        # delete-before-flush visibility crosses the backend boundary too
+        tok = queries[0].token
+        assert un.delete("body", tok) == sh.delete("body", tok)
+        un.reopen()
+        sh.reopen()
+        assert (
+            un.search(queries[0], k=25).total_hits
+            == sh.search(queries[0], k=25).total_hits
+            == 0
+        )
+        # flush-then-search oracle on the sharded side
+        before = sh.search_batch(queries, k=25)
+        sh.flush()
+        sh.reopen()
+        assert_same_results(
+            queries, before, sh.search_batch(queries, k=25), ctx=f"{kind}/{backend}"
+        )
+    finally:
+        sh.close()
+
+
+# ---------------------------------------------------------------------------
+# 4. crash + WAL replay: the rebuilt live index is bit-identical
+# ---------------------------------------------------------------------------
+
+
+def test_wal_replay_rebuilds_live_bit_identical(tmp_path, corpus):
+    """SIGKILL with an acked tail, recover, reopen with NO flush: the
+    replayed live index serves byte-identical postings/doc_lens and the
+    searcher returns identical results."""
+    queries = family_batch(corpus)
+    eng = SearchEngine("byte-pmem", str(tmp_path / "d"), use_wal=True)
+    for fields, dv in corpus[:SPLIT]:
+        eng.add(fields, dv)
+    eng.flush()
+    eng.commit()
+    for fields, dv in corpus[SPLIT:]:
+        eng.add(fields, dv)
+    eng.reopen()
+    before = eng.search_batch(queries, k=25)
+    snap_before = eng.writer.live_snapshot()
+
+    rec = eng.crash_and_recover()
+    rec.reopen()
+    assert rec.writer.buffered_docs == N_DOCS - SPLIT  # replayed, not flushed
+    snap_after = rec.writer.live_snapshot()
+    # structural bit-identity: counters, per-term postings, doc lengths
+    assert (snap_before.n_docs, snap_before.total_tokens) == (
+        snap_after.n_docs,
+        snap_after.total_tokens,
+    )
+    np.testing.assert_array_equal(snap_before.doc_lens(), snap_after.doc_lens())
+    for q in queries:
+        tq = getattr(q, "term", None) or q
+        if isinstance(tq, TermQuery):
+            from repro.core.analyzer import term_hash
+
+            th = term_hash(tq.field, tq.token)
+            for x, y in zip(snap_before.postings(th), snap_after.postings(th)):
+                np.testing.assert_array_equal(x, y)
+    assert_same_results(
+        queries, before, rec.search_batch(queries, k=25), ctx="replay"
+    )
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_sharded_crash_keeps_tail_live(tmp_path, corpus, backend):
+    """Cross-shard crash: each shard's WAL replay rebuilds its live tail
+    and the recovered fan-out serves it with no flush, on every backend."""
+    queries = family_batch(corpus)
+    sh = ShardedEngine(
+        "byte-pmem", str(tmp_path / "s"), n_shards=2, backend=backend, use_wal=True
+    )
+    sh.add_documents(corpus[:SPLIT])
+    sh.flush()
+    sh.commit()
+    sh.add_documents(corpus[SPLIT:])
+    sh.reopen()
+    before = sh.search_batch(queries, k=25)
+    rec = sh.crash_and_recover()
+    try:
+        rec.reopen()
+        for m in rec.manager.managers:
+            assert m.writer.buffered_docs > 0, "tail flushed during recovery"
+        assert_same_results(
+            queries, before, rec.search_batch(queries, k=25), ctx=backend
+        )
+    finally:
+        rec.close()
+
+
+# ---------------------------------------------------------------------------
+# 5. ack cost: binding the live tail must not add barriers or flushes
+# ---------------------------------------------------------------------------
+
+
+def test_live_reopen_costs_zero_barriers_and_zero_flushes(tmp_path):
+    eng = SearchEngine("byte-pmem", str(tmp_path / "d"), use_wal=True)
+    for i in range(40):
+        eng.add({"body": f"tok{i % 5} shared"}, {"month": i % 12})
+    gen = eng.writer.infos.generation
+    b0 = eng.directory.heap.stats["barriers"]
+    eng.reopen()
+    eng.search(TermQuery("body", "shared"))
+    assert eng.directory.heap.stats["barriers"] == b0  # read path: 0 barriers
+    assert eng.writer.infos.generation == gen  # and 0 flushes
+    assert eng.writer.buffered_docs == 40

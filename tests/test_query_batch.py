@@ -199,6 +199,7 @@ def test_nrt_reopen_uploads_only_new_segment():
         synthetic_corpus(CorpusConfig(n_docs=10, vocab=300, seed=4))
     ):
         eng.add(fields, dv)
+    eng.flush()  # cut the segment; default reopen keeps docs buffer-resident
     eng.reopen()
     assert stats.segment_uploads == base_segments + 1
     new_seg = eng.writer.segments[-1]
@@ -215,6 +216,7 @@ def test_delete_refreshes_only_live_bitmap():
     eng = SearchEngine("ram")
     for fields, dv in synthetic_corpus(CorpusConfig(n_docs=100, vocab=300, seed=5)):
         eng.add(fields, dv)
+    eng.flush()  # the delete below must tombstone a SEGMENT's bitmap
     eng.reopen()
     eng.search(TermQuery("body", _word(1)))
     stats = eng.device_cache.stats
@@ -235,8 +237,9 @@ def test_merge_evicts_stale_segments():
     for i, (fields, dv) in enumerate(docs):
         eng.add(fields, dv)
         if (i + 1) % 20 == 0:
-            # reopen per flush: segments become device-resident, so the
-            # eventual tiered merge must evict the merged-away ones
+            # flush+reopen per 20 docs: segments become device-resident, so
+            # the eventual tiered merge must evict the merged-away ones
+            eng.flush()
             eng.reopen()
     live_names = {s.name for s in eng.writer.segments}
     assert set(cache._store) == live_names
@@ -251,12 +254,14 @@ def test_stale_searcher_does_not_repollute_cache():
     for i, (fields, dv) in enumerate(docs[:200]):
         eng.add(fields, dv)
         if (i + 1) % 20 == 0:
+            eng.flush()
             eng.reopen()
     assert len(eng.writer.segments) == 10  # at the merge_factor threshold
     stale = eng.searcher  # pre-merge point-in-time view
     stale.search(TermQuery("body", _word(1)))  # make its segments resident
     for fields, dv in docs[200:]:
         eng.add(fields, dv)
+    eng.flush()
     eng.reopen()  # 11th flush triggers the tiered merge + eviction
     cache = eng.device_cache
     live_names = {s.name for s in eng.writer.segments}

@@ -211,6 +211,7 @@ def test_sharded_crash_after_acked_batches(tmp_path, kind, corpus):
     uns = SearchEngine(kind, str(tmp_path / "u"), use_wal=True)
     for i, (fields, dv) in enumerate(corpus):
         uns.add({**fields}, {**dv, EXT_ID_FIELD: i})
+    uns.flush()  # the ext-id map below reads segment doc-values
     uns.reopen()
     ext = np.concatenate(
         [np.asarray(s.doc_values[EXT_ID_FIELD]) for s in uns.manager.infos.segments]

@@ -79,7 +79,9 @@ PARALLEL_FLOORS = [
 
 # BENCH_search.json gates: the fusion win itself (hard-floored at 2.0x
 # inside run_smoke regardless of baseline drift), the per-family fused
-# per-query latencies, and the term family's achieved roofline fraction.
+# per-query latencies, the term family's achieved roofline fraction, and
+# the search-at-ack rows (``nrt_bench --smoke``): ack-to-visible p50 per
+# directory kind must not regress >25% against the committed baseline.
 SEARCH_GATES = [
     ("fused_term_speedup_ram", "higher"),
     ("families.TermBatch.lat_p50_ms", "lower"),
@@ -88,6 +90,23 @@ SEARCH_GATES = [
     ("families.RangeBatch.lat_p50_ms", "lower"),
     ("families.FacetBatch.lat_p50_ms", "lower"),
     ("roofline.term.roofline_frac", "higher"),
+    ("nrt.nrt_ack_to_visible_us.ram", "lower"),
+    ("nrt.nrt_ack_to_visible_us.fs-ssd", "lower"),
+    ("nrt.nrt_ack_to_visible_us.byte-pmem", "lower"),
+    ("nrt.ack_speedup_vs_flush.ram", "higher"),
+]
+
+# Absolute HARD floors on the fresh search measurement (no baseline ratio,
+# same convention as PARALLEL_FLOORS): the search-at-ack headline — the
+# live path must make a 10k-doc tail visible >=10x faster than the flush
+# path on ram — and the live==flush parity bit must be exactly 1.  These
+# duplicate nrt_bench's own SystemExit gates on purpose: the smoke run
+# gates the measurement, this gates the *committed file* (a hand-edited
+# or stale BENCH_search.json fails here even if the smoke step was
+# skipped).
+SEARCH_FLOORS = [
+    ("nrt.ack_speedup_vs_flush.ram", 10.0),
+    ("nrt.live_search_parity", 1.0),
 ]
 
 
@@ -124,6 +143,36 @@ def check(baseline: dict, fresh: dict, gates=GATES) -> Tuple[list, list]:
     return failures, notes
 
 
+def step_summary(lines) -> None:
+    """Append lines to the CI step summary (GITHUB_STEP_SUMMARY) when
+    running under Actions; silently a no-op elsewhere.  Skip notices MUST
+    go here, not only to the job log — a silently-skipped floor looks
+    exactly like a passing one in the checks UI."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    with open(path, "a") as f:
+        for line in lines:
+            f.write(line + "\n")
+
+
+def check_search_floors(fresh: dict) -> Tuple[list, list]:
+    """Absolute floors on the fresh search measurement (search-at-ack):
+    unlike the ratio gates these never relax with a drifting baseline."""
+    failures, notes = [], []
+    for key, floor in SEARCH_FLOORS:
+        new = lookup(fresh, key)
+        if new is None:
+            failures.append(f"{key}: missing from the fresh smoke run")
+        elif new < floor:
+            failures.append(
+                f"{key}: HARD FLOOR — fresh {new:g} < required {floor:g}"
+            )
+        else:
+            notes.append(f"{key}: OK — fresh {new:g} >= floor {floor:g}")
+    return failures, notes
+
+
 def check_parallel_floors(fresh: dict) -> Tuple[list, list]:
     """Absolute floors on the processes backend's real-wall speedups.
 
@@ -141,10 +190,23 @@ def check_parallel_floors(fresh: dict) -> Tuple[list, list]:
         return failures, notes
     cpus = lookup(fresh, "cpus") or 0
     if cpus < 2:
-        notes.append(
+        note = (
             f"parallel floors: SKIPPED — measured on {cpus:.0f} usable "
             f"core(s); real parallel speedup is physically impossible there "
             f"(CI multi-core runners enforce the floors)"
+        )
+        notes.append(note)
+        # the skip must be LOUD in the checks UI, not buried in the log:
+        # a 1-core measurement no-ops every parallel floor, and a baseline
+        # recorded that way binds nothing until re-recorded on >=2 cores
+        step_summary(
+            [
+                "### check_bench: parallel floors SKIPPED",
+                f"- {note}",
+                "- re-record `BENCH_ingest.json` on a >=2-core runner so "
+                "the floors bind (`benchmarks.ingest_bench --shards 2 "
+                "--smoke --backend serial,threads,processes`)",
+            ]
         )
         return failures, notes
     for key, floor in PARALLEL_FLOORS:
@@ -224,6 +286,25 @@ def main() -> int:
     failures += _compare(
         "search", args.baseline_search, args.fresh_search, SEARCH_GATES
     )
+    if os.path.exists(args.fresh_search):
+        with open(args.fresh_search) as f:
+            fresh_search = json.load(f)
+        if lookup(fresh_search, "nrt.live_search_parity") is None:
+            # bootstrap: the committed file predates nrt_bench --smoke
+            print(
+                "  [search] search-at-ack floors: nrt rows not in this "
+                "smoke run (run benchmarks.nrt_bench --smoke to measure)"
+            )
+        else:
+            sf_failures, sf_notes = check_search_floors(fresh_search)
+            for n in sf_notes:
+                print(f"  [search] {n}")
+            failures += [f"search: {f_}" for f_ in sf_failures]
+    if failures:
+        step_summary(
+            ["### check_bench FAILED (>25% regression)"]
+            + [f"- {f_}" for f_ in failures]
+        )
     if failures:
         print("check_bench FAILED (>25% regression):", file=sys.stderr)
         for f_ in failures:
