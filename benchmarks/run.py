@@ -4,6 +4,8 @@
   search_bench  — Fig 5: per-family search QPS, hot vs cold page cache
   nrt_bench     — Fig 4: NRT QPS + reopen time vs commit frequency
   ingest_bench  — sustained ingest: lifecycle metrics + pipeline docs/sec
+  serve_bench   — closed-loop serving: coalesced waves vs sequential
+                  dispatch, offered vs achieved QPS, overload shedding
   kernel_bench  — Pallas kernel microbench + analytic TPU roofline
   embedbag_bench— EmbeddingBag substrate op scaling
 
@@ -119,13 +121,17 @@ def run_smoke_search(out_path: str = BENCH_SEARCH_JSON) -> dict:
     """Search smoke -> BENCH_search.json (raises when the fused path loses
     its >=2x batched-term margin over the unfused executors, when the
     search-at-ack live path loses its >=10x ack-to-visible margin over
-    flush-reopen, or when live==flush parity breaks)."""
-    from benchmarks import nrt_bench, search_bench
+    flush-reopen, when live==flush parity breaks, or when the serving
+    front end's coalesced waves lose to sequential dispatch at the tail /
+    overload fails to shed-and-bound)."""
+    from benchmarks import nrt_bench, search_bench, serve_bench
 
     search_bench.run_smoke(out_path)
     # merges the nrt_ack_to_visible_us / live_search_parity rows into the
     # same file (and enforces its own loud gates)
-    payload = nrt_bench.run_smoke(out_path)
+    nrt_bench.run_smoke(out_path)
+    # merges the closed-loop serving rows (coalescing + overload gates)
+    payload = serve_bench.run_smoke(out_path)
     print(f"# wrote {out_path}", file=sys.stderr)
     return payload
 

@@ -148,6 +148,15 @@ class Directory(ABC):
         """Unretired records past the last commit, oldest first."""
         return []
 
+    def set_wal_on_ack(self, cb) -> None:
+        """Register an ack-depth observer ``cb(seq, nbytes)`` fired after
+        each durable WAL append's barrier (serving-layer admission control
+        reads this).  No-op on kinds without a WAL."""
+
+    def wal_acked_bytes(self) -> int:
+        """Cumulative bytes durably acked through the WAL (0 without one)."""
+        return 0
+
     def wal_set_retire(self, seq: int) -> None:
         """Stage a retire watermark for the NEXT commit: records with
         ``seq`` at or below it are fully contained in the segments that
@@ -881,6 +890,12 @@ class ByteAddressableDirectory(Directory):
     def wal_last_seq(self) -> int:
         return self._wal.last_seq
 
+    def set_wal_on_ack(self, cb) -> None:
+        self._wal.on_ack = cb
+
+    def wal_acked_bytes(self) -> int:
+        return self._wal.acked_bytes
+
     # -- storage reclamation -------------------------------------------------
     def gc(
         self, live_names: List[str], live_heap_bytes: int = 0
@@ -981,11 +996,17 @@ class ByteAddressableDirectory(Directory):
         from repro.storage.wal import HeapWAL
 
         old_last_seq = self._wal.last_seq
+        old_wal = self._wal
         self._wal = HeapWAL(new_heap)  # rebind the chain to the new file
         # seq numbering is monotone across heap swaps: when the carried
         # chain is empty the fresh heap knows no history, and a reused seq
         # would hide new records behind the retired watermark
         self._wal.last_seq = max(self._wal.last_seq, old_last_seq)
+        # the ack ledger and its observer are per-directory, not per-heap:
+        # a compaction mid-serving must not reset admission accounting
+        self._wal.on_ack = old_wal.on_ack
+        self._wal.acked_bytes = old_wal.acked_bytes
+        self._wal.acked_records = old_wal.acked_records
         self._heap_file = new_file
         self._toc = new_toc
         self._committed_toc = {n: dict(v) for n, v in new_toc.items()}

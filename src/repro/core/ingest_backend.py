@@ -54,7 +54,9 @@ object identity so the device cache never re-uploads them.
 Fault injection (tests): ``inject_fault(sid, mode)`` arms a worker to
 SIGKILL itself at a crash point — ``"kill_before_add"`` (mid-batch, before
 any buffer/WAL mutation), ``"kill_after_commit"`` (between commit phase 1
-and its reply), ``"kill_before_gc"`` (after the manifest, before phase 2).
+and its reply), ``"kill_before_gc"`` (after the manifest, before phase 2),
+``"kill_on_poll"`` (on the next NRT visibility probe — the serving
+front end's reopen path, so a worker dying mid-fan-out is exercised).
 """
 
 from __future__ import annotations
@@ -431,6 +433,8 @@ def _worker_main(conn, sid, kind, path, rollback_gen, stopwords, writer_kwargs, 
                 s["busy_s"] = busy
                 reply = s
             elif op == "poll":
+                if fault == "kill_on_poll":
+                    os.kill(os.getpid(), signal.SIGKILL)
                 # one round trip for the NRT probe: buffered count + the
                 # segment generation (the mirror pulls only when it moved)
                 # + the live generation (the mirror re-syncs its live-tail

@@ -445,8 +445,16 @@ class ShardedSearcher:
     unsharded tie-break.  Facets merge by summing per-shard histograms.
     """
 
-    def __init__(self, searchers: Sequence[ShardSearcher]) -> None:
+    def __init__(
+        self, searchers: Sequence[ShardSearcher], token: Optional[tuple] = None
+    ) -> None:
         self.searchers = list(searchers)
+        # visibility token: the per-shard (segment generation, live-tail
+        # generation) pairs this view was bound at.  The serving front end
+        # stamps every response with its wave's searcher, and this token is
+        # the comparable identity of that snapshot (two views with equal
+        # tokens see byte-identical state).
+        self.token = token
 
     @property
     def total_docs(self) -> int:
@@ -576,7 +584,7 @@ class ShardedSearcherManager:
                 v._live_dev_map = old_views[sid]._live_dev_map
             views.append(v)
         CrossShardStats(views)  # binds itself onto the views
-        self._current = ShardedSearcher(views)
+        self._current = ShardedSearcher(views, token=tuple(gens))
         self._view_gens = gens
 
     @property

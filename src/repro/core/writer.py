@@ -530,6 +530,10 @@ class IndexWriter:
             live_root=live_root,
         )
         self.wal_stats["appends"] += 1
+        # ack-depth ledger for the serving layer: cumulative bytes whose
+        # durability the WAL has promised (read at the same point the
+        # frontend's pending-ack accounting releases the batch)
+        self.wal_stats["acked_bytes"] = self.directory.wal_acked_bytes()
 
     def delete_by_term(self, field: str, token: str) -> int:
         """Mark every document containing (field, token) deleted.

@@ -1,6 +1,25 @@
-"""Serving: KV-cache-as-segments + batched decode driver."""
+"""Serving: the closed-loop search/ingest front end over the sharded
+engine (``search_frontend.py``) plus the LM-side KV-cache-as-segments
+store and batched decode driver (``kv_segments.py`` / ``engine.py``)."""
 
 from repro.serve.kv_segments import KVSegmentStore
 from repro.serve.engine import ServeEngine
+from repro.serve.search_frontend import (
+    FrontendClosed,
+    OverloadError,
+    PendingIngest,
+    PendingSearch,
+    SearchFrontend,
+    ShardFailedError,
+)
 
-__all__ = ["KVSegmentStore", "ServeEngine"]
+__all__ = [
+    "FrontendClosed",
+    "KVSegmentStore",
+    "OverloadError",
+    "PendingIngest",
+    "PendingSearch",
+    "SearchFrontend",
+    "ServeEngine",
+    "ShardFailedError",
+]

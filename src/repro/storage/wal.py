@@ -115,6 +115,16 @@ class HeapWAL:
         self.heap = heap
         self.head = 0
         self.last_seq = 0
+        # ack-depth accounting for the serving layer's admission control:
+        # every durable append bumps ``acked_bytes``/``acked_records`` and
+        # fires ``on_ack(seq, nbytes)`` AFTER the barrier — the hook
+        # observes durability, never predicts it.  Callback errors must not
+        # poison the ack path (the record IS durable by then), so they are
+        # swallowed; compaction carries both the ledger and the hook to the
+        # rebound chain (see ByteAddressableDirectory).
+        self.on_ack = None  # Optional[Callable[[int, int], None]]
+        self.acked_bytes = 0
+        self.acked_records = 0
         # (seq, footprint) per acked record, ascending: live_bytes runs at
         # EVERY commit-time gc, and re-walking the chain with a crc32 per
         # record there turns gc O(unretired tail) — the ledger keeps that
@@ -186,6 +196,13 @@ class HeapWAL:
             self.head = off
             self.last_seq = seq
             self._ledger.append((seq, self.heap.footprint(off)))
+            self.acked_bytes += int(blob.nbytes)
+            self.acked_records += 1
+            if self.on_ack is not None:
+                try:
+                    self.on_ack(seq, int(blob.nbytes))
+                except Exception:
+                    pass  # observability hook; the ack itself already held
         return seq
 
     # -- replay / accounting -------------------------------------------------

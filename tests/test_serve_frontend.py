@@ -1,0 +1,369 @@
+"""Concurrency + fault harness for the serving front end.
+
+Four contracts pinned here, per ``serve/search_frontend.py``:
+
+  1. **Snapshot-bound bit-parity under concurrency** — N searcher threads
+     run against live ingest + policy reopens + commits; EVERY response
+     must be bit-identical to a serial ``search_batch([q], k)`` oracle
+     executed against the response's own bound fan-out searcher.  Torn
+     snapshots mid-wave, result bleed across waves, or lost per-request
+     ``k``/filters all fail this.
+  2. **Overload shedding** — past the queue-depth watermark, submission
+     raises a typed ``OverloadError`` (never blocks, never collapses the
+     queue); once the dispatcher drains below the watermark, admission
+     reopens.
+  3. **Ingest backpressure** — past ``max_pending_ack_bytes`` of accepted
+     but un-acked ingest, producers STALL in ``submit_ingest`` and are
+     released when acks drain the ledger; an accepted batch is always
+     acked or failed, never dropped.
+  4. **Fault surface (processes backend)** — SIGKILL of a shard worker
+     mid-operation surfaces as a typed ``ShardFailedError`` naming the
+     shard, the coordinator never hangs, and queries keep serving from
+     the bound snapshot.
+
+All waits are bounded: a hang is a test failure (TimeoutError), not a CI
+timeout.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import ShardedEngine
+from repro.core.search import (
+    BooleanQuery,
+    FacetQuery,
+    PhraseQuery,
+    RangeQuery,
+    TermQuery,
+)
+from repro.data.corpus import CorpusConfig, synthetic_corpus
+from repro.serve import (
+    FrontendClosed,
+    OverloadError,
+    SearchFrontend,
+    ShardFailedError,
+)
+
+pytestmark = pytest.mark.serve
+
+KINDS = ["ram", "fs-ssd", "byte-pmem"]
+BACKENDS = ["serial", "threads", "processes"]
+WAIT = 60.0  # every blocking wait in this file is bounded by this
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return list(synthetic_corpus(CorpusConfig(n_docs=360, vocab=300, seed=11)))
+
+
+def _mixed_queries(n, seed):
+    """A deterministic mixed-family query stream (exercises per-family
+    coalescing inside a wave, filters, facets and sorts)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        w = [f"w{int(rng.integers(0, 40))}" for _ in range(3)]
+        fam = i % 5
+        if fam == 0:
+            out.append(TermQuery("body", w[0]))
+        elif fam == 1:
+            out.append(
+                BooleanQuery((TermQuery("body", w[0]), TermQuery("body", w[1])),
+                             "and" if i % 2 else "or")
+            )
+        elif fam == 2:
+            out.append(PhraseQuery("body", (w[0], w[1])))
+        elif fam == 3:
+            out.append(RangeQuery("month", int(rng.integers(0, 6)), 11))
+        else:
+            out.append(FacetQuery(TermQuery("body", w[2]), "month", 12))
+    return out
+
+
+def _make_engine(kind, tmp_path, backend, corpus, n_seed=120):
+    use_wal = kind.startswith("byte")
+    eng = ShardedEngine(
+        kind,
+        path=str(tmp_path / "serve") if kind != "ram" else None,
+        n_shards=2,
+        backend=backend,
+        use_wal=use_wal,
+    )
+    eng.add_documents(corpus[:n_seed])
+    eng.flush()
+    eng.commit()
+    eng.reopen()
+    return eng
+
+
+def _assert_oracle_parity(req):
+    """The snapshot-binding contract: re-run the request serially against
+    its OWN bound searcher and demand bit-identity."""
+    td = req.result(0)  # already done
+    ref = req.searcher.search_batch([req.query], k=req.k)[0]
+    ctx = f"wave={req.wave} seq={req.seqno} {req.query!r} k={req.k}"
+    assert td.total_hits == ref.total_hits, ctx
+    np.testing.assert_array_equal(td.doc_ids, ref.doc_ids, err_msg=ctx)
+    np.testing.assert_array_equal(td.scores, ref.scores, err_msg=ctx)
+    if isinstance(req.query, FacetQuery):
+        np.testing.assert_array_equal(td.facets, ref.facets, err_msg=ctx)
+
+
+# ---------------------------------------------------------------------------
+# 1. the stress matrix: searchers vs live ingest + reopen + commit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("kind", KINDS)
+def test_concurrent_search_ingest_bit_parity(kind, backend, tmp_path, corpus):
+    """4 searcher threads × 30 requests each against live ingest with the
+    reopen policy firing: every response oracle-identical at its bound
+    snapshot, every submitted request resolved, ingest fully acked."""
+    eng = _make_engine(kind, tmp_path, backend, corpus)
+    fe = SearchFrontend(
+        eng, max_wave=16, reopen_lag_docs=40, reopen_lag_s=0.01,
+        commit_every_docs=160,
+    )
+    done = []
+    errors = []
+
+    def searcher_thread(tid):
+        try:
+            qs = _mixed_queries(30, seed=100 + tid)
+            mine = []
+            for i, q in enumerate(qs):
+                req = fe.submit(q, k=4 + (i % 3) * 6)  # k in {4, 10, 16}
+                mine.append(req)
+                if i % 7 == 0:
+                    time.sleep(0.001)  # vary wave shapes
+            for req in mine:
+                req.result(WAIT)
+            done.append(mine)
+        except Exception as exc:  # pragma: no cover - failure path
+            errors.append(exc)
+
+    threads = [
+        threading.Thread(target=searcher_thread, args=(t,)) for t in range(4)
+    ]
+    for t in threads:
+        t.start()
+    # live ingest while the searchers run
+    for j in range(120, 360, 40):
+        fe.ingest(corpus[j : j + 40], timeout=WAIT)
+    # one probe wave after the last ack: the lag policy must fire for it,
+    # so the probe observes every acked document
+    probe = fe.search(RangeQuery("month", 0, 11), k=1, timeout=WAIT)
+    assert probe.total_hits == 360
+    for t in threads:
+        t.join(WAIT)
+        assert not t.is_alive(), "searcher thread hung"
+    assert not errors, errors
+
+    st = fe.stats()
+    fe.close()
+
+    assert st["queries"] == 4 * 30 + 1
+    assert st["ingest_docs"] == 240
+    assert st["reopens"] >= 1, "reopen policy never fired"
+    # the whole point of the layer: concurrency coalesces into fused waves
+    assert st["waves"] <= st["queries"]
+
+    # oracle parity, post-hoc: bound snapshots are immutable point-in-time
+    # views, so the comparison is exact even after close()
+    for mine in done:
+        waves = [r.wave for r in mine]
+        assert waves == sorted(waves), "a client's responses reordered"
+        for req in mine:
+            _assert_oracle_parity(req)
+
+    # ingest landed: one forced reopen on a fresh engine view shows all docs
+    eng.reopen()
+    n = eng.manager.searcher.search_batch([RangeQuery("month", 0, 11)], k=1)[0]
+    assert n.total_hits == 360
+    eng.close()
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_wave_accounting_and_visibility_lag(kind, tmp_path, corpus):
+    """Staged queue (start=False): a burst coalesces into ≤ ceil(n/max_wave)
+    waves, and the visibility-lag policy exposes acked docs by the next
+    wave once the doc threshold is crossed."""
+    eng = _make_engine(kind, tmp_path, None, corpus)
+    fe = SearchFrontend(eng, max_wave=8, reopen_lag_docs=1, reopen_lag_s=0.0,
+                        start=False)
+    reqs = [fe.submit(TermQuery("body", "w1"), k=5) for _ in range(20)]
+    ing = fe.submit_ingest(corpus[120:200])
+    fe.start()
+    ing.result(WAIT)
+    for r in reqs:
+        r.result(WAIT)
+    # a second burst AFTER the ack must see the new docs (lag policy fired)
+    probe = fe.submit(RangeQuery("month", 0, 11), k=1)
+    assert probe.result(WAIT).total_hits == 200
+    st = fe.stats()
+    fe.close()
+    assert st["waves"] <= (20 + 7) // 8 + 2  # burst + probe (+1 slack wave)
+    assert st["max_wave_seen"] <= 8
+    assert st["reopens"] >= 1
+    for r in reqs:
+        _assert_oracle_parity(req=r)
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# 2. overload shedding
+# ---------------------------------------------------------------------------
+
+
+def test_overload_sheds_then_reopens_admission(corpus):
+    """Stage the queue past the watermark with the dispatcher stopped: the
+    next submit sheds with a typed error carrying the depth; draining
+    reopens admission and every queued request still resolves."""
+    eng = _make_engine("ram", None, None, corpus)
+    fe = SearchFrontend(eng, max_wave=4, shed_watermark=6, start=False)
+    staged = [fe.submit(TermQuery("body", "w2"), k=3) for _ in range(6)]
+    with pytest.raises(OverloadError) as ei:
+        fe.submit(TermQuery("body", "w2"), k=3)
+    assert ei.value.depth == 6 and ei.value.watermark == 6
+    assert fe.stats()["shed"] == 1
+
+    fe.start()
+    for r in staged:
+        r.result(WAIT)  # shed never cancels accepted work
+        _assert_oracle_parity(r)
+    fe.drain(WAIT)
+    # admission reopened: depth is back under the watermark
+    fe.search(TermQuery("body", "w2"), k=3, timeout=WAIT)
+    fe.close()
+    with pytest.raises(FrontendClosed):
+        fe.submit(TermQuery("body", "w2"))
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# 3. ingest backpressure (the pending-ack ledger)
+# ---------------------------------------------------------------------------
+
+
+def test_ingest_backpressure_stalls_and_releases(corpus):
+    """A producer over the pending-ack budget stalls inside submit_ingest
+    and is released when the dispatcher's acks drain the ledger.  The
+    first batch is always admitted (a batch larger than the whole budget
+    must still be ackable)."""
+    eng = _make_engine("ram", None, None, corpus)
+    fe = SearchFrontend(eng, max_pending_ack_bytes=1, start=False)
+    first = fe.submit_ingest(corpus[120:160])  # admitted: ledger was empty
+    assert fe.pending_ack_bytes > 1
+
+    released = threading.Event()
+    tickets = []
+
+    def producer():
+        tickets.append(fe.submit_ingest(corpus[160:200], timeout=WAIT))
+        released.set()
+
+    t = threading.Thread(target=producer)
+    t.start()
+    time.sleep(0.05)
+    assert not released.is_set(), "producer admitted past the budget"
+    assert fe.stats()["ingest_stalls"] == 1
+
+    fe.start()  # acks drain the ledger -> FIFO wakeup
+    assert released.wait(WAIT), "stalled producer never released"
+    t.join(WAIT)
+    first.result(WAIT)
+    tickets[0].result(WAIT)
+    fe.drain(WAIT)
+    assert fe.pending_ack_bytes == 0
+    st = fe.stats()
+    assert st["ingest_docs"] == 80
+    if st["wal_acked_records"]:
+        # byte-path ledger (when the engine runs an in-process WAL): the
+        # precise barrier-side ledger must cover every acked batch
+        assert st["wal_acked_records"] >= st["ingest_batches"]
+    fe.close()
+    eng.close()
+
+
+def test_ingest_stall_timeout_is_typed(corpus):
+    """A stalled producer with the dispatcher stopped times out with
+    TimeoutError (bounded waits everywhere) and the ledger stays sane."""
+    eng = _make_engine("ram", None, None, corpus)
+    fe = SearchFrontend(eng, max_pending_ack_bytes=1, start=False)
+    fe.submit_ingest(corpus[120:140])
+    with pytest.raises(TimeoutError, match="pending-ack"):
+        fe.submit_ingest(corpus[140:160], timeout=0.05)
+    fe.start()
+    fe.drain(WAIT)
+    assert fe.pending_ack_bytes == 0
+    fe.close()
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# 4. fault injection: SIGKILL a shard worker mid-fan-out (processes only)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["processes"])
+def test_worker_sigkill_mid_ingest_is_typed_and_survivable(
+    backend, tmp_path, corpus
+):
+    """SIGKILL shard 0's worker at the next add: the ingest ticket fails
+    with ShardFailedError naming shard 0 (op='add'), no hang, and queries
+    keep serving from the bound snapshot afterwards."""
+    eng = _make_engine("ram", tmp_path, backend, corpus)
+    fe = SearchFrontend(eng, reopen_lag_docs=10_000, reopen_lag_s=1e9)
+    before = fe.search(RangeQuery("month", 0, 11), k=1, timeout=WAIT)
+    assert before.total_hits == 120
+
+    eng.writer.inject_fault(0, "kill_before_add")
+    with pytest.raises(ShardFailedError) as ei:
+        fe.ingest(corpus[120:160], timeout=WAIT)
+    assert ei.value.sids == (0,)
+    assert ei.value.op == "add"
+    assert fe.failed_shards == (0,)
+
+    # the coordinator survived: searches still resolve (bound snapshot)
+    after = fe.search(RangeQuery("month", 0, 11), k=1, timeout=WAIT)
+    assert after.total_hits == 120
+    st = fe.stats()
+    assert st["shard_failures"] >= 1
+    fe.close()
+    eng.close()  # teardown with a dead worker must reap the survivor
+
+
+@pytest.mark.parametrize("backend", ["processes"])
+def test_worker_sigkill_mid_reopen_marks_shard_and_serves_on(
+    backend, tmp_path, corpus
+):
+    """SIGKILL shard 0's worker on the reopen path (the 'poll' round trip):
+    the policy reopen records a typed per-shard failure, the dead shard is
+    skipped by later reopens, and search + ingest-to-the-dead-shard behave
+    per contract (serve on / typed failure)."""
+    eng = _make_engine("ram", tmp_path, backend, corpus)
+    fe = SearchFrontend(eng, reopen_lag_docs=1, reopen_lag_s=0.0)
+    assert fe.search(RangeQuery("month", 0, 11), k=1, timeout=WAIT).total_hits == 120
+
+    eng.writer.inject_fault(0, "kill_on_poll")
+    fe.ingest(corpus[120:160], timeout=WAIT)  # ack path does not poll
+    # the next wave triggers the policy reopen, which hits the dead worker
+    td = fe.search(RangeQuery("month", 0, 11), k=1, timeout=WAIT)
+    assert td.total_hits >= 120  # served from a consistent snapshot
+    assert fe.failed_shards == (0,)
+    assert fe.shard_failures and fe.shard_failures[0].op == "reopen"
+
+    # later reopens skip the dead shard instead of re-failing
+    fe.reopen(timeout=WAIT)
+    assert fe.stats()["shard_failures"] == 1
+
+    # ingest routed at the dead shard: typed failure, coordinator alive
+    with pytest.raises(ShardFailedError):
+        fe.ingest(corpus[160:200], timeout=WAIT)
+    assert fe.search(RangeQuery("month", 0, 11), k=1, timeout=WAIT).total_hits >= 120
+    fe.close()
+    eng.close()

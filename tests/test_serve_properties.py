@@ -1,0 +1,129 @@
+"""Hypothesis properties for the serving front end's closed-loop contract.
+
+Three invariants, for ANY interleaving of ingest batches and query bursts
+the strategy draws:
+
+  1. **Never lose an acked write** — every ingest ticket that resolved
+     (the ack) is visible after a forced reopen: the engine's total doc
+     count equals seed + sum(acked batch sizes).
+  2. **Never reorder a client's responses** — tickets submitted in order
+     by one client resolve bound to non-decreasing wave numbers (FIFO
+     through the dispatcher), whatever waves they coalesce into.
+  3. **Waves preserve per-request k and filters** — each response is
+     bit-identical to a serial oracle run at the response's OWN bound
+     snapshot with the request's OWN ``k`` and query (filters, facets),
+     even though the wave executed fused at the wave-max ``k``.
+
+``hypothesis`` is an optional test dependency (same convention as
+``test_wal_torn.py``): the module skips itself when absent; CI installs it
+via requirements-test.txt.  ``tests/test_serve_frontend.py`` carries
+deterministic twins of these scenarios so the contract stays covered
+either way.
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+pytestmark = pytest.mark.serve
+
+from repro.core import ShardedEngine
+from repro.core.search import FacetQuery, RangeQuery, TermQuery
+from repro.serve import SearchFrontend
+
+TOKENS = [f"w{i}" for i in range(8)]
+SEED_DOCS = 40
+
+
+def _docs(n0, size):
+    """Deterministic batch of ``size`` docs starting at global doc ``n0``:
+    a recognisable token soup + month doc values (facet/range fodder)."""
+    out = []
+    for j in range(size):
+        n = n0 + j
+        toks = " ".join(TOKENS[(n + i) % len(TOKENS)] for i in range(1 + n % 3))
+        out.append(({"body": f"{toks} common"}, {"month": n % 12}))
+    return out
+
+
+def _query(fam, tok):
+    if fam == 0:
+        return TermQuery("body", TOKENS[tok])
+    if fam == 1:
+        return RangeQuery("month", tok % 12, 11)
+    return FacetQuery(TermQuery("body", "common"), "month", 12)
+
+
+# one op per draw: ("ingest", size) or ("burst", [(fam, tok, k), ...])
+_op = st.one_of(
+    st.tuples(st.just("ingest"), st.integers(min_value=1, max_value=12)),
+    st.tuples(
+        st.just("burst"),
+        st.lists(
+            st.tuples(
+                st.integers(0, 2),           # query family
+                st.integers(0, len(TOKENS) - 1),
+                st.integers(1, 15),          # per-request k
+            ),
+            min_size=1,
+            max_size=6,
+        ),
+    ),
+)
+
+
+@settings(max_examples=15, deadline=None)
+@given(ops=st.lists(_op, min_size=1, max_size=8))
+def test_closed_loop_invariants(ops):
+    eng = ShardedEngine("ram", n_shards=2)
+    eng.add_documents(_docs(0, SEED_DOCS))
+    eng.flush()
+    eng.commit()
+    eng.reopen()
+    fe = SearchFrontend(eng, max_wave=4, reopen_lag_docs=4, reopen_lag_s=0.0)
+    try:
+        n_docs = SEED_DOCS
+        acked = 0
+        client_reqs = []  # one logical client: submission order matters
+        ingest_tickets = []
+        for op, payload in ops:
+            if op == "ingest":
+                ingest_tickets.append(
+                    (payload, fe.submit_ingest(_docs(n_docs, payload)))
+                )
+                n_docs += payload
+            else:
+                for fam, tok, k in payload:
+                    client_reqs.append(fe.submit(_query(fam, tok), k=k))
+        fe.drain(30.0)
+
+        # 1. never lose an acked write
+        for size, t in ingest_tickets:
+            assert len(t.result(30.0)) == size  # every accepted batch acked
+            acked += size
+        fe.reopen(timeout=30.0)
+        td = fe.search(RangeQuery("month", 0, 11), k=1, timeout=30.0)
+        assert td.total_hits == SEED_DOCS + acked
+
+        # 2. never reorder a client's responses
+        for r in client_reqs:
+            r.result(30.0)
+        waves = [r.wave for r in client_reqs]
+        assert waves == sorted(waves)
+
+        # 3. per-request k + filters survive coalescing: serial oracle at
+        # the bound snapshot, bit-identical
+        for r in client_reqs:
+            ref = r.searcher.search_batch([r.query], k=r.k)[0]
+            got = r.result(30.0)
+            ctx = f"{r.query!r} k={r.k} wave={r.wave}"
+            assert got.total_hits == ref.total_hits, ctx
+            np.testing.assert_array_equal(got.doc_ids, ref.doc_ids, err_msg=ctx)
+            np.testing.assert_array_equal(got.scores, ref.scores, err_msg=ctx)
+            if isinstance(r.query, FacetQuery):
+                np.testing.assert_array_equal(got.facets, ref.facets, err_msg=ctx)
+    finally:
+        fe.close()
+        eng.close()

@@ -20,11 +20,20 @@ The search-path trajectory is gated the same way against
   * ``fused_term_speedup_ram``        — fused vs unfused batched term QPS
   * ``families.*.lat_p50_ms``         — fused per-query latency, per family
   * ``roofline.term.roofline_frac``   — achieved fraction of measured membw
+  * ``serve.coalesce_p99_speedup_ram``— coalesced vs sequential serving p99
+  * ``serve.kinds.ram.achieved_qps_coalesced`` — frontend saturated QPS
 
 Ratio rows ("higher is better") regress when fresh < 0.75 * baseline;
 latency rows ("lower is better") when fresh > 1.25 * baseline.  A key
 missing from the *baseline* is skipped (bootstrap: the first PR that adds
 a row commits its own baseline); a key missing from the *fresh* run fails.
+
+Timing floors deflake, floors do not loosen: when a search-side TIMING
+gate fails (nrt ack-to-visible, fused speedup, serve rows), the owning
+smoke is re-run up to twice more (best-of-3 overall) and the comparison
+repeated; every retry is announced in the CI step summary (RETRIED), and
+a floor that still fails after the retries fails the job.  ``--no-retry``
+disables the re-runs (for bisecting a genuinely regressed measurement).
 
 CI wiring (ci.yml): the committed files are copied aside BEFORE the smoke
 steps overwrite them, then::
@@ -94,6 +103,10 @@ SEARCH_GATES = [
     ("nrt.nrt_ack_to_visible_us.fs-ssd", "lower"),
     ("nrt.nrt_ack_to_visible_us.byte-pmem", "lower"),
     ("nrt.ack_speedup_vs_flush.ram", "higher"),
+    # closed-loop serving front end (serve_bench --smoke): the coalescing
+    # win at the tail and the frontend's saturated throughput
+    ("serve.coalesce_p99_speedup_ram", "higher"),
+    ("serve.kinds.ram.achieved_qps_coalesced", "higher"),
 ]
 
 # Absolute HARD floors on the fresh search measurement (no baseline ratio,
@@ -107,6 +120,28 @@ SEARCH_GATES = [
 SEARCH_FLOORS = [
     ("nrt.ack_speedup_vs_flush.ram", 10.0),
     ("nrt.live_search_parity", 1.0),
+]
+
+# Serving-front-end hard floors (``serve_bench --smoke``), same convention:
+# coalesced waves must not LOSE to sequential dispatch at the tail, and the
+# overload run must have shed (admission control engaged) with a served p99
+# bounded by the unshed control.  Guarded by the same bootstrap rule as the
+# nrt floors — a committed file that predates serve_bench only notes.
+SERVE_FLOORS = [
+    ("serve.coalesce_p99_speedup_ram", 1.0),
+    ("serve.overload_shed_ok", 1.0),
+]
+
+# Which smoke re-measures which flaky timing key (the deflake retry): a
+# failing search-side key maps by prefix to the benchmarks module whose
+# run_smoke re-measures it.  ``preserve`` lists sibling blocks the module's
+# run_smoke would OVERWRITE rather than merge (search_bench rewrites the
+# whole payload), carried across the re-run by the retry harness.
+RETRY_SPECS = [
+    (("nrt.",), "nrt_bench", ()),
+    (("serve.",), "serve_bench", ()),
+    (("families.", "roofline.", "fused_term_speedup_ram"), "search_bench",
+     ("nrt", "serve")),
 ]
 
 
@@ -156,11 +191,12 @@ def step_summary(lines) -> None:
             f.write(line + "\n")
 
 
-def check_search_floors(fresh: dict) -> Tuple[list, list]:
-    """Absolute floors on the fresh search measurement (search-at-ack):
-    unlike the ratio gates these never relax with a drifting baseline."""
+def check_search_floors(fresh: dict, floors=SEARCH_FLOORS) -> Tuple[list, list]:
+    """Absolute floors on the fresh search measurement (search-at-ack,
+    serving front end): unlike the ratio gates these never relax with a
+    drifting baseline."""
     failures, notes = [], []
-    for key, floor in SEARCH_FLOORS:
+    for key, floor in floors:
         new = lookup(fresh, key)
         if new is None:
             failures.append(f"{key}: missing from the fresh smoke run")
@@ -252,6 +288,116 @@ def _compare(label: str, baseline_path: str, fresh_path: str, gates) -> list:
     return [f"{label}: {f_}" for f_ in failures]
 
 
+def _search_side(args) -> list:
+    """The full search-file comparison (ratio gates + nrt + serve floors);
+    pulled out of main so the deflake retry can repeat it after a re-run."""
+    failures = _compare(
+        "search", args.baseline_search, args.fresh_search, SEARCH_GATES
+    )
+    if os.path.exists(args.fresh_search):
+        with open(args.fresh_search) as f:
+            fresh_search = json.load(f)
+        for block, floors, hint in (
+            ("nrt", SEARCH_FLOORS, "benchmarks.nrt_bench --smoke"),
+            ("serve", SERVE_FLOORS, "benchmarks.serve_bench --smoke"),
+        ):
+            if block not in fresh_search:
+                # bootstrap: the committed file predates this smoke
+                print(
+                    f"  [search] {block} floors: {block} rows not in this "
+                    f"smoke run (run {hint} to measure)"
+                )
+                continue
+            sf_failures, sf_notes = check_search_floors(fresh_search, floors)
+            for n in sf_notes:
+                print(f"  [search] {n}")
+            failures += [f"search: {f_}" for f_ in sf_failures]
+    return failures
+
+
+def _rerun_smoke(module: str, out_path: str, preserve: Tuple[str, ...]) -> bool:
+    """Re-measure one flaky smoke in a subprocess: runs
+    ``benchmarks.<module>.run_smoke(out_path)`` from the repo root,
+    carrying ``preserve`` blocks across modules that rewrite the payload
+    instead of merging.  The smoke's own internal gate (SystemExit) is
+    tolerated here — the retried COMPARISON decides pass/fail."""
+    import subprocess
+
+    code = (
+        "import json, os, sys\n"
+        f"path = {out_path!r}\n"
+        f"preserve = {tuple(preserve)!r}\n"
+        "saved = {}\n"
+        "if preserve and os.path.exists(path):\n"
+        "    with open(path) as f:\n"
+        "        data = json.load(f)\n"
+        "    saved = {k: data[k] for k in preserve if k in data}\n"
+        f"from benchmarks.{module} import run_smoke\n"
+        "try:\n"
+        "    run_smoke(path)\n"
+        "except SystemExit as e:\n"
+        "    print(f'retry: smoke gate still failing: {e}')\n"
+        "if saved:\n"
+        "    with open(path) as f:\n"
+        "        data = json.load(f)\n"
+        "    data.update(saved)\n"
+        "    with open(path, 'w') as f:\n"
+        "        json.dump(data, f, indent=2, sort_keys=True)\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(REPO, "src"), env.get("PYTHONPATH")) if p
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", code], cwd=REPO, env=env, timeout=1800
+    )
+    return proc.returncode == 0
+
+
+def _retry_flaky(args, failures: list) -> list:
+    """Best-of-3 deflake for the search-side TIMING floors: map each
+    failing key to the smoke that measures it, re-run those smokes, and
+    repeat the comparison — at most twice (3 measurements total).  Floors
+    never loosen; non-retryable failures (missing files, ingest rows) pass
+    through untouched.  Every retry is loud in the CI step summary: a
+    silently-deflaked floor would hide genuine jitter trends."""
+    summary = []
+    for attempt in (2, 3):
+        modules = []
+        for f_ in failures:
+            key = f_.removeprefix("search: ").split(":", 1)[0]
+            for prefixes, module, preserve in RETRY_SPECS:
+                if key.startswith(prefixes) and module not in [m for m, _ in modules]:
+                    modules.append((module, preserve))
+        if not modules:
+            break  # nothing retryable failed
+        for module, preserve in modules:
+            print(
+                f"check_bench: RETRY {attempt}/3 — re-running "
+                f"benchmarks.{module}.run_smoke (flaky timing floor)",
+                file=sys.stderr,
+            )
+            summary.append(
+                f"- RETRIED benchmarks.{module} (attempt {attempt}/3): "
+                + "; ".join(
+                    f_ for f_ in failures
+                    if f_.removeprefix("search: ").startswith(
+                        tuple(p for spec in RETRY_SPECS if spec[1] == module
+                              for p in spec[0])
+                    )
+                )
+            )
+            if not _rerun_smoke(module, args.fresh_search, preserve):
+                summary.append(f"- benchmarks.{module} re-run itself crashed")
+        failures = _search_side(args)
+        if not failures:
+            summary.append(f"- retry attempt {attempt}/3: all gates pass")
+            break
+    if summary:
+        step_summary(["### check_bench: flaky-floor retries"] + summary)
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument(
@@ -274,6 +420,12 @@ def main() -> int:
         default=os.path.join(REPO, "BENCH_search.json"),
         help="freshly measured search smoke JSON",
     )
+    ap.add_argument(
+        "--no-retry",
+        action="store_true",
+        help="fail flaky timing floors immediately instead of re-running "
+        "their smokes (best-of-3)",
+    )
     args = ap.parse_args()
     failures = _compare("ingest", args.baseline, args.fresh, GATES)
     if os.path.exists(args.fresh):
@@ -283,23 +435,10 @@ def main() -> int:
         for n in floor_notes:
             print(f"  [ingest] {n}")
         failures += [f"ingest: {f_}" for f_ in floor_failures]
-    failures += _compare(
-        "search", args.baseline_search, args.fresh_search, SEARCH_GATES
-    )
-    if os.path.exists(args.fresh_search):
-        with open(args.fresh_search) as f:
-            fresh_search = json.load(f)
-        if lookup(fresh_search, "nrt.live_search_parity") is None:
-            # bootstrap: the committed file predates nrt_bench --smoke
-            print(
-                "  [search] search-at-ack floors: nrt rows not in this "
-                "smoke run (run benchmarks.nrt_bench --smoke to measure)"
-            )
-        else:
-            sf_failures, sf_notes = check_search_floors(fresh_search)
-            for n in sf_notes:
-                print(f"  [search] {n}")
-            failures += [f"search: {f_}" for f_ in sf_failures]
+    search_failures = _search_side(args)
+    if search_failures and not args.no_retry:
+        search_failures = _retry_flaky(args, search_failures)
+    failures += search_failures
     if failures:
         step_summary(
             ["### check_bench FAILED (>25% regression)"]

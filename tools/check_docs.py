@@ -1,13 +1,16 @@
-"""Docs gate (CI): core + storage + kernels modules must stay documented.
+"""Docs gate (CI): core + storage + kernels + serve modules must stay
+documented.
 
 Fails when README.md or ARCHITECTURE.md is missing, or when any module
-under ``src/repro/core``, ``src/repro/storage`` or ``src/repro/kernels``
-is mentioned in neither — the module map in ARCHITECTURE.md is where new
-layers land with a documented home, and this check is what keeps it from
-rotting (PRs 1-3 were discoverable only through commit messages; that
-stops here; the storage package joined the walk when ``storage/wal.py``
-landed, the kernels package when the fused executors made it a load-
-bearing query-path layer rather than a substrate demo).
+under ``src/repro/core``, ``src/repro/storage``, ``src/repro/kernels`` or
+``src/repro/serve`` is mentioned in neither — the module map in
+ARCHITECTURE.md is where new layers land with a documented home, and this
+check is what keeps it from rotting (PRs 1-3 were discoverable only
+through commit messages; that stops here; the storage package joined the
+walk when ``storage/wal.py`` landed, the kernels package when the fused
+executors made it a load-bearing query-path layer rather than a substrate
+demo, the serve package when the closed-loop front end made it the
+serving entry point rather than a demo shim).
 
 A module "appears" when its name is present in either doc: the basename
 for top-level modules (``writer.py``, ``heap.py``), the package-qualified
@@ -26,6 +29,7 @@ ROOTS = (
     os.path.join(REPO, "src", "repro", "core"),
     os.path.join(REPO, "src", "repro", "storage"),
     os.path.join(REPO, "src", "repro", "kernels"),
+    os.path.join(REPO, "src", "repro", "serve"),
 )
 DOCS = ("README.md", "ARCHITECTURE.md")
 
