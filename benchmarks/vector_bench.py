@@ -1,0 +1,229 @@
+"""Dense-vector + hybrid retrieval smoke bench (the PR-10 trajectory rows).
+
+Teofili & Lin ("Lucene for ANN Search on Arbitrary Dense Vectors") layer
+dense retrieval on Lucene's storage abstractions and find the *scoring
+kernel* dominates; our tentpole stores vectors in the same heap-resident
+doc-values columns as every other workload and scores them device-side.
+This bench pins the two claims CI must protect:
+
+  * batching wins — a 32-query vector batch through the fused executors
+    (``use_pallas``: the Pallas ``vector_topk`` kernel on a compiled
+    backend, its jnp twin on CPU — interpret-auto, same convention as the
+    term kernels) must beat the brute-force ``search_single`` loop by
+    >= ``VECTOR_SPEEDUP_GATE`` x on ram, because one dispatch per family
+    group amortizes what 32 per-query dispatches cannot;
+
+  * fusion stays exact — the hybrid BM25 ⊕ vector path through the fused
+    executors returns BIT-identical (ids and scores) results to the brute
+    oracle: fixed per-family normalization has no result-set-dependent
+    rescaling to drift.
+
+``--smoke`` merges a ``vector`` block into ``BENCH_search.json`` (written
+earlier in the same CI step by ``search_bench``/``nrt_bench``/
+``serve_bench``) and also writes ``BENCH_vector_smoke.json`` — the
+``bench-vector`` artifact.  ``tools/check_bench.py`` gates the block:
+25% regression tripwires vs the committed baseline plus the two hard
+floors above (speedup retryable best-of-3, parity never).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import SearchEngine
+from repro.core.search import HybridQuery, TermQuery, VectorQuery
+from repro.core.writer import VECTOR_FIELD
+from repro.data.corpus import CorpusConfig, synthetic_corpus, _word
+
+BENCH_SEARCH_JSON = "BENCH_search.json"
+BENCH_VECTOR_JSON = "BENCH_vector_smoke.json"
+
+N_DOCS = 4000
+DIM = 64
+BATCH = 32               # the gated batch size (ISSUE: ram @ batch 32)
+FLUSH_EVERY = 1000
+N_REPS = 3               # brute per-query loops (min taken)
+N_LAT_REPS = 20          # batch executions for the latency distribution
+VECTOR_SPEEDUP_GATE = 2.0
+
+
+def _vec_corpus(n_docs: int = N_DOCS, dim: int = DIM, seed: int = 61):
+    """Synthetic text corpus + a unit-scale vector per doc (every doc
+    vectored: the bench measures scoring, not sparsity handling)."""
+    rng = np.random.default_rng(seed)
+    for fields, dv in synthetic_corpus(CorpusConfig(n_docs=n_docs, seed=23)):
+        dv = dict(dv)
+        dv[VECTOR_FIELD] = rng.standard_normal(dim).astype(np.float32)
+        yield fields, dv
+
+
+def _build(use_pallas: bool) -> SearchEngine:
+    eng = SearchEngine("ram", use_pallas=use_pallas)
+    for i, (fields, dv) in enumerate(_vec_corpus()):
+        eng.add(fields, dv)
+        if (i + 1) % FLUSH_EVERY == 0:
+            eng.flush()
+    eng.commit()
+    eng.reopen()
+    return eng
+
+
+def _vector_queries(batch: int = BATCH, dim: int = DIM, seed: int = 67):
+    rng = np.random.default_rng(seed)
+    return [
+        VectorQuery(
+            tuple(float(x) for x in rng.standard_normal(dim)),
+            metric="dot" if i % 2 == 0 else "cosine",
+        )
+        for i in range(batch)
+    ]
+
+
+def _hybrid_queries(batch: int = BATCH, dim: int = DIM, seed: int = 71):
+    rng = np.random.default_rng(seed)
+    return [
+        HybridQuery(
+            TermQuery("body", _word(1 + i % 8)),
+            VectorQuery(
+                tuple(float(x) for x in rng.standard_normal(dim)),
+                metric="cosine",
+            ),
+            alpha=0.5,
+        )
+        for i in range(batch)
+    ]
+
+
+def _identical(a, b) -> bool:
+    return (
+        a.total_hits == b.total_hits
+        and np.array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+        and np.array_equal(np.asarray(a.scores), np.asarray(b.scores))
+    )
+
+
+def run_vector(batch: int = BATCH) -> Dict:
+    """brute per-query loop vs batched fused executors, ram, one index."""
+    brute = _build(use_pallas=False)
+    feng = _build(use_pallas=True)
+    vqs = _vector_queries(batch)
+    hqs = _hybrid_queries(batch)
+    # warm every jit cache the timed loops touch
+    for q in vqs:
+        brute.searcher.search_single(q)
+    brute.search_batch(vqs)
+    feng.search_batch(vqs)
+    feng.search_batch(hqs)
+    brute.search_batch(hqs)
+
+    brute_times: List[float] = []
+    for _ in range(N_REPS):
+        t0 = time.perf_counter()
+        for q in vqs:
+            brute.searcher.search_single(q)
+        brute_times.append(time.perf_counter() - t0)
+    kernel_times: List[float] = []
+    for _ in range(N_LAT_REPS):
+        t0 = time.perf_counter()
+        feng.search_batch(vqs)
+        kernel_times.append(time.perf_counter() - t0)
+    hybrid_times: List[float] = []
+    for _ in range(N_LAT_REPS):
+        t0 = time.perf_counter()
+        feng.search_batch(hqs)
+        hybrid_times.append(time.perf_counter() - t0)
+
+    # parity hard bits: the fused path (kernel or jnp twin) against the
+    # brute oracle, bit-for-bit, over both families
+    vec_parity = all(
+        _identical(g, brute.searcher.search_single(q, k=10))
+        for q, g in zip(vqs, feng.search_batch(vqs, k=10))
+    )
+    hyb_parity = all(
+        _identical(g, brute.searcher.search_single(q, k=10))
+        for q, g in zip(hqs, feng.search_batch(hqs, k=10))
+    )
+
+    brute_qps = batch / min(brute_times)
+    kernel_qps = batch / min(kernel_times)
+    hybrid_lat_ms = np.asarray(hybrid_times) / batch * 1e3
+    return {
+        "batch": batch,
+        "dim": DIM,
+        "n_docs": N_DOCS,
+        "brute_qps": round(brute_qps, 1),
+        "kernel_qps": round(kernel_qps, 1),
+        "kernel_speedup_ram_b32": round(kernel_qps / brute_qps, 3),
+        "hybrid_qps": round(batch / min(hybrid_times), 1),
+        "hybrid_lat_p50_ms": round(float(np.percentile(hybrid_lat_ms, 50)), 4),
+        "vector_parity": 1.0 if vec_parity else 0.0,
+        "hybrid_parity": 1.0 if hyb_parity else 0.0,
+    }
+
+
+def run_smoke(out_path: str = BENCH_SEARCH_JSON) -> dict:
+    """``vector`` rows merged into ``BENCH_search.json`` + the artifact
+    copy; raises when the batching floor or either parity bit fails (the
+    same loud-gate convention as the fused-term and nrt floors)."""
+    block = run_vector()
+    payload = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            payload = json.load(f)
+    payload["vector"] = block
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    with open(BENCH_VECTOR_JSON, "w") as f:
+        json.dump({"bench": "vector", "mode": "smoke", "vector": block}, f,
+                  indent=2, sort_keys=True)
+    print(
+        f"vector_smoke,topk,ram@b{block['batch']}"
+        f",brute_qps={block['brute_qps']:.0f}"
+        f",kernel_qps={block['kernel_qps']:.0f}"
+        f",speedup={block['kernel_speedup_ram_b32']:.2f}x"
+        f",dim={block['dim']},n_docs={block['n_docs']}",
+        flush=True,
+    )
+    print(
+        f"vector_smoke,hybrid,ram@b{block['batch']}"
+        f",qps={block['hybrid_qps']:.0f}"
+        f",lat_p50_ms={block['hybrid_lat_p50_ms']:.3f}",
+        flush=True,
+    )
+    print(
+        f"vector_smoke,gate,kernel_speedup_ram_b32="
+        f"{block['kernel_speedup_ram_b32']:.2f}x,floor={VECTOR_SPEEDUP_GATE}x"
+        f",vector_parity={int(block['vector_parity'])}"
+        f",hybrid_parity={int(block['hybrid_parity'])}",
+        flush=True,
+    )
+    if block["vector_parity"] != 1.0 or block["hybrid_parity"] != 1.0:
+        raise SystemExit("vector smoke gate FAILED: fused/brute parity != 1")
+    if block["kernel_speedup_ram_b32"] < VECTOR_SPEEDUP_GATE:
+        raise SystemExit(
+            f"vector smoke gate FAILED: kernel speedup "
+            f"{block['kernel_speedup_ram_b32']:.2f}x < {VECTOR_SPEEDUP_GATE}x "
+            f"on ram at batch {BATCH}"
+        )
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="vector/hybrid rows merged into BENCH_search.json "
+        f"(>= {VECTOR_SPEEDUP_GATE}x batching gate + parity gates)",
+    )
+    args = ap.parse_args()
+    if args.smoke:
+        run_smoke()
+    else:
+        print(json.dumps(run_vector(), indent=2, sort_keys=True))

@@ -25,7 +25,7 @@ with no per-term loop.
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -83,7 +83,14 @@ class _Column:
 
 
 class ColumnarBuffer:
-    """The writer's DRAM buffer as five flat columns (one row per posting)."""
+    """The writer's DRAM buffer as five flat columns (one row per posting).
+
+    Dense vectors ride two more columns: ``vec`` holds row-major float32
+    components (one fixed-dim span per vectored doc) and ``vec_doc`` the
+    buffer-local doc id of each span.  ``vec_dim`` is pinned by the first
+    vector appended; the flush densifies the spans into an (n_docs, dim)
+    doc-values matrix (missing docs get zero rows).
+    """
 
     def __init__(self) -> None:
         self.term_hash = _Column(np.int64)
@@ -91,6 +98,9 @@ class ColumnarBuffer:
         self.freq = _Column(np.int32)
         self.pos_offset = _Column(np.int64)
         self.positions = _Column(np.int32)
+        self.vec = _Column(np.float32)
+        self.vec_doc = _Column(np.int32)
+        self.vec_dim = 0
 
     def __len__(self) -> int:
         return self.term_hash.n
@@ -146,6 +156,59 @@ class ColumnarBuffer:
         self.pos_offset.extend(pos_offset)
         self.positions.extend(positions)
         return len(term_hash) * (8 + 4 + 4 + 8) + len(positions) * 4
+
+    def append_vector(self, doc_local: int, vec: np.ndarray) -> int:
+        """Append one document's dense vector (fixed dim across the buffer).
+
+        The first vector pins ``vec_dim``; later appends must match it.
+        Returns the bytes appended (RAM accounting, like ``append_field``).
+        """
+        v = np.asarray(vec, dtype=np.float32).ravel()
+        if self.vec_dim == 0:
+            self.vec_dim = len(v)
+        elif len(v) != self.vec_dim:
+            raise ValueError(
+                f"vector dim {len(v)} != buffer dim {self.vec_dim}"
+            )
+        self.vec.extend(v)
+        self.vec_doc.extend_fill(doc_local, 1)
+        return len(v) * 4 + 4
+
+    def extend_raw_vectors(
+        self, vec: np.ndarray, vec_doc: np.ndarray, dim: int
+    ) -> int:
+        """Append previously-captured vector column slices verbatim (WAL
+        replay) — the flat float32 components and per-span doc ids exactly
+        as a batch of ``append_vector`` calls produced them."""
+        if dim:
+            if self.vec_dim == 0:
+                self.vec_dim = int(dim)
+            elif int(dim) != self.vec_dim:
+                raise ValueError(
+                    f"replayed vector dim {dim} != buffer dim {self.vec_dim}"
+                )
+        self.vec.extend(np.asarray(vec, dtype=np.float32))
+        self.vec_doc.extend(np.asarray(vec_doc, dtype=np.int32))
+        return len(vec) * 4 + len(vec_doc) * 4
+
+    def vector_columns(self) -> Tuple[np.ndarray, np.ndarray, int]:
+        """(flat components, per-span doc ids, dim) trimmed views."""
+        return self.vec.view(), self.vec_doc.view(), self.vec_dim
+
+    def vector_matrix(self, n_docs: int) -> Optional[np.ndarray]:
+        """Densify the vector spans into an (n_docs, dim) float32 matrix.
+
+        Docs without a vector get zero rows (the dense-column analogue of
+        the int32 doc-values zero padding at flush).  Returns None when the
+        buffer never saw a vector, so flushes without vectors stay free.
+        """
+        if self.vec_dim == 0:
+            return None
+        mat = np.zeros((n_docs, self.vec_dim), dtype=np.float32)
+        docs = self.vec_doc.view()
+        if len(docs):
+            mat[docs] = self.vec.view().reshape(len(docs), self.vec_dim)
+        return mat
 
     def columns(
         self,

@@ -75,7 +75,7 @@ import numpy as np
 from repro.core.analyzer import Analyzer
 from repro.core.lifecycle import SegmentInfos
 from repro.core.segment import Segment
-from repro.core.writer import EXT_ID_FIELD, IndexWriter
+from repro.core.writer import EXT_ID_FIELD, VECTOR_FIELD, IndexWriter
 
 BACKENDS = ("serial", "threads", "processes")
 
@@ -115,6 +115,11 @@ def encode_batch(docs: Sequence[RoutedDoc]) -> Tuple[shared_memory.SharedMemory,
     dv_key: List[int] = []
     dv_doc: List[int] = []
     dv_val: List[float] = []
+    # dense vector column (the reserved VECTOR_FIELD dv key): fixed-dim
+    # float32 rows ride as their own flat columns, scalar dv stays scalar
+    vec_doc: List[int] = []
+    vec_rows: List[np.ndarray] = []
+    vec_dim = 0
     for i, (fields, dv, ext) in enumerate(docs):
         exts[i] = ext
         for k, text in fields.items():
@@ -127,6 +132,17 @@ def encode_batch(docs: Sequence[RoutedDoc]) -> Tuple[shared_memory.SharedMemory,
             texts.append(text.encode("utf-8"))
         if dv:
             for k, v in dv.items():
+                if k == VECTOR_FIELD:
+                    row = np.asarray(v, dtype=np.float32).ravel()
+                    if vec_dim == 0:
+                        vec_dim = len(row)
+                    elif len(row) != vec_dim:
+                        raise ValueError(
+                            f"vector dim mismatch: {len(row)} != {vec_dim}"
+                        )
+                    vec_doc.append(i)
+                    vec_rows.append(row)
+                    continue
                 ki = dvmap.get(k)
                 if ki is None:
                     ki = dvmap[k] = len(dvkeys)
@@ -147,6 +163,13 @@ def encode_batch(docs: Sequence[RoutedDoc]) -> Tuple[shared_memory.SharedMemory,
         ("dv_key", np.asarray(dv_key, dtype=np.int32)),
         ("dv_doc", np.asarray(dv_doc, dtype=np.int32)),
         ("dv_val", np.asarray(dv_val, dtype=np.float64)),
+        ("vec_doc", np.asarray(vec_doc, dtype=np.int32)),
+        (
+            "vec_val",
+            np.concatenate(vec_rows)
+            if vec_rows
+            else np.zeros(0, dtype=np.float32),
+        ),
     ]
     layout: Dict[str, Tuple[int, str, int]] = {}
     cursor = 0
@@ -170,6 +193,7 @@ def encode_batch(docs: Sequence[RoutedDoc]) -> Tuple[shared_memory.SharedMemory,
         "layout": layout,
         "field_keys": fkeys,
         "dv_keys": dvkeys,
+        "vec_dim": vec_dim,
     }
     return shm, meta
 
@@ -206,6 +230,12 @@ def decode_batch(shm_name: str, meta: dict) -> List[Tuple[Dict[str, str], dict]]
             ].decode("utf-8")
         for i in range(len(dv_key)):
             dvs[int(dv_doc[i])][dvkeys[int(dv_key[i])]] = dv_val[i].item()
+        vec_doc, vec_val = col("vec_doc"), col("vec_val")
+        vdim = int(meta.get("vec_dim", 0))
+        if vdim:
+            rows = np.array(vec_val, dtype=np.float32).reshape(-1, vdim)
+            for j in range(len(vec_doc)):
+                dvs[int(vec_doc[j])][VECTOR_FIELD] = rows[j]
         docs = []
         for i in range(n):
             dv = dvs[i]
@@ -213,6 +243,7 @@ def decode_batch(shm_name: str, meta: dict) -> List[Tuple[Dict[str, str], dict]]
             docs.append((fields[i], dv))
         # np.frombuffer views pin shm.buf; drop them before closing the map
         del exts, f_key, f_doc, f_off, dv_key, dv_doc, dv_val, blob
+        del vec_doc, vec_val
         return docs
     finally:
         shm.close()
@@ -527,6 +558,15 @@ def _live_sync_reply(w: IndexWriter, known: Optional[dict]) -> Optional[dict]:
         "doc_lens": np.asarray(w._buf_doc_lens[d0:nd], dtype=np.int32),
         "deletes": [(int(t), int(m)) for t, m in w._buf_deletes],
         "dv": {k: list(v) for k, v in w._buf_dv.items()},
+        # dense vector columns (flat values, doc ids, dim) — full columns,
+        # like "dv": small relative to postings and simpler than a third
+        # watermark
+        "vec": (
+            tuple(np.asarray(a) for a in w._buf.vector_columns()[:2])
+            + (int(w._buf.vec_dim),)
+            if w._buf.vec_dim
+            else None
+        ),
     }
 
 
@@ -619,6 +659,7 @@ class MirrorWriter:
             deletes=rep["deletes"],
             dv={k: (v, len(v)) for k, v in rep["dv"].items()},
             generation=int(rep["gen"]),
+            vec=rep.get("vec"),
         )
         return self._live_snap
 

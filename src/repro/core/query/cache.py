@@ -34,13 +34,19 @@ from repro.core.query.plan import TILE
 from repro.core.segment import Segment
 
 
+#: trailing-dim tile of the dense vector column (lane width; must equal
+#: ``repro.kernels.vector_topk.DIM_TILE`` — asserted in ``query.fused``,
+#: re-declared here so the cache stays kernel-import-free)
+VEC_DIM_TILE = 128
+
+
 def _pad_tile(host: np.ndarray, fill) -> np.ndarray:
-    """Pad a 1-D host array to a TILE multiple (min one tile)."""
+    """Pad axis 0 of a host array to a TILE multiple (min one tile)."""
     n = host.shape[0]
     target = max(TILE, -(-n // TILE) * TILE)
     if target == n:
         return host
-    out = np.full(target, fill, dtype=host.dtype)
+    out = np.full((target,) + host.shape[1:], fill, dtype=host.dtype)
     out[:n] = host
     return out
 
@@ -114,7 +120,15 @@ class SegmentDeviceCache:
             "tiled.dl_live": (dl_pad << 1) | live_pad,
         }
         for k, v in seg.doc_values.items():
-            hosts[f"tiled.dv.{k}"] = _pad_tile(np.asarray(v), 0)
+            host = _pad_tile(np.asarray(v), 0)
+            if host.ndim == 2:
+                # dense vector column: lane-pad the component axis too
+                # (zero components are exact no-ops for dot/cosine)
+                d = host.shape[1]
+                dp = -(-d // VEC_DIM_TILE) * VEC_DIM_TILE
+                if dp != d:
+                    host = np.pad(host, ((0, 0), (0, dp - d)))
+            hosts[f"tiled.dv.{k}"] = host
         for key, host in hosts.items():
             st[key] = jnp.asarray(host)
             self.stats.array_uploads += 1

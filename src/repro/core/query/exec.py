@@ -37,6 +37,7 @@ from repro.core.query import profile
 from repro.core.query.plan import (
     FamilyGroup,
     bucket_batch,
+    bucket_batch_min2,
     stage_bool_postings,
     stage_term_postings,
 )
@@ -116,6 +117,65 @@ def _range_core(dv, live, lo, hi, k):
     return jnp.where(jnp.isfinite(vals), 1.0, -jnp.inf), ids, ok.sum()
 
 
+def _similarity(vmat, qvec, cosine):
+    """Shared similarity expression: dot or cosine of every row of the
+    (n_docs, d) vector column against one (d,) query vector.  The single,
+    batched, and Pallas paths all reduce the same trailing axis with the
+    same values, so the float32 results are bit-identical (the parity tests
+    pin this).  Docs without a vector are zero rows: dot 0, cosine guarded
+    to 0 (den == 0)."""
+    sims = jnp.sum(vmat * qvec, axis=-1)
+    if cosine:
+        den = jnp.sqrt(jnp.sum(vmat * vmat, axis=-1)) * jnp.sqrt(
+            jnp.sum(qvec * qvec)
+        )
+        sims = jnp.where(den > 0, sims / den, 0.0)
+    return sims
+
+
+def _vector_core(vmat, live, qvec, k, cosine):
+    """Brute-force exact top-k over the dense vector column (match-all-live
+    semantics: every live doc is a candidate)."""
+    score = jnp.where(live, _similarity(vmat, qvec, cosine), -jnp.inf)
+    vals, ids = jax.lax.top_k(score, min(k, score.shape[0]))
+    return vals, ids, live.sum()
+
+
+def _hybrid_norms(dense_bm25, sims, alpha, cosine):
+    """Fused score from a doc's BM25 sum and vector similarity.
+
+    Normalizations are FIXED monotone maps (no per-result-set min/max), so
+    fusion commutes with sharding: tnorm = s/(s+1) in [0,1); vnorm =
+    (c+1)/2 for cosine (c in [-1,1]) and c/(1+|c|) for dot (unbounded c).
+    """
+    tnorm = dense_bm25 / (dense_bm25 + 1.0)
+    if cosine:
+        vnorm = (sims + 1.0) * 0.5
+    else:
+        vnorm = sims / (1.0 + jnp.abs(sims))
+    return alpha * tnorm + (1.0 - alpha) * vnorm
+
+
+def _hybrid_core(
+    docs, freqs, doc_lens, vmat, live, qvec, idf, avgdl, k1, b, alpha, k,
+    cosine,
+):
+    """BM25 ⊕ vector fusion over all live docs: the term's postings scatter
+    BM25 into a dense column (docs without the term contribute 0), the
+    vector similarity is dense already, and the fixed-normalization
+    weighted sum ranks every live doc."""
+    n_docs = doc_lens.shape[0]
+    dl = doc_lens[docs]
+    s = bm25(freqs, dl, idf, avgdl, k1, b)
+    s = jnp.where(freqs > 0, s, 0.0)
+    dense = jnp.zeros(n_docs, jnp.float32).at[docs].add(s)
+    sims = _similarity(vmat, qvec, cosine)
+    score = _hybrid_norms(dense, sims, alpha, cosine)
+    score = jnp.where(live, score, -jnp.inf)
+    vals, ids = jax.lax.top_k(score, min(k, score.shape[0]))
+    return vals, ids, live.sum()
+
+
 def _matched_core(docs, freqs, live):
     n_docs = live.shape[0]
     valid = freqs > 0
@@ -144,6 +204,47 @@ _sort_topk = partial(jax.jit, static_argnames=("k",))(_sort_core)
 _range_topk = partial(jax.jit, static_argnames=("k",))(_range_core)
 _facet_counts = partial(jax.jit, static_argnames=("n_bins",))(_facet_core)
 _matched_from_postings = jax.jit(_matched_core)
+
+
+def _vector_topk(vmat, live, qvec, k, cosine):
+    """Single-query dense retrieval == the batched executor at B=1.
+
+    Routed through ``_vector_topk_batch`` rather than jitting the core
+    directly: XLA may reassociate the similarity/fusion arithmetic
+    differently for the unbatched and vmapped graphs (observed as 1-ULP
+    score drift), and the oracle contract is BIT-parity — so there is
+    exactly one compiled definition of the score for every path.
+    """
+    vals, ids, hits = _vector_topk_batch(vmat, live, qvec[None], k, cosine)
+    return vals[0], ids[0], hits[0]
+
+
+def _hybrid_topk(
+    docs, freqs, doc_lens, vmat, live, qvec, idf, avgdl, k1, b, alpha, k,
+    cosine,
+):
+    """Single-query hybrid fusion == the batched executor at B=2.
+
+    One real row + one inert row, NOT B=1: XLA squeezes a B=1 vmapped
+    graph and re-fuses the blend arithmetic a ULP differently than every
+    B >= 2 graph (which agree bitwise) — same reason the batched hybrid
+    executors pad with ``bucket_batch_min2``."""
+    vals, ids, hits = _hybrid_topk_batch(
+        jnp.stack([docs, jnp.zeros_like(docs)]),
+        jnp.stack([freqs, jnp.zeros_like(freqs)]),
+        doc_lens,
+        vmat,
+        live,
+        jnp.stack([qvec, jnp.zeros_like(qvec)]),
+        jnp.asarray([idf, 0.0], jnp.float32),
+        avgdl,
+        k1,
+        b,
+        jnp.asarray([alpha, 0.0], jnp.float32),
+        k,
+        cosine,
+    )
+    return vals[0], ids[0], hits[0]
 
 
 # -- batched jitted executors (vmap of the same cores) ----------------------
@@ -177,6 +278,25 @@ def _sort_topk_batch(docs, freqs, dv, live, k):
 @partial(jax.jit, static_argnames=("k",))
 def _range_topk_batch(dv, live, los, his, k):
     return jax.vmap(lambda lo, hi: _range_core(dv, live, lo, hi, k))(los, his)
+
+
+@partial(jax.jit, static_argnames=("k", "cosine"))
+def _vector_topk_batch(vmat, live, qvecs, k, cosine):
+    """qvecs: (B, d); one dispatch scores the whole batch."""
+    return jax.vmap(lambda q: _vector_core(vmat, live, q, k, cosine))(qvecs)
+
+
+@partial(jax.jit, static_argnames=("k", "cosine"))
+def _hybrid_topk_batch(
+    docs, freqs, doc_lens, vmat, live, qvecs, idfs, avgdl, k1, b, alphas, k,
+    cosine,
+):
+    """docs/freqs: (B, P); qvecs: (B, d); idfs/alphas: (B,)."""
+    return jax.vmap(
+        lambda d, f, q, i, a: _hybrid_core(
+            d, f, doc_lens, vmat, live, q, i, avgdl, k1, b, a, k, cosine
+        )
+    )(docs, freqs, qvecs, idfs, alphas)
 
 
 @partial(jax.jit, static_argnames=("n_bins",))
@@ -594,6 +714,98 @@ def _exec_phrase(ctx, group: FamilyGroup, k: int) -> List[TopDocs]:
     return out
 
 
+def _seg_vector(ctx, seg):
+    """Device handle of a segment's dense vector column, or None when the
+    segment has no vectors (it then contributes nothing to the family)."""
+    from repro.core.writer import VECTOR_FIELD
+
+    if VECTOR_FIELD not in seg.doc_values:
+        return None
+    return ctx._seg_dev(seg)[f"dv.{VECTOR_FIELD}"]
+
+
+def _exec_vector(ctx, group: FamilyGroup, k: int) -> List[TopDocs]:
+    if ctx.use_pallas:
+        from repro.core.query import fused
+
+        return fused.exec_vector_fused(ctx, group, k)
+    n = len(group.queries)
+    pad = bucket_batch(n) - n
+    dim, metric = group.key[1], group.key[2]
+    cosine = metric == "cosine"
+    qvecs = np.zeros((n + pad, dim), dtype=np.float32)
+    for i, q in enumerate(group.queries):
+        qvecs[i] = q.vector
+    qdev = jnp.asarray(qvecs)
+    per_seg = []
+    for seg in ctx.segments:
+        vmat = _seg_vector(ctx, seg)
+        if vmat is None:
+            continue
+        st = ctx._seg_dev(seg)
+        vals, ids, hits = _vector_topk_batch(vmat, st["live"], qdev, k, cosine)
+        profile.record("vmap.vector")
+        per_seg.append((vals, ids + seg.base_doc, hits))
+    return _merge_segment_candidates(per_seg, n, k)
+
+
+def _exec_hybrid(ctx, group: FamilyGroup, k: int) -> List[TopDocs]:
+    if ctx.use_pallas:
+        from repro.core.query import fused
+
+        return fused.exec_hybrid_fused(ctx, group, k)
+    n = len(group.queries)
+    # floor 2: the B=1 vmapped graph compiles to different blend rounding
+    pad = bucket_batch_min2(n) - n
+    dim, metric = group.key[1], group.key[2]
+    cosine = metric == "cosine"
+    terms = [q.term for q in group.queries]
+    qvecs = np.zeros((n + pad, dim), dtype=np.float32)
+    for i, q in enumerate(group.queries):
+        qvecs[i] = q.vector.vector
+    idfs = np.asarray(
+        [ctx.idf(t) for t in terms] + [0.0] * pad, dtype=np.float32
+    )
+    alphas = np.asarray(
+        [q.alpha for q in group.queries] + [0.0] * pad, dtype=np.float32
+    )
+    qdev = jnp.asarray(qvecs)
+    idfs_dev = jnp.asarray(idfs)
+    alphas_dev = jnp.asarray(alphas)
+    per_seg = []
+    for seg in ctx.segments:
+        vmat = _seg_vector(ctx, seg)
+        if vmat is None:
+            continue
+        st = ctx._seg_dev(seg)
+        staged = stage_term_postings(seg, terms, pad_rows=pad)
+        if staged is None:
+            # match-all-live semantics: no term postings here, but the
+            # vector half still scores every live doc (BM25 sum = 0)
+            docs = np.zeros((n + pad, 8), dtype=np.int32)
+            freqs = np.zeros((n + pad, 8), dtype=np.int32)
+        else:
+            docs, freqs = staged
+        vals, ids, hits = _hybrid_topk_batch(
+            jnp.asarray(docs),
+            jnp.asarray(freqs),
+            st["doc_lens"],
+            vmat,
+            st["live"],
+            qdev,
+            idfs_dev,
+            ctx.avgdl,
+            ctx.k1,
+            ctx.b,
+            alphas_dev,
+            k,
+            cosine,
+        )
+        profile.record("vmap.hybrid")
+        per_seg.append((vals, ids + seg.base_doc, hits))
+    return _merge_segment_candidates(per_seg, n, k)
+
+
 _EXECUTORS = {
     "term": _exec_term,
     "bool": _exec_bool,
@@ -601,6 +813,8 @@ _EXECUTORS = {
     "range": _exec_range,
     "facet": _exec_facet,
     "phrase": _exec_phrase,
+    "vector": _exec_vector,
+    "hybrid": _exec_hybrid,
 }
 
 

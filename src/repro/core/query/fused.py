@@ -42,24 +42,32 @@ from repro.core.query.exec import (
     _bool_core,
     _facet_core,
     _finalize_scored,
+    _hybrid_core,
     _matched_core,
     _merge_segment_candidates,
     _range_core,
     _sort_core,
+    _vector_core,
     bm25,
 )
 from repro.core.query.plan import (
     TILE,
     FamilyGroup,
     bucket_batch,
+    bucket_batch_min2,
     stage_bool_meta,
     stage_term_meta,
 )
+from repro.core.query.cache import VEC_DIM_TILE
 from repro.core.query.types import TopDocs
 from repro.kernels import fused_exec as fk
+from repro.kernels import vector_topk as vk
 from repro.kernels.runtime import has_compiled_backend, resolve_interpret
 
 assert TILE == fk.BLOCK, "plan.TILE must match kernels.fused_exec.BLOCK"
+assert VEC_DIM_TILE == vk.DIM_TILE, (
+    "cache.VEC_DIM_TILE must match kernels.vector_topk.DIM_TILE"
+)
 
 #: the kernels keep per-block winners in one 128-lane row
 MAX_KERNEL_K = fk.OUT_K
@@ -271,6 +279,61 @@ def _fused_facet(csr_docs, csr_freqs, live, dv, starts, lengths, p, n_bins,
     return counts, matched.sum(-1)
 
 
+@partial(
+    jax.jit, static_argnames=("k", "cosine", "dim", "use_kernel", "interpret")
+)
+def _fused_vector(vmat, live, qvecs, base, k, cosine, dim, use_kernel,
+                  interpret):
+    if use_kernel:
+        blk_v, blk_i, blk_c = vk.vector_topk_tiles(
+            vmat, live, qvecs, k, cosine, dim, interpret
+        )
+        vals, ids = _hier_topk(blk_v, blk_i, k)  # doc-space: idx == doc id
+        return vals, ids + base, blk_c.sum(-1)
+    vals, ids, hits = jax.vmap(
+        lambda q: _vector_core(vmat, live, q, k, cosine)
+    )(qvecs)
+    return vals, ids + base, hits
+
+
+@partial(
+    jax.jit,
+    static_argnames=("p", "k", "cosine", "dim", "use_kernel", "interpret"),
+)
+def _fused_hybrid(csr_docs, csr_freqs, dl, vmat, live, starts, lengths,
+                  qvecs, idfs, alphas, avgdl, k1, b, base, p, k, cosine,
+                  dim, use_kernel, interpret):
+    """Hybrid BM25 ⊕ vector for one segment as ONE jitted combined program
+    (no dedicated Pallas kernel for the BM25 scatter: scatter has no Mosaic
+    lowering, so — as for bool/sort — XLA scatters the dense term scores
+    and the ``vector_topk`` hybrid kernel fuses normalization, similarity,
+    masking and top-k)."""
+    docs = _gather_rows(csr_docs, starts, lengths, p)  # (B, p)
+    freqs = _gather_rows(csr_freqs, starts, lengths, p)
+    if use_kernel:
+        ndp = live.shape[0]
+
+        def scatter_one(d, f, i_):
+            # same dense-BM25 expressions as exec._hybrid_core: one term
+            # per row, docs unique per postings row -> one add per doc
+            s = bm25(f, dl[d], i_, avgdl, k1, b)
+            s = jnp.where(f > 0, s, 0.0)
+            return jnp.zeros(ndp, jnp.float32).at[d].add(s)
+
+        dense = jax.vmap(scatter_one)(docs, freqs, idfs)
+        blk_v, blk_i, blk_c = vk.hybrid_topk_tiles(
+            dense, vmat, live, qvecs, alphas, k, cosine, dim, interpret
+        )
+        vals, ids = _hier_topk(blk_v, blk_i, k)
+        return vals, ids + base, blk_c.sum(-1)
+    vals, ids, hits = jax.vmap(
+        lambda d, f, q, i, a: _hybrid_core(
+            d, f, dl, vmat, live, q, i, avgdl, k1, b, a, k, cosine
+        )
+    )(docs, freqs, qvecs, idfs, alphas)
+    return vals, ids + base, hits
+
+
 # ---------------------------------------------------------------------------
 # group executors (signature-compatible with exec._exec_*)
 # ---------------------------------------------------------------------------
@@ -462,3 +525,90 @@ def exec_facet_fused(ctx, group: FamilyGroup, k: int) -> List[TopDocs]:
             )
         )
     return out
+
+
+def _vector_group_inputs(group, pad: int, dim: int, use_kernel: bool):
+    """(B+pad, D) query-vector matrix, lane-padded for the kernel path
+    (zero components are exact scoring no-ops)."""
+    dimp = vk.pad_dim(dim) if use_kernel else dim
+    qvecs = np.zeros((len(group.queries) + pad, dimp), dtype=np.float32)
+    return qvecs
+
+
+def exec_vector_fused(ctx, group: FamilyGroup, k: int) -> List[TopDocs]:
+    from repro.core.writer import VECTOR_FIELD
+
+    n = len(group.queries)
+    pad = bucket_batch(n) - n
+    dim, metric = group.key[1], group.key[2]
+    cosine = metric == "cosine"
+    use_kernel = kernel_enabled(k)
+    interpret = resolve_interpret(None)
+    qvecs = _vector_group_inputs(group, pad, dim, use_kernel)
+    for i, q in enumerate(group.queries):
+        qvecs[i, :dim] = q.vector
+    per_seg = []
+    for seg in ctx.segments:
+        if VECTOR_FIELD not in seg.doc_values:
+            continue  # no vector column here: contributes nothing
+        st, _, live = _seg_state(ctx, seg, use_kernel)
+        vmat = st[
+            f"tiled.dv.{VECTOR_FIELD}" if use_kernel else f"dv.{VECTOR_FIELD}"
+        ]
+        vals, ids, hits = _fused_vector(
+            vmat, live, qvecs, seg.base_doc,
+            k=k, cosine=cosine, dim=dim, use_kernel=use_kernel,
+            interpret=interpret,
+        )
+        profile.record("fused.vector")
+        per_seg.append((vals, ids, hits))
+    return _merge_segment_candidates(per_seg, n, k)
+
+
+def exec_hybrid_fused(ctx, group: FamilyGroup, k: int) -> List[TopDocs]:
+    from repro.core.writer import VECTOR_FIELD
+
+    n = len(group.queries)
+    # floor 2: the B=1 vmapped graph compiles to different blend rounding
+    pad = bucket_batch_min2(n) - n
+    dim, metric = group.key[1], group.key[2]
+    cosine = metric == "cosine"
+    use_kernel = kernel_enabled(k)
+    interpret = resolve_interpret(None)
+    terms = [q.term for q in group.queries]
+    qvecs = _vector_group_inputs(group, pad, dim, use_kernel)
+    for i, q in enumerate(group.queries):
+        qvecs[i, :dim] = q.vector.vector
+    idfs = np.asarray(
+        [ctx.idf(t) for t in terms] + [0.0] * pad, dtype=np.float32
+    )
+    alphas = np.asarray(
+        [q.alpha for q in group.queries] + [0.0] * pad, dtype=np.float32
+    )
+    per_seg = []
+    for seg in ctx.segments:
+        if VECTOR_FIELD not in seg.doc_values:
+            continue
+        meta = stage_term_meta(seg, terms, pad_rows=pad, tile=use_kernel)
+        if meta is None:
+            # match-all-live: the term scores nothing here, but the vector
+            # half still ranks every live doc (dense BM25 sum = 0)
+            starts = np.zeros(n + pad, dtype=np.int32)
+            lengths = np.zeros(n + pad, dtype=np.int32)
+            p = 8
+        else:
+            starts, lengths, p = meta.starts, meta.lengths, meta.p
+        st, dl, live = _seg_state(ctx, seg, use_kernel)
+        vmat = st[
+            f"tiled.dv.{VECTOR_FIELD}" if use_kernel else f"dv.{VECTOR_FIELD}"
+        ]
+        vals, ids, hits = _fused_hybrid(
+            st["csr.docs"], st["csr.freqs"], dl, vmat, live,
+            starts, lengths, qvecs, idfs, alphas,
+            ctx.avgdl, ctx.k1, ctx.b, seg.base_doc,
+            p=p, k=k, cosine=cosine, dim=dim, use_kernel=use_kernel,
+            interpret=interpret,
+        )
+        profile.record("fused.hybrid")
+        per_seg.append((vals, ids, hits))
+    return _merge_segment_candidates(per_seg, n, k)

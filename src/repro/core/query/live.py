@@ -38,12 +38,14 @@ from repro.core.query.plan import bucket
 from repro.core.query.types import (
     BooleanQuery,
     FacetQuery,
+    HybridQuery,
     PhraseQuery,
     Query,
     RangeQuery,
     SortQuery,
     TermQuery,
     TopDocs,
+    VectorQuery,
 )
 from repro.core.segment import Segment
 
@@ -66,6 +68,7 @@ class LiveSnapshot:
         deletes: Sequence[Tuple[int, int]],
         dv: Dict[str, Tuple[list, int]],
         generation: int,
+        vec: Optional[Tuple[np.ndarray, np.ndarray, int]] = None,
     ) -> None:
         self.index = index
         self.generation = generation
@@ -75,6 +78,10 @@ class LiveSnapshot:
         self._wm_pos = index.n_pos
         self._deletes = [(int(th), int(wm)) for th, wm in deletes]
         self._dv = dict(dv)  # key -> (column ref, length at snapshot)
+        # (flat values, doc ids, dim) — trimmed _Column views, i.e. stable
+        # point-in-time slices: the writer only appends past them
+        self._vec = vec
+        self._vec_mat: Optional[np.ndarray] = None
         self._postings: Dict[int, tuple] = {}
         self._bitmap: Optional[np.ndarray] = None
         self._dv_cols: Dict[str, np.ndarray] = {}
@@ -136,6 +143,27 @@ class LiveSnapshot:
             self._dv_cols[key] = c
         return c
 
+    @property
+    def vec_dim(self) -> int:
+        return self._vec[2] if self._vec is not None else 0
+
+    def vec_matrix(self) -> Optional[np.ndarray]:
+        """Dense (n_docs, d) float32 vector column at the snapshot — the
+        exact matrix ``flush`` would bake into the segment's ``_vec``
+        doc-values (zero rows for vectorless docs), so live scoring is
+        bit-identical to flush-then-search."""
+        if self._vec is None:
+            return None
+        if self._vec_mat is None:
+            flat, docs, dim = self._vec
+            mat = np.zeros((self.n_docs, dim), dtype=np.float32)
+            if len(docs):
+                mat[np.asarray(docs)] = np.asarray(
+                    flat, dtype=np.float32
+                ).reshape(len(docs), dim)
+            self._vec_mat = mat
+        return self._vec_mat
+
 
 # ---------------------------------------------------------------------------
 # Mini-segment materialization
@@ -158,6 +186,10 @@ def query_term_hashes(query: Query) -> List[int]:
         return [term_hash(query.term.field, query.term.token)]
     if isinstance(query, RangeQuery):
         return []
+    if isinstance(query, VectorQuery):
+        return []  # match-all-live: no postings needed from the tail
+    if isinstance(query, HybridQuery):
+        return [term_hash(query.term.field, query.term.token)]
     raise TypeError(f"unsupported query type: {type(query).__name__}")
 
 
@@ -234,6 +266,17 @@ def materialize_segment(
     doc_lens[:n_docs] = snapshot.doc_lens()
     live_mask = np.zeros(n_padded, dtype=bool)
     live_mask[:n_docs] = snapshot.live_bitmap()
+    dv: Dict[str, np.ndarray] = {}
+    vmat = snapshot.vec_matrix()
+    if vmat is not None:
+        # the vector executors key participation off the presence of the
+        # reserved column (segments without it are skipped), so the mini
+        # segment carries it eagerly; padded rows are dead via ``live``
+        from repro.core.writer import VECTOR_FIELD
+
+        padded = np.zeros((n_padded, vmat.shape[1]), dtype=np.float32)
+        padded[:n_docs] = vmat
+        dv[VECTOR_FIELD] = padded
     return Segment(
         name=LIVE_SEGMENT_NAME,
         base_doc=base_doc,
@@ -246,7 +289,9 @@ def materialize_segment(
         positions=positions,
         doc_lens=doc_lens,
         live=live_mask,
-        doc_values={},  # served lazily by the searcher's live device dict
+        # int columns are served lazily by the searcher's live device dict;
+        # only the dense vector column (when present) is eager — see above
+        doc_values=dv,
     )
 
 
@@ -266,6 +311,7 @@ class _LiveDev(dict):
 
         super().__init__()
         self._snapshot = snapshot
+        self._seg = seg
         self._n_padded = len(seg.doc_lens)  # bucket-padded (see above)
         self["doc_lens"] = jnp.asarray(np.asarray(seg.doc_lens))
         self["live"] = jnp.asarray(np.asarray(seg.live))
@@ -274,9 +320,13 @@ class _LiveDev(dict):
         if key.startswith("dv."):
             import jax.numpy as jnp
 
-            col = self._snapshot.dv_col(key[3:])
-            if len(col) < self._n_padded:  # padded rows are dead: value 0
-                col = np.pad(col, (0, self._n_padded - len(col)))
+            # columns the mini segment carries eagerly (the 2-D vector
+            # column) upload as-is — already padded to the doc bucket
+            col = self._seg.doc_values.get(key[3:])
+            if col is None:
+                col = self._snapshot.dv_col(key[3:])
+                if len(col) < self._n_padded:  # padded rows are dead: 0
+                    col = np.pad(col, (0, self._n_padded - len(col)))
             val = jnp.asarray(col)
             self[key] = val
             return val
@@ -340,8 +390,9 @@ class _CombinedView:
 
     def __getattr__(self, name: str):
         # the reference oracle scorers (``_search_*``) are reused verbatim,
-        # re-bound to this view so they walk the combined segment list
-        if name.startswith("_search_"):
+        # re-bound to this view so they walk the combined segment list;
+        # ``_seg_vmat`` rides along (it only touches ``self._seg_dev``)
+        if name.startswith("_search_") or name == "_seg_vmat":
             from repro.core.search import Searcher
 
             return getattr(Searcher, name).__get__(self)

@@ -16,6 +16,8 @@ share an executor signature:
   sort                         -> ("sort", dv_field)
   range                        -> ("range", dv_field)
   facet                        -> ("facet", dv_field, n_bins, match_all)
+  vector                       -> ("vector", dim, metric)
+  hybrid                       -> ("hybrid", dim, metric)
 
 Postings staging pads every query in a group to one *shared* power-of-two
 bucket per segment, so same-family batches of similar size reuse compiled
@@ -36,11 +38,13 @@ from repro.core.analyzer import term_hash
 from repro.core.query.types import (
     BooleanQuery,
     FacetQuery,
+    HybridQuery,
     PhraseQuery,
     Query,
     RangeQuery,
     SortQuery,
     TermQuery,
+    VectorQuery,
 )
 from repro.core.segment import Segment
 
@@ -62,6 +66,18 @@ def bucket(n: int, floor: int = 8) -> int:
 def bucket_batch(n: int) -> int:
     """Power-of-two batch padding (floor 1: a batch of one stays a one)."""
     return bucket(n, floor=1)
+
+
+def bucket_batch_min2(n: int) -> int:
+    """Power-of-two batch padding with floor 2 (the hybrid executors).
+
+    XLA squeezes the batch dimension out of a B=1 vmapped graph and then
+    re-fuses the blend arithmetic differently (observed: 1-ULP drift of
+    ``alpha * tnorm + (1-alpha) * vnorm`` vs any B >= 2, which are all
+    mutually bit-identical) — so hybrid groups never execute at B=1; a
+    lone query carries one inert padding row instead.
+    """
+    return bucket(n, floor=2)
 
 
 def pad_width(longest: int, tile: bool) -> int:
@@ -96,6 +112,10 @@ def family_key(q: Query) -> Tuple:
         return ("range", q.dv_field)
     if isinstance(q, FacetQuery):
         return ("facet", q.dv_field, q.n_bins, q.term is None)
+    if isinstance(q, VectorQuery):
+        return ("vector", q.dim, q.metric)
+    if isinstance(q, HybridQuery):
+        return ("hybrid", q.vector.dim, q.vector.metric)
     raise TypeError(f"unknown query type {type(q)}")
 
 

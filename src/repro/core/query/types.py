@@ -56,8 +56,48 @@ class FacetQuery:
     n_bins: int
 
 
+@dataclasses.dataclass(frozen=True)
+class VectorQuery:
+    """Exact dense-vector top-k over the reserved ``_vec`` doc-values
+    column (Teofili & Lin's brute-force rerank baseline): score every live
+    doc by ``dot`` or ``cosine`` similarity to ``vector``.
+
+    ``vector`` is a tuple so the query stays hashable/frozen like every
+    other family (the planner and caches key on query values).
+    """
+
+    vector: Tuple[float, ...]
+    metric: str = "dot"  # "dot" | "cosine"
+
+    @property
+    def dim(self) -> int:
+        return len(self.vector)
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridQuery:
+    """BM25 ⊕ vector fusion: weighted sum after per-family normalization.
+
+    score = alpha * s/(s+1) + (1-alpha) * vnorm(c) with s the BM25 score of
+    ``term`` and c the similarity of ``vector``; both transforms are fixed
+    and monotone, so fused ranking is shard-independent (sharded fan-out
+    merges bit-identically to a single index).
+    """
+
+    term: TermQuery
+    vector: VectorQuery
+    alpha: float = 0.5
+
+
 Query = Union[
-    TermQuery, BooleanQuery, PhraseQuery, RangeQuery, SortQuery, FacetQuery
+    TermQuery,
+    BooleanQuery,
+    PhraseQuery,
+    RangeQuery,
+    SortQuery,
+    FacetQuery,
+    VectorQuery,
+    HybridQuery,
 ]
 
 

@@ -38,10 +38,12 @@ from repro.core.query.cache import SegmentDeviceCache
 from repro.core.query.exec import (
     _bool_topk,
     _facet_counts,
+    _hybrid_topk,
     _matched_from_postings,
     _range_topk,
     _sort_topk,
     _term_topk,
+    _vector_topk,
     bm25,
     execute_group,
 )
@@ -50,12 +52,14 @@ from repro.core.query.plan import plan_batch
 from repro.core.query.types import (
     BooleanQuery,
     FacetQuery,
+    HybridQuery,
     PhraseQuery,
     Query,
     RangeQuery,
     SortQuery,
     TermQuery,
     TopDocs,
+    VectorQuery,
 )
 from repro.core.segment import Segment
 
@@ -71,6 +75,8 @@ __all__ = [
     "RangeQuery",
     "SortQuery",
     "FacetQuery",
+    "VectorQuery",
+    "HybridQuery",
     "bm25",
     "K1_DEFAULT",
     "B_DEFAULT",
@@ -265,6 +271,10 @@ class Searcher:
             return self._search_range(query, k)
         if isinstance(query, FacetQuery):
             return self._search_facet(query, k)
+        if isinstance(query, VectorQuery):
+            return self._search_vector(query, k)
+        if isinstance(query, HybridQuery):
+            return self._search_hybrid(query, k)
         raise TypeError(f"unknown query type {type(query)}")
 
     # -- sequential per-family implementations (oracle path) -------------------
@@ -496,3 +506,65 @@ class Searcher:
             counts[order].astype(np.float32),
             facets=counts,
         )
+
+    def _seg_vmat(self, seg: Segment):
+        """Device handle of a segment's dense vector column, or None when
+        the segment carries no vectors (it contributes nothing then)."""
+        from repro.core.writer import VECTOR_FIELD
+
+        if VECTOR_FIELD not in seg.doc_values:
+            return None
+        return self._seg_dev(seg)[f"dv.{VECTOR_FIELD}"]
+
+    def _search_vector(self, q: VectorQuery, k: int) -> TopDocs:
+        """Brute-force exact dense retrieval: THE bit-parity oracle for the
+        batched executor and the Pallas kernel path (same similarity
+        expression, same tie-breaks)."""
+        qvec = jnp.asarray(np.asarray(q.vector, dtype=np.float32))
+        cosine = q.metric == "cosine"
+        total = 0
+        per_seg = []
+        for seg in self.segments:
+            vmat = self._seg_vmat(seg)
+            if vmat is None:
+                continue
+            st = self._seg_dev(seg)
+            vals, ids, hits = _vector_topk(vmat, st["live"], qvec, k, cosine)
+            total += int(hits)
+            per_seg.append((np.asarray(vals), np.asarray(ids) + seg.base_doc))
+        ids, scores = self._merge(per_seg, k)
+        return TopDocs(total, ids, scores)
+
+    def _search_hybrid(self, q: HybridQuery, k: int) -> TopDocs:
+        """BM25 ⊕ vector fusion oracle (same fixed normalizations as the
+        batched/fused executors, so ranking is path- and shard-independent)."""
+        qvec = jnp.asarray(np.asarray(q.vector.vector, dtype=np.float32))
+        cosine = q.vector.metric == "cosine"
+        idf = self.idf(q.term)
+        total = 0
+        per_seg = []
+        for seg in self.segments:
+            vmat = self._seg_vmat(seg)
+            if vmat is None:
+                continue
+            docs, freqs, _n = self._padded_postings(seg, q.term, 8)
+            st = self._seg_dev(seg)
+            vals, ids, hits = _hybrid_topk(
+                jnp.asarray(docs),
+                jnp.asarray(freqs),
+                st["doc_lens"],
+                vmat,
+                st["live"],
+                qvec,
+                idf,
+                self.avgdl,
+                self.k1,
+                self.b,
+                q.alpha,
+                k,
+                cosine,
+            )
+            total += int(hits)
+            per_seg.append((np.asarray(vals), np.asarray(ids) + seg.base_doc))
+        ids, scores = self._merge(per_seg, k)
+        return TopDocs(total, ids, scores)

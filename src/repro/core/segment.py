@@ -17,6 +17,7 @@ Array layout (all numpy on host; `.device()` views as jnp for the data plane):
   doc_lens          (n_docs,)    int32   tokens per doc (BM25 length norm)
   live              (n_docs,)    bool    deletion bitmap (False = deleted)
   doc_values[name]  (n_docs,)    int32/float32 columnar doc values
+  doc_values[_vec]  (n_docs, d)  float32 dense vector column (fixed dim d)
 """
 
 from __future__ import annotations
@@ -238,11 +239,13 @@ def merge_segments_reference(
     new_dv: Dict[str, List[np.ndarray]] = {}
     # dv keys may differ across members (each flush pads only the keys it
     # saw): members missing a key contribute zeros, like flush does — NOT
-    # nothing, which would leave the merged column shorter than n_docs
-    dv_dtypes: Dict[str, np.dtype] = {}
+    # nothing, which would leave the merged column shorter than n_docs.
+    # Zero rows keep the column's trailing shape (dense vector columns are
+    # (n_docs, dim), not 1-D), so the fill tracks dtype AND tail shape.
+    dv_specs: Dict[str, tuple] = {}
     for seg in segments:
         for k, v in seg.doc_values.items():
-            dv_dtypes.setdefault(k, v.dtype)
+            dv_specs.setdefault(k, (v.dtype, v.shape[1:]))
     cursor = 0
     for seg in segments:
         keep = seg.live
@@ -252,10 +255,11 @@ def merge_segments_reference(
         cursor += len(kept)
         maps.append(m)
         new_doc_lens.append(seg.doc_lens[kept])
-        for k, dt in dv_dtypes.items():
+        for k, (dt, tail) in dv_specs.items():
             v = seg.doc_values.get(k)
             new_dv.setdefault(k, []).append(
-                v[kept] if v is not None else np.zeros(len(kept), dtype=dt)
+                v[kept] if v is not None
+                else np.zeros((len(kept),) + tail, dtype=dt)
             )
 
     buffer: Dict[int, List] = {}
@@ -438,17 +442,20 @@ def merge_segments(name: str, base_doc: int, segments: Sequence[Segment]) -> Seg
     doc_lens = np.concatenate([s.doc_lens for s in segments])[live_all]
     # dv keys may differ across members (each flush pads only the keys it
     # saw): members missing a key contribute zeros, keeping every merged
-    # column exactly n_docs long (same rule as the reference merge)
-    dv_dtypes: Dict[str, np.dtype] = {}
+    # column exactly n_docs long (same rule as the reference merge); the
+    # zero fill carries the column's trailing shape so (n_docs, dim) dense
+    # vector columns merge just like 1-D scalars
+    dv_specs: Dict[str, tuple] = {}
     for s in segments:
         for k, v in s.doc_values.items():
-            dv_dtypes.setdefault(k, v.dtype)
+            dv_specs.setdefault(k, (v.dtype, v.shape[1:]))
     new_dv: Dict[str, List[np.ndarray]] = {}
     for s in segments:
-        for k, dt in dv_dtypes.items():
+        for k, (dt, tail) in dv_specs.items():
             v = s.doc_values.get(k)
             new_dv.setdefault(k, []).append(
-                v[s.live] if v is not None else np.zeros(int(s.live.sum()), dtype=dt)
+                v[s.live] if v is not None
+                else np.zeros((int(s.live.sum()),) + tail, dtype=dt)
             )
     dv = {k: np.concatenate(v) for k, v in new_dv.items()}
 

@@ -66,6 +66,14 @@ from repro.core.segment import (
 # external-id watermark from replayed batches
 EXT_ID_FIELD = "_extid"
 
+# reserved doc-values key carrying a document's dense vector (fixed-dim
+# float32).  It rides the ordinary ``doc_values`` dict through every ingest
+# surface (engine, sharded router, WAL) but is stored columnar: the buffer
+# keeps flat vector spans, the WAL logs them as column slices, and flush
+# densifies them into one (n_docs, dim) float32 doc-values matrix that the
+# byte path packs into the segment's single contiguous heap extent
+VECTOR_FIELD = "_vec"
+
 
 class IndexWriter:
     def __init__(
@@ -273,6 +281,9 @@ class IndexWriter:
             self._live,
             deletes=list(self._buf_deletes),
             dv={k: (v, len(v)) for k, v in self._buf_dv.items()},
+            # trimmed views are stable point-in-time slices: later appends
+            # either write past the view or reallocate the backing array
+            vec=(self._buf.vector_columns() if self._buf.vec_dim else None),
             generation=self._live_gen,
         )
         # loan ledger: _detach_live may only recycle the allocations once
@@ -354,6 +365,11 @@ class IndexWriter:
                     self._append_dv(int(dloc), key, float(val))
                     if key == EXT_ID_FIELD:
                         self.replay_max_ext = max(self.replay_max_ext, int(val))
+                vdim = int(meta.get("vec_dim", 0))
+                if vdim:
+                    self._ram_bytes += self._buf.extend_raw_vectors(
+                        arrays["vec"], arrays["vec_doc"], vdim
+                    )
                 # replaying the same batches in the same per-batch grouping
                 # rebuilds the live index bit-identically (block layout and
                 # all); no root publish here — the next ack barrier covers it
@@ -419,6 +435,7 @@ class IndexWriter:
             return gids
         d0 = len(self._buf_doc_lens)
         n0, p0 = len(self._buf), self._buf.n_positions
+        v0, c0 = self._buf.vec_doc.n, self._buf.vec.n
         dv_log: List[Tuple[str, int, float]] = []
         gids: List[int] = []
         for fields, dv in docs:
@@ -426,12 +443,13 @@ class IndexWriter:
             gids.append(self._append_document(fields, dv))
             if dv:
                 for k, v in dv.items():
-                    dv_log.append((k, local, v))
+                    if k != VECTOR_FIELD:  # vectors ride their own columns
+                        dv_log.append((k, local, v))
         # live index first: its root block must be stored before the ack
         # barrier (inside _wal_append_batch) publishes it — search-at-ack
         # rides the batch's ONE barrier, adding zero of its own
         live_root = self._live_append(d0, n0, p0)
-        self._wal_append_batch(d0, n0, p0, dv_log, live_root=live_root)
+        self._wal_append_batch(d0, n0, p0, v0, c0, dv_log, live_root=live_root)
         # the autoflush check runs per batch, after the ack: a WAL record
         # must describe one contiguous run of the buffer it was logged into
         self._maybe_autoflush()
@@ -466,7 +484,10 @@ class IndexWriter:
         self._ram_bytes += 8
         if doc_values:
             for k, val in doc_values.items():
-                self._append_dv(local, k, val)
+                if k == VECTOR_FIELD:
+                    self._ram_bytes += self._buf.append_vector(local, val)
+                else:
+                    self._append_dv(local, k, val)
         return self._infos.total_docs + local
 
     def _append_dv(self, local: int, key: str, val) -> None:
@@ -492,6 +513,8 @@ class IndexWriter:
         d0: int,
         n0: int,
         p0: int,
+        v0: int,
+        c0: int,
         dv_log: List[Tuple[str, int, float]],
         live_root: Optional[int] = None,
     ) -> None:
@@ -500,6 +523,8 @@ class IndexWriter:
         The record carries the exact column slices the batch appended —
         ``pos_offset`` values are absolute, so replaying records in order
         into an empty buffer reconstructs every column bit-identically.
+        Dense vectors ride the same record as their own column slices
+        (flat float32 components + per-span doc ids, dim in the meta).
         """
         th, dl, fr, po, ps = self._buf.columns()
         keys: List[str] = []
@@ -514,19 +539,26 @@ class IndexWriter:
             dv_key[i] = key_of[k]
             dv_doc[i] = local
             dv_val[i] = v
+        meta = {"kind": "batch", "base": d0, "dv_keys": keys}
+        arrays = {
+            "term_hash": th[n0:],
+            "doc_local": dl[n0:],
+            "freq": fr[n0:],
+            "pos_offset": po[n0:],
+            "positions": ps[p0:],
+            "doc_lens": np.asarray(self._buf_doc_lens[d0:], dtype=np.int64),
+            "dv_key": dv_key,
+            "dv_doc": dv_doc,
+            "dv_val": dv_val,
+        }
+        if self._buf.vec_dim:
+            vc, vd, dim = self._buf.vector_columns()
+            meta["vec_dim"] = dim
+            arrays["vec"] = vc[c0:]
+            arrays["vec_doc"] = vd[v0:]
         self._wal_last_seq = self.directory.wal_append(
-            {"kind": "batch", "base": d0, "dv_keys": keys},
-            {
-                "term_hash": th[n0:],
-                "doc_local": dl[n0:],
-                "freq": fr[n0:],
-                "pos_offset": po[n0:],
-                "positions": ps[p0:],
-                "doc_lens": np.asarray(self._buf_doc_lens[d0:], dtype=np.int64),
-                "dv_key": dv_key,
-                "dv_doc": dv_doc,
-                "dv_val": dv_val,
-            },
+            meta,
+            arrays,
             live_root=live_root,
         )
         self.wal_stats["appends"] += 1
@@ -613,6 +645,9 @@ class IndexWriter:
             k: np.asarray(v + [0] * (n_docs - len(v)), dtype=np.int32)
             for k, v in self._buf_dv.items()
         }
+        vmat = self._buf.vector_matrix(n_docs)
+        if vmat is not None:
+            dv[VECTOR_FIELD] = vmat
         if self.use_reference_ingest:
             live = np.ones(n_docs, dtype=bool)
             for th, watermark in self._buf_deletes:

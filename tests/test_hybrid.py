@@ -1,0 +1,218 @@
+"""Hybrid BM25 ⊕ vector retrieval: fixed-normalization fusion parity.
+
+``HybridQuery`` fuses a BM25 term score s and a vector similarity c as
+``alpha * s/(s+1) + (1-alpha) * vnorm(c)`` with vnorm fixed per metric
+(cosine: (c+1)/2; dot: c/(1+|c|)).  Both transforms are monotone and
+result-set independent — NO per-query min/max rescaling — which is what
+makes fusion commute with sharding: every path below must reproduce the
+sequential oracle bit-for-bit, on every directory kind.
+
+Pinned paths: vmapped batch executors, fused jnp selection, the Pallas
+``hybrid_topk`` kernel (XLA-scattered dense BM25 handed to the kernel),
+2-shard fan-out, and the search-at-ack live tail.  Alpha extremes pin the
+blend's ends: alpha=1 ranks exactly like the normalized term score,
+alpha=0 exactly like the normalized similarity.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import SearchEngine
+from repro.core.query import fused
+from repro.core.search import HybridQuery, TermQuery, VectorQuery
+from repro.core.sharded import ShardedEngine
+from repro.core.writer import VECTOR_FIELD
+
+pytestmark = pytest.mark.vector
+
+KINDS = ["ram", "fs-ssd", "byte-pmem"]
+DIM = 24
+N_DOCS = 260
+
+
+def vec_corpus(n=N_DOCS, dim=DIM, seed=7):
+    rng = np.random.default_rng(seed)
+    docs = []
+    for i in range(n):
+        body = " ".join(f"w{rng.integers(0, 40)}" for _ in range(12))
+        dv = {"month": float(i % 12)}
+        if i % 7 != 3:  # vectorless docs rank purely on the zero-row vnorm
+            dv[VECTOR_FIELD] = rng.standard_normal(dim).astype(np.float32)
+        docs.append(({"body": body}, dv))
+    return docs
+
+
+def hybrid_queries(dim=DIM, seed=13):
+    rng = np.random.default_rng(seed)
+    qs = []
+    for metric in ("dot", "cosine"):
+        for alpha in (0.0, 0.3, 0.7, 1.0):
+            v = tuple(float(x) for x in rng.standard_normal(dim))
+            qs.append(
+                HybridQuery(
+                    TermQuery("body", "w7"),
+                    VectorQuery(v, metric=metric),
+                    alpha=alpha,
+                )
+            )
+    # an absent term: the BM25 side contributes 0 everywhere
+    qs.append(
+        HybridQuery(
+            TermQuery("body", "zzznope"),
+            VectorQuery(tuple(float(x) for x in rng.standard_normal(dim))),
+        )
+    )
+    return qs
+
+
+def build(kind, path, use_pallas=False, n_shards=0):
+    p = str(path) if path else None
+    if n_shards:
+        eng = ShardedEngine(
+            kind, path=p, n_shards=n_shards, use_pallas=use_pallas,
+            parallel=False,
+        )
+    else:
+        eng = SearchEngine(kind, path=p, use_pallas=use_pallas)
+    for i, (fields, dv) in enumerate(vec_corpus()):
+        eng.add(fields, dv)
+        if (i + 1) % 90 == 0:
+            eng.flush()
+    eng.delete("body", "w5")
+    eng.reopen()
+    return eng
+
+
+def assert_identical(a, b, ctx=""):
+    assert a.total_hits == b.total_hits, ctx
+    np.testing.assert_array_equal(a.doc_ids, b.doc_ids, err_msg=ctx)
+    np.testing.assert_array_equal(a.scores, b.scores, err_msg=ctx)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_batch_matches_single_oracle(kind, tmp_path):
+    eng = build(kind, None if kind == "ram" else tmp_path / "e")
+    qs = hybrid_queries()
+    for q, g in zip(qs, eng.search_batch(qs, k=10)):
+        assert_identical(g, eng.searcher.search_single(q, k=10), repr(q))
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_lone_query_batch_matches_oracle(use_pallas, monkeypatch):
+    """A 1-query hybrid group pads to B=2 (``bucket_batch_min2``): XLA
+    compiles the squeezed B=1 vmapped graph with different blend rounding
+    than every B >= 2 graph — regression pin for the floor."""
+    monkeypatch.delenv("REPRO_FUSED_KERNEL", raising=False)
+    ref = build("ram", None)
+    eng = build("ram", None, use_pallas) if use_pallas else ref
+    for q in hybrid_queries()[:6]:
+        assert_identical(
+            eng.search_batch([q], k=10)[0],
+            ref.searcher.search_single(q, k=10),
+            repr(q),
+        )
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_fused_jnp_matches_oracle(kind, tmp_path, monkeypatch):
+    monkeypatch.delenv("REPRO_FUSED_KERNEL", raising=False)
+    ref = build(kind, None if kind == "ram" else tmp_path / "ref")
+    fe = build(kind, None if kind == "ram" else tmp_path / "fe", True)
+    qs = hybrid_queries()
+    for q, g, v in zip(qs, fe.search_batch(qs, k=10), ref.search_batch(qs, k=10)):
+        assert_identical(g, v, repr(q))
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_fused_kernel_matches_oracle(kind, tmp_path, monkeypatch):
+    """Force the Pallas hybrid_topk kernel (interpret mode on CPU)."""
+    monkeypatch.setenv("REPRO_FUSED_KERNEL", "1")
+    assert fused.kernel_enabled(10)
+    ref = build(kind, None if kind == "ram" else tmp_path / "ref")
+    fe = build(kind, None if kind == "ram" else tmp_path / "fe", True)
+    qs = hybrid_queries()
+    for q, g, v in zip(qs, fe.search_batch(qs, k=10), ref.search_batch(qs, k=10)):
+        assert_identical(g, v, repr(q))
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_sharded_matches_unsharded(use_pallas, tmp_path):
+    """Fixed normalizations commute with sharding: 2-shard fan-out merges
+    to the unsharded ranking bit-for-bit (the design reason hybrid uses
+    result-set-independent transforms instead of min/max rescaling)."""
+    ref = build("ram", None, use_pallas)
+    sh = build("ram", None, use_pallas, n_shards=2)
+    qs = hybrid_queries()
+    for q, a, b in zip(qs, ref.search_batch(qs, k=10), sh.search_batch(qs, k=10)):
+        assert_identical(a, b, repr(q))
+
+
+def test_live_tail_matches_flush():
+    """Search-at-ack covers hybrid: ack-time fusion over the buffered tail
+    == flush-then-search, bit-identically."""
+    docs = vec_corpus()
+    eng = SearchEngine("ram")
+    for fields, dv in docs[:180]:
+        eng.add(fields, dv)
+    eng.flush()
+    eng.commit()
+    for fields, dv in docs[180:]:
+        eng.add(fields, dv)
+    eng.reopen()
+    qs = hybrid_queries()
+    live = eng.search_batch(qs, k=12)
+    eng.flush()
+    eng.reopen()
+    flushed = eng.search_batch(qs, k=12)
+    for q, a, b in zip(qs, live, flushed):
+        assert_identical(a, b, repr(q))
+
+
+def test_alpha_extremes_pin_the_blend():
+    """alpha=0 ranks exactly like the vector family; alpha=1 like the
+    normalized term score (same doc order as the plain TermQuery among the
+    term's matches)."""
+    eng = build("ram", None)
+    rng = np.random.default_rng(3)
+    v = tuple(float(x) for x in rng.standard_normal(DIM))
+    vq = VectorQuery(v, metric="cosine")
+    h0 = eng.search(HybridQuery(TermQuery("body", "w7"), vq, alpha=0.0), k=10)
+    pure = eng.search(vq, k=10)
+    np.testing.assert_array_equal(h0.doc_ids, pure.doc_ids)
+    # same order; scores related by the fixed monotone map (c+1)/2
+    np.testing.assert_allclose(
+        np.asarray(h0.scores), (np.asarray(pure.scores) + 1.0) * 0.5,
+        rtol=1e-6,
+    )
+    h1 = eng.search(HybridQuery(TermQuery("body", "w7"), vq, alpha=1.0), k=10)
+    tq = eng.search(TermQuery("body", "w7"), k=10)
+    # the term's matches lead (tnorm > 0) in the same relative order
+    lead = [d for d in h1.doc_ids if d in set(np.asarray(tq.doc_ids).tolist())]
+    np.testing.assert_array_equal(
+        lead, [d for d in tq.doc_ids if d in set(lead)]
+    )
+
+
+def test_vectorless_segments_contribute_nothing():
+    """A segment with no ``_vec`` column is skipped by the hybrid family —
+    its docs neither match nor count toward total_hits."""
+    eng = SearchEngine("ram")
+    for fields, dv in vec_corpus(80):
+        dv.pop(VECTOR_FIELD, None)
+        eng.add(fields, dv)
+    eng.flush()  # segment 1: vectorless
+    vec_docs = vec_corpus(80, seed=9)
+    n_vec = 0
+    for fields, dv in vec_docs:
+        eng.add(fields, dv)
+        n_vec += 1
+    eng.flush()  # segment 2: vectored
+    eng.reopen()
+    rng = np.random.default_rng(5)
+    q = HybridQuery(
+        TermQuery("body", "w7"),
+        VectorQuery(tuple(float(x) for x in rng.standard_normal(DIM))),
+    )
+    td = eng.search(q, k=200)
+    assert td.total_hits == n_vec
+    assert np.asarray(td.doc_ids).min() >= 80  # no vectorless-segment docs

@@ -1,0 +1,191 @@
+"""Hypothesis properties: dense vectors under durability + compaction.
+
+Two invariants the tentpole must hold under arbitrary schedules:
+
+  * torn WAL writes — a crash may tear the in-flight (un-acked) record at
+    ANY byte; recovery must rebuild exactly the fully-acked batches, and
+    the recovered index must answer vector + hybrid queries BIT-identically
+    to a never-crashed writer fed only the acked prefix (the ``_vec``
+    columns replay through ``extend_raw_vectors`` into the same block
+    layout);
+
+  * merge with deletes — however flushes slice the corpus and whichever
+    docs die, a tiered merge must keep every surviving doc's vector row
+    attached to its own identity: row j of the merged ``_vec`` column is
+    exactly the vector indexed by row j's doc-number column, never a
+    neighbour's (off-by-one remaps are precisely what a prefix-sum
+    compaction bug produces).
+
+``hypothesis`` is an optional test dependency (same convention as
+``test_wal_torn.py``): the module skips itself when absent; the
+deterministic twins live in ``test_vector_search.py``.
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SearchEngine
+from repro.core.search import HybridQuery, TermQuery, VectorQuery
+from repro.core.segment import merge_segments
+from repro.core.writer import VECTOR_FIELD
+
+pytestmark = pytest.mark.vector
+
+DIM = 8
+TOKENS = [f"w{i}" for i in range(10)]
+
+
+def _vec_of(n: int) -> np.ndarray:
+    """Deterministic per-doc vector: recognisable, no two docs equal."""
+    base = np.arange(DIM, dtype=np.float32)
+    return (base + np.float32(n) * 0.25 + np.float32((n % 5) - 2)).astype(
+        np.float32
+    )
+
+
+def _docs(sizes):
+    """Batches from drawn sizes; doc n carries token soup + vector(n)
+    (every 6th doc vectorless, so zero rows ride the schedules too)."""
+    out = []
+    n = 0
+    for size in sizes:
+        batch = []
+        for _ in range(size):
+            toks = " ".join(
+                TOKENS[(n + j) % len(TOKENS)] for j in range(1 + n % 4)
+            )
+            dv = {"month": float(n % 12), "docno": float(n)}
+            if n % 6 != 4:
+                dv[VECTOR_FIELD] = _vec_of(n)
+            batch.append(({"body": f"{toks} common"}, dv))
+            n += 1
+        out.append(batch)
+    return out
+
+
+def _tear(directory, frac):
+    """Truncate the heap between the committed watermark and the tail,
+    zero-filling back to size (the only region a power loss can tear)."""
+    heap = directory.heap
+    lo, hi = heap.committed, max(heap.tail, heap.committed)
+    cut = int(lo + frac * (hi - lo))
+    cap = heap.capacity
+    heap.close()
+    with open(heap.path, "r+b") as f:
+        f.truncate(cut)
+        f.truncate(cap)
+
+
+def _inflight_batch(writer, batch):
+    """Issue one more batch's stores WITHOUT the ack barrier — the state a
+    mid-batch crash tears (vector columns included)."""
+    w = writer
+    d0, n0, p0 = len(w._buf_doc_lens), len(w._buf), w._buf.n_positions
+    v0, c0 = w._buf.vec_doc.n, w._buf.vec.n
+    for fields, dv in batch:
+        w._append_document(fields, dv)
+    th, dl, fr, po, ps = w._buf.columns()
+    meta = {"kind": "batch", "base": d0, "dv_keys": []}
+    arrays = {
+        "term_hash": th[n0:], "doc_local": dl[n0:], "freq": fr[n0:],
+        "pos_offset": po[n0:], "positions": ps[p0:],
+        "doc_lens": np.asarray(w._buf_doc_lens[d0:], dtype=np.int64),
+        "dv_key": np.empty(0, np.int32),
+        "dv_doc": np.empty(0, np.int32),
+        "dv_val": np.empty(0, np.float64),
+    }
+    if w._buf.vec_dim:
+        vc, vd, dim = w._buf.vector_columns()
+        meta["vec_dim"] = int(dim)
+        arrays["vec"] = np.asarray(vc[c0:])
+        arrays["vec_doc"] = np.asarray(vd[v0:])
+    w.directory._wal.append(meta, arrays, durable=False)
+
+
+def _probe_queries():
+    qs = [
+        VectorQuery(tuple(float(x) for x in _vec_of(2)), metric="dot"),
+        VectorQuery(tuple(float(x) for x in _vec_of(7)), metric="cosine"),
+        HybridQuery(
+            TermQuery("body", TOKENS[1]),
+            VectorQuery(tuple(float(x) for x in _vec_of(3)), metric="cosine"),
+            alpha=0.4,
+        ),
+    ]
+    return qs
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    sizes=st.lists(st.integers(1, 8), min_size=1, max_size=4),
+    inflight=st.integers(1, 6),
+    frac=st.floats(0.0, 1.0),
+)
+def test_torn_write_recovers_acked_vectors(tmp_path_factory, sizes, inflight, frac):
+    tmp = tmp_path_factory.mktemp("vec-torn")
+    eng = SearchEngine("byte-pmem", str(tmp / "d"), use_wal=True)
+    acked = _docs(sizes)
+    for b in acked:
+        eng.add_documents(b)
+    _inflight_batch(eng.writer, _docs([inflight])[0])
+    path = eng.directory.path
+    _tear(eng.directory, frac)
+
+    rec = SearchEngine("byte-pmem", path, use_wal=True)
+    n_acked = sum(sizes)
+    assert rec.writer.buffered_docs == n_acked  # whole batches, none extra
+    rec.reopen()
+    ref = SearchEngine("ram")
+    for b in acked:
+        ref.add_documents(b)
+    ref.reopen()
+    k = max(n_acked, 1)
+    for q in _probe_queries():
+        ta = ref.search(q, k=k)
+        tb = rec.search(q, k=k)
+        assert ta.total_hits == tb.total_hits, repr(q)
+        np.testing.assert_array_equal(ta.doc_ids, tb.doc_ids, err_msg=repr(q))
+        np.testing.assert_array_equal(ta.scores, tb.scores, err_msg=repr(q))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    sizes=st.lists(st.integers(1, 30), min_size=2, max_size=5),
+    dead_mod=st.integers(2, 7),
+    dead_off=st.integers(0, 6),
+)
+def test_merge_never_mixes_rows_across_ids(sizes, dead_mod, dead_off):
+    """After merging arbitrarily-sliced segments with an arbitrary delete
+    pattern, every merged row's vector is ITS OWN doc's vector."""
+    eng = SearchEngine("ram")
+    n = 0
+    for size in sizes:
+        for _ in range(size):
+            toks = " ".join(
+                TOKENS[(n + j) % len(TOKENS)] for j in range(1 + n % 4)
+            )
+            dv = {"docno": float(n)}
+            if n % 6 != 4:
+                dv[VECTOR_FIELD] = _vec_of(n)
+            eng.add({"body": f"{toks} common"}, dv)
+            n += 1
+        eng.flush()
+    # kill docno % dead_mod == dead_off via per-segment live bitmaps
+    segs = []
+    for seg in eng.writer.segments:
+        docno = seg.doc_values["docno"].astype(np.int64)
+        segs.append(seg.with_live(seg.live & ~((docno % dead_mod) == dead_off)))
+    merged = merge_segments("m", 0, segs)
+    docno = merged.doc_values["docno"].astype(np.int64)
+    vecs = merged.doc_values[VECTOR_FIELD]
+    assert vecs.shape == (len(docno), DIM)
+    for j in range(len(docno)):
+        d = int(docno[j])
+        assert d % dead_mod != dead_off  # dead docs are compacted away
+        expect = _vec_of(d) if d % 6 != 4 else np.zeros(DIM, np.float32)
+        np.testing.assert_array_equal(
+            vecs[j], expect, err_msg=f"row {j} docno {d}"
+        )

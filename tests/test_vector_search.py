@@ -1,0 +1,260 @@
+"""Dense-vector retrieval: the brute-force oracle pins every other path.
+
+``VectorQuery`` scores a segment's ``_vec`` doc-values column (dot or
+cosine) and the sequential oracle (``search_single``: jnp trailing-axis
+reduce + heapq merge) defines the family bit-for-bit.  Everything else —
+the vmapped batch executors, the fused jnp selection path, the Pallas
+``vector_topk`` kernel, the sharded(2) fan-out, and the search-at-ack live
+tail — must return bit-identical top-k ids AND scores on every directory
+kind, including deleted docs, vectorless docs (zero rows: dot 0, cosine
+guarded to 0), and multi-segment indexes.
+
+The byte path's one-barrier commit invariant must survive vectors riding
+the columnar buffer: a commit whose segments carry ``_vec`` columns still
+pays exactly ONE durability barrier.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import SearchEngine
+from repro.core.query import fused
+from repro.core.search import TermQuery, VectorQuery
+from repro.core.sharded import ShardedEngine
+from repro.core.writer import VECTOR_FIELD
+
+pytestmark = pytest.mark.vector
+
+KINDS = ["ram", "fs-ssd", "byte-pmem"]
+DIM = 24
+N_DOCS = 260
+
+
+def vec_corpus(n=N_DOCS, dim=DIM, seed=7):
+    """Token soup + a ``_vec`` doc value on most docs (every 7th doc is
+    vectorless: its zero row must score 0 under both metrics, not NaN)."""
+    rng = np.random.default_rng(seed)
+    docs = []
+    for i in range(n):
+        body = " ".join(f"w{rng.integers(0, 40)}" for _ in range(12))
+        dv = {"month": float(i % 12)}
+        if i % 7 != 3:
+            dv[VECTOR_FIELD] = rng.standard_normal(dim).astype(np.float32)
+        docs.append(({"body": body}, dv))
+    return docs
+
+
+def queries(dim=DIM, seed=11, per_metric=3):
+    rng = np.random.default_rng(seed)
+    qs = []
+    for metric in ("dot", "cosine"):
+        for _ in range(per_metric):
+            v = tuple(float(x) for x in rng.standard_normal(dim))
+            qs.append(VectorQuery(v, metric=metric))
+    return qs
+
+
+def build(kind, path, use_pallas=False, n_shards=0, backend=None):
+    p = str(path) if path else None
+    if n_shards:
+        kw = dict(n_shards=n_shards, use_pallas=use_pallas)
+        if backend is None:
+            kw["parallel"] = False
+        else:
+            kw["backend"] = backend
+        eng = ShardedEngine(kind, path=p, **kw)
+    else:
+        eng = SearchEngine(kind, path=p, use_pallas=use_pallas)
+    for i, (fields, dv) in enumerate(vec_corpus()):
+        eng.add(fields, dv)
+        if (i + 1) % 90 == 0:
+            eng.flush()
+    eng.delete("body", "w5")
+    eng.reopen()
+    return eng
+
+
+def assert_identical(a, b, ctx=""):
+    assert a.total_hits == b.total_hits, ctx
+    np.testing.assert_array_equal(a.doc_ids, b.doc_ids, err_msg=ctx)
+    np.testing.assert_array_equal(a.scores, b.scores, err_msg=ctx)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_batch_matches_single_oracle(kind, tmp_path):
+    eng = build(kind, None if kind == "ram" else tmp_path / "e")
+    qs = queries()
+    got = eng.search_batch(qs, k=10)
+    for q, g in zip(qs, got):
+        assert_identical(g, eng.searcher.search_single(q, k=10), repr(q))
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_fused_jnp_matches_oracle(kind, tmp_path, monkeypatch):
+    monkeypatch.delenv("REPRO_FUSED_KERNEL", raising=False)
+    ref = build(kind, None if kind == "ram" else tmp_path / "ref")
+    fe = build(kind, None if kind == "ram" else tmp_path / "fe", True)
+    qs = queries()
+    for q, g, v in zip(qs, fe.search_batch(qs, k=10), ref.search_batch(qs, k=10)):
+        assert_identical(g, v, repr(q))
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_fused_kernel_matches_oracle(kind, tmp_path, monkeypatch):
+    """Force the Pallas vector_topk kernel (interpret mode on CPU)."""
+    monkeypatch.setenv("REPRO_FUSED_KERNEL", "1")
+    assert fused.kernel_enabled(10)
+    ref = build(kind, None if kind == "ram" else tmp_path / "ref")
+    fe = build(kind, None if kind == "ram" else tmp_path / "fe", True)
+    qs = queries()
+    for q, g, v in zip(qs, fe.search_batch(qs, k=10), ref.search_batch(qs, k=10)):
+        assert_identical(g, v, repr(q))
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_sharded_matches_unsharded(kind, use_pallas, tmp_path):
+    """2-shard fan-out == single index: the fixed similarity is
+    shard-independent, so the cross-shard lexsort merge reproduces the
+    unsharded ranking bit-for-bit (external id == add order here)."""
+    ref = build(kind, None if kind == "ram" else tmp_path / "ref", use_pallas)
+    sh = build(
+        kind, None if kind == "ram" else tmp_path / "sh", use_pallas, n_shards=2
+    )
+    qs = queries()
+    for q, a, b in zip(qs, ref.search_batch(qs, k=10), sh.search_batch(qs, k=10)):
+        assert_identical(a, b, repr(q))
+
+
+@pytest.mark.parametrize("backend", ["threads", "processes"])
+def test_sharded_backends_match_unsharded(backend, tmp_path):
+    ref = build("ram", None)
+    sh = build("ram", None, n_shards=2, backend=backend)
+    try:
+        qs = queries()
+        for q, a, b in zip(
+            qs, ref.search_batch(qs, k=10), sh.search_batch(qs, k=10)
+        ):
+            assert_identical(a, b, repr(q))
+    finally:
+        sh.close()
+
+
+def test_live_tail_matches_flush(tmp_path):
+    """Search-at-ack: vector results over (committed ∪ buffered tail) are
+    bit-identical to flushing the tail first."""
+    docs = vec_corpus()
+    eng = SearchEngine("ram")
+    for fields, dv in docs[:180]:
+        eng.add(fields, dv)
+    eng.flush()
+    eng.commit()
+    for fields, dv in docs[180:]:
+        eng.add(fields, dv)
+    eng.reopen()
+    qs = queries()
+    live_b = eng.search_batch(qs, k=12)
+    live_s = [eng.searcher.search_single(q, k=12) for q in qs]
+    eng.flush()
+    eng.reopen()
+    flushed = eng.search_batch(qs, k=12)
+    for q, lb, ls, fl in zip(qs, live_b, live_s, flushed):
+        assert_identical(lb, fl, f"live batch vs flushed: {q!r}")
+        assert_identical(ls, fl, f"live single vs flushed: {q!r}")
+
+
+def test_wal_replay_matches_uncrashed(tmp_path):
+    """Acked vector batches survive a crash: replay == never-crashed."""
+    docs = vec_corpus(120)
+    eng = SearchEngine("byte-pmem", str(tmp_path / "d"), use_wal=True)
+    for i in range(0, len(docs), 30):
+        eng.add_documents(docs[i : i + 30])
+    rec = eng.crash_and_recover()
+    rec.reopen()
+    ref = SearchEngine("ram")
+    for i in range(0, len(docs), 30):
+        ref.add_documents(docs[i : i + 30])
+    ref.reopen()
+    qs = queries()
+    for q, a, b in zip(qs, ref.search_batch(qs, k=10), rec.search_batch(qs, k=10)):
+        assert_identical(a, b, repr(q))
+
+
+def test_byte_commit_with_vectors_is_one_barrier(tmp_path):
+    """The write-combining invariant survives the vector column: commit =
+    publish, exactly ONE durability barrier — segment bytes (postings AND
+    ``_vec`` rows) were stored long before, the barrier only fences the
+    root flip."""
+    eng = SearchEngine("byte-pmem", str(tmp_path / "d"))
+    docs = vec_corpus(150)
+    for fields, dv in docs[:70]:
+        eng.add(fields, dv)
+    eng.flush()
+    for fields, dv in docs[70:]:
+        eng.add(fields, dv)
+    eng.flush()  # two segments, both carrying _vec columns
+    b0 = eng.directory.heap.stats["barriers"]
+    eng.commit()
+    assert eng.directory.heap.stats["barriers"] - b0 == 1
+    eng.reopen()
+    got = eng.search(queries(per_metric=1)[0], k=5)
+    assert got.total_hits > 0
+
+
+def test_merge_preserves_vector_scores(tmp_path):
+    """Tiered merge with deletes: the merged ``_vec`` column is a live-row
+    compaction (bit-identical to the reference merge, rows following their
+    doc) and vector ranking is unchanged modulo the doc-id remap."""
+    from repro.core.search import Searcher
+    from repro.core.segment import merge_segments, merge_segments_reference
+
+    eng = SearchEngine("ram")
+    for i, (fields, dv) in enumerate(vec_corpus()):
+        dv["docno"] = float(i)
+        eng.add(fields, dv)
+        if (i + 1) % 60 == 0:
+            eng.flush()
+    eng.flush()  # no live tail: the merged Searcher must cover everything
+    eng.delete("body", "w7")
+    eng.reopen()
+    segs = list(eng.writer.segments)
+    merged = merge_segments("merged-all", 0, segs)
+    ref = merge_segments_reference("merged-all", 0, segs)
+    np.testing.assert_array_equal(
+        merged.doc_values[VECTOR_FIELD], ref.doc_values[VECTOR_FIELD]
+    )
+    expect = np.concatenate([s.doc_values[VECTOR_FIELD][s.live] for s in segs])
+    np.testing.assert_array_equal(merged.doc_values[VECTOR_FIELD], expect)
+    qs = queries()
+    before = eng.search_batch(qs, k=10)
+    ms = Searcher([merged])
+    for q, a in zip(qs, before):
+        b = ms.search_single(q, k=10)
+        assert a.total_hits == b.total_hits, repr(q)
+        np.testing.assert_array_equal(a.scores, b.scores, err_msg=repr(q))
+        # identity survives the remap: same docs, by their docno column
+        docno_a = np.concatenate(
+            [s.doc_values["docno"] for s in segs]
+        )[np.asarray(a.doc_ids)]
+        docno_b = merged.doc_values["docno"][np.asarray(b.doc_ids)]
+        np.testing.assert_array_equal(docno_a, docno_b, err_msg=repr(q))
+
+
+def test_vectorless_index_vector_query_is_empty():
+    """No segment carries ``_vec``: the family returns 0 hits, not NaN."""
+    eng = SearchEngine("ram")
+    for fields, dv in vec_corpus(60):
+        dv.pop(VECTOR_FIELD, None)
+        eng.add(fields, dv)
+    eng.reopen()
+    q = VectorQuery(tuple(1.0 for _ in range(DIM)))
+    for td in (eng.search(q, k=5), eng.search_batch([q], k=5)[0]):
+        assert td.total_hits == 0
+        assert len(td.doc_ids) == 0
+
+
+def test_dim_mismatch_rejected():
+    eng = SearchEngine("ram")
+    eng.add({"body": "w1"}, {VECTOR_FIELD: np.ones(8, np.float32)})
+    with pytest.raises(ValueError):
+        eng.add({"body": "w2"}, {VECTOR_FIELD: np.ones(9, np.float32)})

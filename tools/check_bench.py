@@ -22,6 +22,10 @@ The search-path trajectory is gated the same way against
   * ``roofline.term.roofline_frac``   — achieved fraction of measured membw
   * ``serve.coalesce_p99_speedup_ram``— coalesced vs sequential serving p99
   * ``serve.kinds.ram.achieved_qps_coalesced`` — frontend saturated QPS
+  * ``vector.*``                      — dense-vector qps/speedup/latency
+    rows (``vector_bench --smoke``), plus hard floors: batched fused
+    vector search >= 2x the brute per-query loop on ram at batch 32, and
+    the fused-vs-brute vector/hybrid parity bits exactly 1
 
 Ratio rows ("higher is better") regress when fresh < 0.75 * baseline;
 latency rows ("lower is better") when fresh > 1.25 * baseline.  A key
@@ -29,11 +33,13 @@ missing from the *baseline* is skipped (bootstrap: the first PR that adds
 a row commits its own baseline); a key missing from the *fresh* run fails.
 
 Timing floors deflake, floors do not loosen: when a search-side TIMING
-gate fails (nrt ack-to-visible, fused speedup, serve rows), the owning
-smoke is re-run up to twice more (best-of-3 overall) and the comparison
-repeated; every retry is announced in the CI step summary (RETRIED), and
-a floor that still fails after the retries fails the job.  ``--no-retry``
-disables the re-runs (for bisecting a genuinely regressed measurement).
+gate fails (nrt ack-to-visible, fused/vector speedups, serve rows), the
+smoke each gate/floor DECLARES as its re-measurer is re-run up to twice
+more (best-of-3 overall) and the comparison repeated; every retry is
+announced in the CI step summary (RETRIED), floors that decline to retry
+(parity bits, ``retry=None``) are announced as SKIPPED, and a floor that
+still fails after the retries fails the job.  ``--no-retry`` disables the
+re-runs (for bisecting a genuinely regressed measurement).
 
 CI wiring (ci.yml): the committed files are copied aside BEFORE the smoke
 steps overwrite them, then::
@@ -86,27 +92,49 @@ PARALLEL_FLOORS = [
     ("sharded_real_speedup.fs-ssd/processes", 1.0),
 ]
 
+# Deflake registry: every search-side gate/floor DECLARES the benchmarks
+# module whose ``run_smoke`` re-measures it (third tuple element; ``None``
+# marks a hard bit that never retries — parity either holds or the code is
+# wrong, best-of-3 cannot fix it).  ``SMOKE_PRESERVE`` lists, per module,
+# the sibling blocks its run_smoke would OVERWRITE rather than merge
+# (search_bench rewrites the whole payload; the others merge one block),
+# carried across a re-run by the retry harness.  A new bench participates
+# by declaring itself here — no retry-harness special case.
+SMOKE_PRESERVE = {
+    "search_bench": ("nrt", "serve", "vector"),
+    "nrt_bench": (),
+    "serve_bench": (),
+    "vector_bench": (),
+}
+
 # BENCH_search.json gates: the fusion win itself (hard-floored at 2.0x
 # inside run_smoke regardless of baseline drift), the per-family fused
-# per-query latencies, the term family's achieved roofline fraction, and
-# the search-at-ack rows (``nrt_bench --smoke``): ack-to-visible p50 per
-# directory kind must not regress >25% against the committed baseline.
+# per-query latencies, the term family's achieved roofline fraction, the
+# search-at-ack rows (``nrt_bench --smoke``), the serving front end, and
+# the dense-vector rows (``vector_bench --smoke``): none may regress >25%
+# against the committed baseline.
 SEARCH_GATES = [
-    ("fused_term_speedup_ram", "higher"),
-    ("families.TermBatch.lat_p50_ms", "lower"),
-    ("families.AndBatch.lat_p50_ms", "lower"),
-    ("families.SortBatch.lat_p50_ms", "lower"),
-    ("families.RangeBatch.lat_p50_ms", "lower"),
-    ("families.FacetBatch.lat_p50_ms", "lower"),
-    ("roofline.term.roofline_frac", "higher"),
-    ("nrt.nrt_ack_to_visible_us.ram", "lower"),
-    ("nrt.nrt_ack_to_visible_us.fs-ssd", "lower"),
-    ("nrt.nrt_ack_to_visible_us.byte-pmem", "lower"),
-    ("nrt.ack_speedup_vs_flush.ram", "higher"),
+    ("fused_term_speedup_ram", "higher", "search_bench"),
+    ("families.TermBatch.lat_p50_ms", "lower", "search_bench"),
+    ("families.AndBatch.lat_p50_ms", "lower", "search_bench"),
+    ("families.SortBatch.lat_p50_ms", "lower", "search_bench"),
+    ("families.RangeBatch.lat_p50_ms", "lower", "search_bench"),
+    ("families.FacetBatch.lat_p50_ms", "lower", "search_bench"),
+    ("roofline.term.roofline_frac", "higher", "search_bench"),
+    ("nrt.nrt_ack_to_visible_us.ram", "lower", "nrt_bench"),
+    ("nrt.nrt_ack_to_visible_us.fs-ssd", "lower", "nrt_bench"),
+    ("nrt.nrt_ack_to_visible_us.byte-pmem", "lower", "nrt_bench"),
+    ("nrt.ack_speedup_vs_flush.ram", "higher", "nrt_bench"),
     # closed-loop serving front end (serve_bench --smoke): the coalescing
     # win at the tail and the frontend's saturated throughput
-    ("serve.coalesce_p99_speedup_ram", "higher"),
-    ("serve.kinds.ram.achieved_qps_coalesced", "higher"),
+    ("serve.coalesce_p99_speedup_ram", "higher", "serve_bench"),
+    ("serve.kinds.ram.achieved_qps_coalesced", "higher", "serve_bench"),
+    # dense-vector + hybrid retrieval (vector_bench --smoke): brute oracle
+    # throughput, batched fused throughput, their ratio, hybrid latency
+    ("vector.brute_qps", "higher", "vector_bench"),
+    ("vector.kernel_qps", "higher", "vector_bench"),
+    ("vector.kernel_speedup_ram_b32", "higher", "vector_bench"),
+    ("vector.hybrid_lat_p50_ms", "lower", "vector_bench"),
 ]
 
 # Absolute HARD floors on the fresh search measurement (no baseline ratio,
@@ -118,8 +146,8 @@ SEARCH_GATES = [
 # or stale BENCH_search.json fails here even if the smoke step was
 # skipped).
 SEARCH_FLOORS = [
-    ("nrt.ack_speedup_vs_flush.ram", 10.0),
-    ("nrt.live_search_parity", 1.0),
+    ("nrt.ack_speedup_vs_flush.ram", 10.0, "nrt_bench"),
+    ("nrt.live_search_parity", 1.0, "nrt_bench"),
 ]
 
 # Serving-front-end hard floors (``serve_bench --smoke``), same convention:
@@ -128,20 +156,20 @@ SEARCH_FLOORS = [
 # bounded by the unshed control.  Guarded by the same bootstrap rule as the
 # nrt floors — a committed file that predates serve_bench only notes.
 SERVE_FLOORS = [
-    ("serve.coalesce_p99_speedup_ram", 1.0),
-    ("serve.overload_shed_ok", 1.0),
+    ("serve.coalesce_p99_speedup_ram", 1.0, "serve_bench"),
+    ("serve.overload_shed_ok", 1.0, "serve_bench"),
 ]
 
-# Which smoke re-measures which flaky timing key (the deflake retry): a
-# failing search-side key maps by prefix to the benchmarks module whose
-# run_smoke re-measures it.  ``preserve`` lists sibling blocks the module's
-# run_smoke would OVERWRITE rather than merge (search_bench rewrites the
-# whole payload), carried across the re-run by the retry harness.
-RETRY_SPECS = [
-    (("nrt.",), "nrt_bench", ()),
-    (("serve.",), "serve_bench", ()),
-    (("families.", "roofline.", "fused_term_speedup_ram"), "search_bench",
-     ("nrt", "serve")),
+# Dense-vector hard floors (``vector_bench --smoke``): batching the fused
+# vector executors must beat the brute per-query loop >=2x on ram at batch
+# 32 (a TIMING floor — retryable best-of-3), and both fused-vs-brute
+# parity bits must be exactly 1 (correctness bits — retry=None: a flaky
+# rerun must never launder a real bit-parity break).  Bootstrap-guarded
+# like the nrt/serve floors.
+VECTOR_FLOORS = [
+    ("vector.kernel_speedup_ram_b32", 2.0, "vector_bench"),
+    ("vector.vector_parity", 1.0, None),
+    ("vector.hybrid_parity", 1.0, None),
 ]
 
 
@@ -156,7 +184,8 @@ def lookup(payload: dict, dotted: str) -> Optional[float]:
 
 def check(baseline: dict, fresh: dict, gates=GATES) -> Tuple[list, list]:
     failures, notes = [], []
-    for key, direction in gates:
+    for g in gates:  # (key, direction) or (key, direction, retry_module)
+        key, direction = g[0], g[1]
         base = lookup(baseline, key)
         new = lookup(fresh, key)
         if new is None:
@@ -196,7 +225,8 @@ def check_search_floors(fresh: dict, floors=SEARCH_FLOORS) -> Tuple[list, list]:
     serving front end): unlike the ratio gates these never relax with a
     drifting baseline."""
     failures, notes = [], []
-    for key, floor in floors:
+    for fl in floors:  # (key, floor) or (key, floor, retry_module)
+        key, floor = fl[0], fl[1]
         new = lookup(fresh, key)
         if new is None:
             failures.append(f"{key}: missing from the fresh smoke run")
@@ -300,6 +330,7 @@ def _search_side(args) -> list:
         for block, floors, hint in (
             ("nrt", SEARCH_FLOORS, "benchmarks.nrt_bench --smoke"),
             ("serve", SERVE_FLOORS, "benchmarks.serve_bench --smoke"),
+            ("vector", VECTOR_FLOORS, "benchmarks.vector_bench --smoke"),
         ):
             if block not in fresh_search:
                 # bootstrap: the committed file predates this smoke
@@ -354,24 +385,48 @@ def _rerun_smoke(module: str, out_path: str, preserve: Tuple[str, ...]) -> bool:
     return proc.returncode == 0
 
 
+def _retry_module(key: str) -> Optional[str]:
+    """The smoke module a failing search-side key declared as its
+    re-measurer, or None when the key is a hard bit / unknown.  This IS
+    the retry registry — the declarations on the gates and floors — so a
+    new bench participates by declaring, not by editing the harness."""
+    for g in SEARCH_GATES:
+        if g[0] == key:
+            return g[2]
+    for floors in (SEARCH_FLOORS, SERVE_FLOORS, VECTOR_FLOORS):
+        for fl in floors:
+            if fl[0] == key:
+                return fl[2]
+    return None
+
+
 def _retry_flaky(args, failures: list) -> list:
-    """Best-of-3 deflake for the search-side TIMING floors: map each
-    failing key to the smoke that measures it, re-run those smokes, and
-    repeat the comparison — at most twice (3 measurements total).  Floors
-    never loosen; non-retryable failures (missing files, ingest rows) pass
-    through untouched.  Every retry is loud in the CI step summary: a
-    silently-deflaked floor would hide genuine jitter trends."""
+    """Best-of-3 deflake for the search-side TIMING floors: each failing
+    key names its own re-measuring smoke (the ``retry`` declaration on the
+    gate/floor); re-run those smokes and repeat the comparison — at most
+    twice (3 measurements total).  Floors never loosen; non-retryable
+    failures (missing files, ingest rows, parity bits declaring
+    ``retry=None``) pass through untouched.  Every retry — and every
+    failing key that declined to retry — is loud in the CI step summary:
+    a silently-deflaked floor would hide genuine jitter trends."""
     summary = []
     for attempt in (2, 3):
-        modules = []
+        modules: dict = {}  # module -> [failing keys], insertion-ordered
+        skipped = []
         for f_ in failures:
             key = f_.removeprefix("search: ").split(":", 1)[0]
-            for prefixes, module, preserve in RETRY_SPECS:
-                if key.startswith(prefixes) and module not in [m for m, _ in modules]:
-                    modules.append((module, preserve))
+            module = _retry_module(key)
+            if module is None:
+                skipped.append(key)
+                continue
+            modules.setdefault(module, []).append(key)
+        for key in skipped:
+            note = f"- SKIPPED retry for {key} (hard bit, retry=None)"
+            if note not in summary:
+                summary.append(note)
         if not modules:
             break  # nothing retryable failed
-        for module, preserve in modules:
+        for module, keys in modules.items():
             print(
                 f"check_bench: RETRY {attempt}/3 — re-running "
                 f"benchmarks.{module}.run_smoke (flaky timing floor)",
@@ -379,14 +434,9 @@ def _retry_flaky(args, failures: list) -> list:
             )
             summary.append(
                 f"- RETRIED benchmarks.{module} (attempt {attempt}/3): "
-                + "; ".join(
-                    f_ for f_ in failures
-                    if f_.removeprefix("search: ").startswith(
-                        tuple(p for spec in RETRY_SPECS if spec[1] == module
-                              for p in spec[0])
-                    )
-                )
+                + "; ".join(keys)
             )
+            preserve = SMOKE_PRESERVE.get(module, ())
             if not _rerun_smoke(module, args.fresh_search, preserve):
                 summary.append(f"- benchmarks.{module} re-run itself crashed")
         failures = _search_side(args)
